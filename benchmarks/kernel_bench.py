@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — the numbers calibrate
+the harness, not TPU performance; on TPU the same entry points compile via
+Mosaic).  Shapes chosen so ref vs kernel comparison stays tractable."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _time(fn, *args, repeats=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def kernels():
+    out = []
+    B, S, H, Hkv, D = 1, 256, 4, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)), jnp.float32)
+    us_k = _time(ops.flash_attention, q, k, v)
+    us_r = _time(ref.ref_flash_attention, q, k, v)
+    out.append(("kernel.flash_attention", us_k,
+                f"S={S};ref_us={us_r:.0f};interpret"))
+
+    C = 512
+    qd = jnp.asarray(RNG.standard_normal((B, 1, H, D)), jnp.float32)
+    kc = jnp.asarray(RNG.standard_normal((B, C, Hkv, D)), jnp.float32)
+    vc = jnp.asarray(RNG.standard_normal((B, C, Hkv, D)), jnp.float32)
+    sp = jnp.asarray(np.arange(C), jnp.int32)
+    us_k = _time(ops.decode_attention, qd, kc, vc, sp, jnp.int32(C - 1))
+    us_r = _time(ref.ref_decode_attention, qd, kc, vc, sp, C - 1)
+    out.append(("kernel.decode_attention", us_k,
+                f"C={C};ref_us={us_r:.0f};interpret"))
+
+    S2, H2, D2 = 128, 2, 32
+    r_ = jnp.asarray(RNG.standard_normal((B, S2, H2, D2)) * .5, jnp.float32)
+    k_ = jnp.asarray(RNG.standard_normal((B, S2, H2, D2)) * .5, jnp.float32)
+    v_ = jnp.asarray(RNG.standard_normal((B, S2, H2, D2)) * .5, jnp.float32)
+    w_ = jnp.asarray(RNG.uniform(.8, .999, (B, S2, H2, D2)), jnp.float32)
+    u_ = jnp.asarray(RNG.standard_normal((H2, D2)) * .5, jnp.float32)
+    s0 = jnp.zeros((B, H2, D2, D2), jnp.float32)
+    us_k = _time(ops.rwkv6_wkv, r_, k_, v_, w_, u_, s0)
+    us_r = _time(ref.ref_rwkv6_wkv, r_, k_, v_, w_, u_, s0)
+    out.append(("kernel.rwkv6_wkv", us_k,
+                f"S={S2};ref_us={us_r:.0f};interpret"))
+    return out

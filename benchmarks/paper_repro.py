@@ -1,0 +1,142 @@
+"""Paper-reproduction benchmarks — one per table/figure in the paper.
+
+  table1            §5.1 summary table (hit rate, tokens reused, speedups,
+                    output similarity, latencies)
+  latency_fig       §5.2 per-prompt baseline-vs-recycled latency
+  speedup_vs_depth  §5.5 S ≈ alpha * k/m — controlled prefix-fraction sweep
+                    and the fitted alpha
+
+Default model: reduced DialoGPT (CPU-friendly).  ``--full`` runs the paper's
+real 345M config (slow on 1 CPU core).  Magnitudes differ from the paper's
+T4 — the *claims* under test are the mechanism ones: 100% hit rate on the
+designed prompt set, identical greedy outputs, latency strictly improved by
+prefix skipping, and speedup growing with reuse fraction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.core import HashEmbedder
+from repro.core.metrics import RunMetrics, summarize_runs
+from repro.data.pipeline import paper_prompt_sets
+from repro.models import init_params
+from repro.serving import Engine
+
+
+def _engine(full: bool = False, max_new: int = 12) -> Engine:
+    cfg = get_config("dialogpt-medium")
+    if not full:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, max_new_tokens=max_new, block_size=16)
+
+
+def _two_phase(eng: Engine, prompts, repeats: int = 3):
+    """Warm both shapes, then best-of-N timing per method (paper uses single
+    runs on a GPU with no jit; best-of-N suppresses CPU scheduler noise)."""
+    rows_b, rows_r = [], []
+    for p in prompts:
+        eng.warmup(p, use_recycling=False)
+        eng.warmup(p)
+        best_b, best_r = None, None
+        for _ in range(repeats):
+            b = eng.generate(p, use_recycling=False)
+            r = eng.generate(p)
+            if best_b is None or b.latency_s < best_b.latency_s:
+                best_b = b
+            if best_r is None or r.latency_s < best_r.latency_s:
+                best_r = r
+        rows_b.append(RunMetrics(p, "baseline", best_b.latency_s,
+                                 best_b.prompt_tokens, best_b.gen_tokens,
+                                 output_text=best_b.text))
+        rows_r.append(RunMetrics(p, "recycled", best_r.latency_s,
+                                 best_r.prompt_tokens, best_r.gen_tokens,
+                                 best_r.reuse_depth, best_r.cache_hit,
+                                 best_r.prompt_similarity, best_r.mode,
+                                 best_r.text))
+    return rows_b, rows_r
+
+
+def table1(full: bool = False):
+    """Paper Table 1 (§5.1).  Returns CSV rows (name, us_per_call, derived)."""
+    eng = _engine(full)
+    cache_prompts, test_prompts = paper_prompt_sets()
+    eng.precache(cache_prompts)
+    rows_b, rows_r = _two_phase(eng, test_prompts)
+    t = summarize_runs(rows_b, rows_r, embedder=HashEmbedder())
+    out = []
+    out.append(("table1.cache_hits", 0.0,
+                f"{t['cache_hits']}/{t['total_prompts']}"))
+    out.append(("table1.total_tokens_reused", 0.0,
+                str(t["total_tokens_reused"])))
+    out.append(("table1.avg_speedup_pct", 0.0,
+                f"{t['avg_speedup_pct']:.2f}"))
+    out.append(("table1.avg_output_similarity", 0.0,
+                f"{t['avg_output_similarity']:.3f}"))
+    out.append(("table1.avg_prompt_similarity", 0.0,
+                f"{t['avg_prompt_similarity']:.3f}"))
+    out.append(("table1.latency_baseline_avg", t["latency_baseline_avg_s"] * 1e6,
+                f"{t['latency_baseline_avg_s']:.4f}s"))
+    out.append(("table1.latency_recycled_avg", t["latency_recycled_avg_s"] * 1e6,
+                f"{t['latency_recycled_avg_s']:.4f}s"))
+    out.append(("table1.high_similarity_prompts", 0.0,
+                f"{t['high_similarity_prompts']}/{t['total_prompts']}"))
+    return out, (rows_b, rows_r)
+
+
+def latency_fig(rows=None, full: bool = False):
+    """§5.2 per-prompt latency pairs."""
+    if rows is None:
+        _, rows = table1(full)
+    rows_b, rows_r = rows
+    out = []
+    for b, r in zip(rows_b, rows_r):
+        sp = (b.latency_s - r.latency_s) / b.latency_s * 100
+        out.append((f"latency.prompt{rows_b.index(b)}",
+                    r.latency_s * 1e6,
+                    f"base={b.latency_s*1e3:.1f}ms;rec={r.latency_s*1e3:.1f}ms;"
+                    f"speedup={sp:.1f}%;k={r.reuse_depth}/{r.prompt_tokens}"))
+    return out
+
+
+def speedup_vs_depth(full: bool = False, repeats: int = 3):
+    """§5.5: controlled k/m sweep.  One long base prompt; test prompts share
+    a prefix of fraction f in {1/8..7/8}; fit S ~ alpha * k/m.
+
+    max_new_tokens=2 keeps the run prefill-dominated — the regime the
+    paper's S ≈ alpha*k/m model describes (the relation washes out when
+    decode time dominates; see EXPERIMENTS.md §Paper-repro)."""
+    eng = _engine(full, max_new=2)
+    base_text = ("the history of computing begins with mechanical devices "
+                 "and moves through vacuum tubes transistors and integrated "
+                 "circuits toward modern accelerators and beyond ") * 4
+    words = base_text.split()
+    fracs = [1 / 8, 1 / 4, 3 / 8, 1 / 2, 5 / 8, 3 / 4, 7 / 8]
+    pts = []
+    out = []
+    for f in fracs:
+        n = max(1, int(len(words) * f))
+        prefix = " ".join(words[:n])
+        probe = prefix + " and further details follow here"
+        eng.precache([prefix])
+        eng.warmup(probe, use_recycling=False)
+        eng.warmup(probe)
+        lb = min(eng.generate(probe, use_recycling=False).latency_s
+                 for _ in range(repeats))
+        res = [eng.generate(probe) for _ in range(repeats)]
+        lr = min(r.latency_s for r in res)
+        r0 = res[0]
+        k_over_m = r0.reuse_depth / r0.prompt_tokens
+        s = (lb - lr) / lb
+        pts.append((k_over_m, s))
+        out.append((f"speedup_vs_depth.f{f:.3f}", lr * 1e6,
+                    f"k/m={k_over_m:.3f};S={s*100:.1f}%"))
+    km = np.asarray([p[0] for p in pts])
+    ss = np.asarray([p[1] for p in pts])
+    alpha = float(np.sum(km * ss) / np.sum(km * km))   # through-origin fit
+    out.append(("speedup_vs_depth.alpha", 0.0,
+                f"alpha={alpha:.3f} (paper: 1.2-1.5 on T4)"))
+    return out

@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by ``repro.launch.dryrun --all``)
+and emits one row per (arch x shape x mesh) with the three terms, the
+dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(pattern="*__pod16x16.json"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ROOT, pattern))):
+        with open(f) as fh:
+            d = json.load(fh)
+        if d.get("ok"):
+            recs.append(d)
+    return recs
+
+
+def roofline_rows(pattern="*.json"):
+    out = []
+    for d in load_records(pattern):
+        r = d["roofline"]
+        tag = f"{d['arch']}.{d['shape']}.{d['mesh']}"
+        if d.get("recycled"):
+            tag += ".rec"
+        dominant = r["bottleneck"]
+        term_us = {"compute": r["compute_s"], "memory": r["memory_s"],
+                   "collective": r["collective_s"]}[dominant] * 1e6
+        out.append((f"roofline.{tag}", term_us,
+                    f"bn={dominant};c={r['compute_s']:.4f}s;"
+                    f"m={r['memory_s']:.4f}s;coll={r['collective_s']:.4f}s;"
+                    f"useful={min(r['useful_ratio'], 1.0):.2f};"
+                    f"fits={d.get('fits_hbm')}"))
+    if not out:
+        out.append(("roofline.missing", 0.0,
+                    "run: python -m repro.launch.dryrun --all"))
+    return out

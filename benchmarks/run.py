@@ -1,0 +1,70 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  python -m benchmarks.run               # all benches, reduced model
+  python -m benchmarks.run --full        # paper's real 345M DialoGPT
+  python -m benchmarks.run --only table1
+
+Sections (one per paper table/figure + framework extras):
+  table1            paper §5.1 summary table
+  latency           paper §5.2 latency comparison
+  speedup_vs_depth  paper §5.5 S ~ alpha*k/m figure (+ fitted alpha)
+  recycle_modes     beyond-paper: exact-only vs block-radix partial reuse
+  kernels           Pallas kernel micro-bench (interpret mode)
+  roofline          §Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="use the real 345M DialoGPT config (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_repro, recycling_modes
+    from benchmarks import roofline_report
+
+    sections = {}
+
+    def sec(name, fn):
+        if args.only and args.only != name:
+            return
+        sections[name] = fn
+
+    table_rows_cache = {}
+
+    def run_table1():
+        rows, raw = paper_repro.table1(args.full)
+        table_rows_cache["raw"] = raw
+        return rows
+
+    sec("table1", run_table1)
+    sec("latency", lambda: paper_repro.latency_fig(
+        table_rows_cache.get("raw"), args.full))
+    sec("speedup_vs_depth", lambda: paper_repro.speedup_vs_depth(args.full))
+    sec("recycle_modes", recycling_modes.exact_vs_partial)
+    sec("kernels", kernel_bench.kernels)
+    sec("roofline", roofline_report.roofline_rows)
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in sections.items():
+        try:
+            for row in fn():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception:
+            failed += 1
+            print(f"{name}.ERROR,0,{traceback.format_exc(limit=1).splitlines()[-1]}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: cross-prompt KV cache recycling in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a reduced DialoGPT-style model, caches one prompt's KV states, then
+serves an extended prompt — the engine retrieves the cached prefix by
+embedding similarity, verifies the exact token-prefix condition, and
+prefills only the suffix (the paper's "token recycling").
+"""
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import Engine
+
+cfg = get_config("dialogpt-medium").reduced()
+params = init_params(cfg, jax.random.PRNGKey(0))
+engine = Engine(cfg, params, max_new_tokens=16)
+
+# Phase 1 (paper §4.4 "Cache Construction"): one forward pass per cache
+# prompt with caching enabled; KVs serialized to host memory.
+engine.precache(["What is the capital of France?"])
+print(f"cached entries: {len(engine.recycler.store)}, "
+      f"{engine.recycler.store.total_bytes/1e6:.2f} MB on host")
+
+# Phase 2: a new prompt that EXTENDS the cached one.
+prompt = "What is the capital of France? Also mention a nearby tourist spot."
+
+baseline = engine.generate(prompt, use_recycling=False)
+recycled = engine.generate(prompt)
+
+print(f"\nprompt tokens       : {recycled.prompt_tokens}")
+print(f"recycled (reused)   : {recycled.reuse_depth} tokens "
+      f"[mode={recycled.mode}, retrieval sim={recycled.prompt_similarity:.2f}]")
+print(f"baseline latency    : {baseline.latency_s*1e3:.1f} ms")
+print(f"recycled latency    : {recycled.latency_s*1e3:.1f} ms")
+print(f"outputs identical   : {baseline.text == recycled.text}")

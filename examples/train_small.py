@@ -1,0 +1,55 @@
+"""Train a small decoder end-to-end on the synthetic dialogue corpus
+(tokenizer -> packing -> AdamW -> checkpoint), then serve it with recycling.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+
+This exercises the full training substrate; the serving check at the end
+confirms recycled decode is identical on a TRAINED model too (not just
+random weights).
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data import ByteTokenizer, TrainBatches
+from repro.models import init_params
+from repro.serving import Engine
+from repro.training import save_checkpoint, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=96)
+    args = ap.parse_args()
+
+    cfg = get_config("dialogpt-medium").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"training {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps @ {args.batch}x{args.seq_len}")
+
+    tok = ByteTokenizer(cfg.vocab_size)
+    batches = TrainBatches(tok, batch=args.batch, seq_len=args.seq_len)
+    params, opt, hist = train(
+        cfg, params, batches, steps=args.steps, lr=1e-3, warmup=20,
+        log_every=25,
+        callback=lambda m: print(f"  step {m['step']:4d} loss {m['loss']:.3f}"))
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    save_checkpoint("checkpoints/train_small", params, opt, step=args.steps)
+
+    # recycled serving on the trained model
+    eng = Engine(cfg, params, max_new_tokens=12)
+    eng.precache(["what do you think about the weather"])
+    b = eng.generate("what do you think about the weather today in spring",
+                     use_recycling=False)
+    r = eng.generate("what do you think about the weather today in spring")
+    print(f"recycled reuse={r.reuse_depth}/{r.prompt_tokens} tokens, "
+          f"identical output: {b.text == r.text}")
+    print(f"sample: {r.text!r}")
+
+
+if __name__ == "__main__":
+    main()

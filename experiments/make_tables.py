@@ -1,0 +1,77 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+experiments/dryrun/*.json.
+
+  PYTHONPATH=src python experiments/make_tables.py > experiments/tables.md
+"""
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "dryrun")
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["whisper-base", "qwen2.5-3b", "recurrentgemma-9b",
+         "deepseek-v2-236b", "qwen1.5-32b", "rwkv6-3b", "qwen3-1.7b",
+         "command-r-35b", "internvl2-76b", "kimi-k2-1t-a32b"]
+
+
+def load(tag):
+    p = os.path.join(ROOT, tag + ".json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def roofline_table(mesh):
+    print(f"\n### Roofline — {mesh} "
+          f"({'256' if mesh == 'pod16x16' else '512'} chips)\n")
+    print("| arch | shape | compute s | memory s | collective s | bottleneck"
+          " | useful | GB/dev | fits | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            d = load(f"{a}__{s}__{mesh}")
+            if d is None or not d.get("ok"):
+                print(f"| {a} | {s} | - | - | - | FAIL | - | - | - | |")
+                continue
+            r = d["roofline"]
+            note = ""
+            if not r.get("flops_consistent", True):
+                note = "analytic-c"
+            print(f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f}"
+                  f" | {r['collective_s']:.5f} | {r['bottleneck']}"
+                  f" | {min(r['useful_ratio'], 1.0):.2f}"
+                  f" | {fmt_bytes(d['bytes_per_device'])}"
+                  f" | {'Y' if d['fits_hbm'] else 'N'} | {note} |")
+
+
+def dryrun_table(mesh):
+    print(f"\n### Dry-run records — {mesh}\n")
+    print("| arch | shape | lower s | compile s | args GB | temp GB |"
+          " coll bytes/step (all dev) | dominant collective |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            d = load(f"{a}__{s}__{mesh}")
+            if d is None or not d.get("ok"):
+                continue
+            m = d["memory"]
+            colls = {k: v for k, v in d["collectives"].items()
+                     if k != "total"}
+            dom = max(colls, key=colls.get) if colls else "-"
+            tot = d["collectives"].get("total", 0)
+            print(f"| {a} | {s} | {d['lower_s']} | {d['compile_s']}"
+                  f" | {m.get('argument_size_in_bytes', 0)/2**30:.1f}"
+                  f" | {m.get('temp_size_in_bytes', 0)/2**30:.1f}"
+                  f" | {tot/2**20:.0f} MB | {dom} |")
+
+
+if __name__ == "__main__":
+    for mesh in ("pod16x16", "pod2x16x16"):
+        roofline_table(mesh)
+    for mesh in ("pod16x16", "pod2x16x16"):
+        dryrun_table(mesh)

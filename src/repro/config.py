@@ -1,0 +1,271 @@
+"""Configuration system for the repro framework.
+
+Every architecture (the paper's own DialoGPT-medium testbed plus the ten
+assigned architectures) is described by a frozen ``ModelConfig``.  Configs are
+pure data — model code in ``repro.models`` interprets them; sharding rules in
+``repro.sharding`` map them onto the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration (Switch/DeepSeek style)."""
+
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    # Layers at the bottom of the stack that use a dense FFN instead of MoE
+    # (DeepSeek-V2 / Kimi-K2 use a dense first layer).
+    first_dense_layers: int = 0
+    dense_d_ff: int = 0           # d_ff for those dense layers
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2).  The KV cache stores only
+    the compressed latent ``c_kv`` plus the shared RoPE key."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Griffin/RecurrentGemma hybrid: repeating blocks of temporal-mixing
+    layers, e.g. ``("rglru", "rglru", "local_attn")`` (the 1:2 pattern)."""
+
+    pattern: Tuple[str, ...] = ("rglru", "rglru", "local_attn")
+    lru_width: int = 0            # 0 -> d_model
+    local_window: int = 2048
+    conv1d_width: int = 4
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV-6 "Finch" attention-free time mixing."""
+
+    head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB (per assignment: audio conv codec and ViT are
+    not implemented — ``input_specs`` provides precomputed frame/patch
+    embeddings of the right shape)."""
+
+    kind: str                     # "audio" | "vision"
+    num_tokens: int               # frames (audio) or patches (vision)
+    embed_dim: int                # embedding dim delivered by the stub
+    cross_attention: bool         # True: enc-dec (whisper); False: prefix-concat (VLM)
+    # Encoder stack applied on top of the stub embeddings (whisper encoder).
+    encoder_layers: int = 0
+    encoder_heads: int = 0
+    encoder_d_ff: int = 0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # -- identity ----------------------------------------------------------
+    name: str
+    arch_type: str                # dense | moe | ssm | hybrid | enc_dec | vlm
+    source: str                   # citation for the config numbers
+    # -- trunk dimensions --------------------------------------------------
+    num_layers: int = 12
+    d_model: int = 768
+    num_heads: int = 12
+    num_kv_heads: int = 12
+    d_ff: int = 3072
+    vocab_size: int = 50257
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    max_seq_len: int = 524_288
+    # -- attention flavour -------------------------------------------------
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    pos: str = "rope"             # "rope" | "learned"
+    rope_theta: float = 10_000.0
+    # sliding window used when an otherwise-full-attention arch runs the
+    # long_500k shape (sub-quadratic requirement).  0 disables the variant.
+    sliding_window: int = 8192
+    # -- block flavour -----------------------------------------------------
+    norm: str = "rmsnorm"         # "rmsnorm" | "layernorm"
+    mlp: str = "swiglu"           # "swiglu" | "gelu_mlp"
+    tie_embeddings: bool = False
+    # -- family extensions (at most one of moe/hybrid/rwkv; mla may pair moe)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    # -- numerics ----------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # ----------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.rwkv is None and self.mla is None:
+            assert self.num_heads % self.num_kv_heads == 0, self.name
+
+    # Derived helpers ------------------------------------------------------
+    @property
+    def attention_free(self) -> bool:
+        return self.rwkv is not None
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.frontend is not None and self.frontend.cross_attention
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Approximate total parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        d, L = self.d_model, self.num_layers
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for layer in range(L):
+            total += self._layer_params(layer)
+        if self.frontend is not None and self.frontend.encoder_layers:
+            f = self.frontend
+            enc_layer = 4 * f.embed_dim * f.embed_dim + 2 * f.embed_dim * f.encoder_d_ff
+            total += f.encoder_layers * enc_layer
+        return total
+
+    def q_lora(self) -> int:
+        return self.mla.q_lora_rank if self.mla else 0
+
+    def _layer_params(self, layer_idx: int) -> int:
+        d = self.d_model
+        hd = self.head_dim
+        # attention / mixer
+        if self.rwkv is not None:
+            mix = 6 * d * d          # r,k,v,g,o,w projections (approx)
+        elif self.mla is not None:
+            m = self.mla
+            nh = self.num_heads
+            mix = (d * m.q_lora_rank
+                   + m.q_lora_rank * nh * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                   + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                   + m.kv_lora_rank * nh * (m.qk_nope_head_dim + m.v_head_dim)
+                   + nh * m.v_head_dim * d)
+        else:
+            mix = (d * self.num_heads * hd          # Q
+                   + 2 * d * self.num_kv_heads * hd  # K, V
+                   + self.num_heads * hd * d)        # O
+        if self.hybrid is not None and self.hybrid.pattern:
+            kind = self.hybrid.pattern[layer_idx % len(self.hybrid.pattern)]
+            if kind == "rglru":
+                w = self.hybrid.lru_width or d
+                mix = 2 * d * w + 2 * w * w // 1 + w * d  # gates + conv approx
+        # ffn
+        mult = 3 if self.mlp == "swiglu" else 2
+        if self.moe is not None and layer_idx >= self.moe.first_dense_layers:
+            moe = self.moe
+            ffn = (moe.num_experts + moe.num_shared_experts) * mult * d * moe.d_ff_expert
+            ffn += d * moe.num_experts  # router
+        elif self.moe is not None:
+            ffn = mult * d * self.moe.dense_d_ff
+        else:
+            ffn = mult * d * self.d_ff
+        return mix + ffn
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        moe = self.moe
+        mult = 3 if self.mlp == "swiglu" else 2
+        for layer in range(L):
+            full = self._layer_params(layer)
+            if layer >= moe.first_dense_layers:
+                routed_all = moe.num_experts * mult * d * moe.d_ff_expert
+                routed_act = (moe.top_k + moe.num_shared_experts) * mult * d * moe.d_ff_expert
+                full = full - routed_all - moe.num_shared_experts * mult * d * moe.d_ff_expert + routed_act
+            total += full
+        return total
+
+    # Reduced variant for CPU smoke tests ----------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Same family, tiny dims: ≤2 layers (one full hybrid block),
+        d_model ≤ 512, ≤4 experts — runs a forward/train step on CPU."""
+        d = min(self.d_model, 256)
+        heads = max(2, min(self.num_heads, 4))
+        kvh = 1 if self.num_kv_heads < self.num_heads else heads
+        layers = len(self.hybrid.pattern) if self.hybrid else 2
+        kw = dict(
+            name=self.name + "-reduced",
+            num_layers=layers,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kvh,
+            head_dim=d // heads,
+            d_ff=d * 4,
+            vocab_size=512,
+            max_seq_len=2048,
+            sliding_window=64 if self.sliding_window else 0,
+            dtype="float32",
+            param_dtype="float32",
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=2,
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                d_ff_expert=d * 2, dense_d_ff=d * 4,
+                first_dense_layers=min(self.moe.first_dense_layers, 1))
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=48,
+                                  qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                  v_head_dim=16)
+            kw["head_dim"] = 16
+        if self.hybrid is not None:
+            kw["hybrid"] = dataclasses.replace(
+                self.hybrid, lru_width=d, local_window=32)
+        if self.rwkv is not None:
+            kw["rwkv"] = RWKVConfig(head_dim=32)
+            kw["num_kv_heads"] = heads
+        if self.frontend is not None:
+            kw["frontend"] = dataclasses.replace(
+                self.frontend, num_tokens=16, embed_dim=d,
+                encoder_layers=min(self.frontend.encoder_layers, 2),
+                encoder_heads=heads if self.frontend.encoder_layers else 0,
+                encoder_d_ff=d * 4 if self.frontend.encoder_layers else 0)
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned workload shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+    long_context: bool = False    # requires sub-quadratic attention
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode", long_context=True),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]

@@ -1,0 +1,73 @@
+"""Registry of architecture configs.
+
+Each module defines ``CONFIG: ModelConfig`` with the exact assigned numbers
+(source cited in ``config.source``).  ``get_config(name)`` resolves by id;
+``--arch <id>`` on every launcher goes through here.
+"""
+from __future__ import annotations
+
+from repro.config import ModelConfig, InputShape, INPUT_SHAPES, get_shape
+
+from repro.configs.whisper_base import CONFIG as _whisper_base
+from repro.configs.qwen2_5_3b import CONFIG as _qwen2_5_3b
+from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma_9b
+from repro.configs.deepseek_v2_236b import CONFIG as _deepseek_v2_236b
+from repro.configs.qwen1_5_32b import CONFIG as _qwen1_5_32b
+from repro.configs.rwkv6_3b import CONFIG as _rwkv6_3b
+from repro.configs.qwen3_1_7b import CONFIG as _qwen3_1_7b
+from repro.configs.command_r_35b import CONFIG as _command_r_35b
+from repro.configs.internvl2_76b import CONFIG as _internvl2_76b
+from repro.configs.kimi_k2_1t import CONFIG as _kimi_k2_1t
+from repro.configs.dialogpt_medium import CONFIG as _dialogpt_medium
+
+_REGISTRY = {
+    c.name: c
+    for c in [
+        _whisper_base,
+        _qwen2_5_3b,
+        _recurrentgemma_9b,
+        _deepseek_v2_236b,
+        _qwen1_5_32b,
+        _rwkv6_3b,
+        _qwen3_1_7b,
+        _command_r_35b,
+        _internvl2_76b,
+        _kimi_k2_1t,
+        _dialogpt_medium,
+    ]
+}
+
+# The ten architectures assigned from the public pool (paper testbed excluded).
+ASSIGNED_ARCHS = [
+    "whisper-base",
+    "qwen2.5-3b",
+    "recurrentgemma-9b",
+    "deepseek-v2-236b",
+    "qwen1.5-32b",
+    "rwkv6-3b",
+    "qwen3-1.7b",
+    "command-r-35b",
+    "internvl2-76b",
+    "kimi-k2-1t-a32b",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+__all__ = [
+    "ModelConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "ASSIGNED_ARCHS",
+    "get_config",
+    "get_shape",
+    "list_configs",
+]

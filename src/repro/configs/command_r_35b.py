@@ -1,0 +1,22 @@
+"""command-r-35b — dense GQA decoder, no biases.
+
+[hf:CohereForAI/c4ai-command-r-v01] 40L, d_model=8192, 64 heads (GQA kv=8),
+d_ff=22528, vocab=256000.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    arch_type="dense",
+    source="hf:CohereForAI/c4ai-command-r-v01",
+    num_layers=40,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22528,
+    vocab_size=256_000,
+    head_dim=128,
+    qkv_bias=False,
+    tie_embeddings=True,
+    sliding_window=8192,
+)

@@ -1,0 +1,39 @@
+"""deepseek-v2-236b — MoE with Multi-head Latent Attention.
+
+[arXiv:2405.04434] DeepSeek-V2.  60L, d_model=5120, 128 heads, MLA with
+kv_lora_rank=512, expert d_ff=1536, vocab=102400; 2 shared + 160 routed
+experts, top-6; first layer uses a dense FFN (12288).
+The KV cache stores only the 512+64 latent per token — the smallest recycled
+bytes of any assigned arch (recycling synergy, see DESIGN.md §4).
+"""
+from repro.config import ModelConfig, MoEConfig, MLAConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    arch_type="moe",
+    source="arXiv:2405.04434 (DeepSeek-V2 236B-A21B)",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,            # MLA: logical heads; cache is latent
+    d_ff=1536,                   # routed-expert d_ff (assigned)
+    vocab_size=102_400,
+    head_dim=128,
+    sliding_window=8192,
+    moe=MoEConfig(
+        num_experts=160,
+        top_k=6,
+        d_ff_expert=1536,
+        num_shared_experts=2,
+        first_dense_layers=1,
+        dense_d_ff=12288,
+        capacity_factor=1.25,
+    ),
+    mla=MLAConfig(
+        kv_lora_rank=512,
+        q_lora_rank=1536,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+)

@@ -1,0 +1,29 @@
+"""dialogpt-medium — the paper's own testbed (GPT-2 medium architecture).
+
+[arXiv:1911.00536] DialoGPT: 24L, d_model=1024, 16 heads (MHA), d_ff=4096,
+vocab≈50k BPE, learned positions, 1024-token context, 345M params.  This is
+the model the paper's Table 1 numbers come from; our paper-repro benchmarks
+run this config (random-init weights — the paper's claims are about latency
+and cache mechanics, not output quality).
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dialogpt-medium",
+    arch_type="dense",
+    source="arXiv:1911.00536 (DialoGPT-medium, GPT-2 arch)",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=50257,
+    head_dim=64,
+    pos="learned",
+    norm="layernorm",
+    mlp="gelu_mlp",
+    qkv_bias=True,
+    tie_embeddings=True,
+    max_seq_len=1024,
+    sliding_window=0,
+)

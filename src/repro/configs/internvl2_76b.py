@@ -1,0 +1,29 @@
+"""internvl2-76b — VLM: InternViT vision encoder + InternLM2-style LLM.
+
+[arXiv:2404.16821] InternVL 1.5/2 report.  Language trunk: 80L, d_model=8192,
+64 heads (GQA kv=8), d_ff=28672, vocab=128256.  The InternViT encoder +
+MLP projector are a STUB — ``input_specs`` provides projected patch
+embeddings (256 tokens after pixel-shuffle) which are concatenated ahead of
+the text tokens (prefix-concat, no cross attention).
+"""
+from repro.config import ModelConfig, FrontendConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    arch_type="vlm",
+    source="arXiv:2404.16821 (InternVL2-Llama3-76B)",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    head_dim=128,
+    sliding_window=8192,
+    frontend=FrontendConfig(
+        kind="vision",
+        num_tokens=256,           # patches after pixel-shuffle, per image
+        embed_dim=8192,           # projector output = d_model
+        cross_attention=False,    # prefix concat
+    ),
+)

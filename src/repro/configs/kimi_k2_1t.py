@@ -1,0 +1,30 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (paper-table entry).
+
+[arXiv:2501.kimi2] Kimi K2.  61L, d_model=7168, 64 heads (GQA kv=8),
+expert d_ff=2048, vocab=163840; 384 routed experts top-8 + 1 shared,
+first layer dense (d_ff 18432).
+"""
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    source="arXiv:2501.kimi2 (Kimi K2 1T-A32B)",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=2048,                   # routed-expert d_ff (assigned)
+    vocab_size=163_840,
+    head_dim=128,
+    sliding_window=8192,
+    moe=MoEConfig(
+        num_experts=384,
+        top_k=8,
+        d_ff_expert=2048,
+        num_shared_experts=1,
+        first_dense_layers=1,
+        dense_d_ff=18432,
+        capacity_factor=1.25,
+    ),
+)

@@ -1,0 +1,21 @@
+"""qwen1.5-32b — dense MHA decoder with QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B family card, assigned 32B dims] 64L, d_model=5120,
+40 heads (kv=40, i.e. full MHA), d_ff=27392, vocab=152064.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    arch_type="dense",
+    source="hf:Qwen/Qwen1.5-0.5B (family card, assigned 32B dims)",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    sliding_window=8192,
+)

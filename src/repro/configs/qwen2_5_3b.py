@@ -1,0 +1,22 @@
+"""qwen2.5-3b — dense decoder with GQA (kv=2) and QKV bias.
+
+[hf:Qwen/Qwen2.5-0.5B model-card family] assigned dims: 36L, d_model=2048,
+16 heads (GQA kv=2), d_ff=11008, vocab=151936.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    arch_type="dense",
+    source="hf:Qwen/Qwen2.5-0.5B (family card, assigned 3B dims)",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    sliding_window=8192,
+)

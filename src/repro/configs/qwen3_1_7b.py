@@ -1,0 +1,22 @@
+"""qwen3-1.7b — dense GQA decoder with QK-norm.
+
+[hf:Qwen/Qwen3-8B family card, assigned 1.7B dims] 28L, d_model=2048,
+16 heads (GQA kv=8), d_ff=6144, vocab=151936, qk_norm, no attention bias.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    arch_type="dense",
+    source="hf:Qwen/Qwen3-8B (family card, assigned 1.7B dims)",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=6144,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    sliding_window=8192,
+)

@@ -1,0 +1,29 @@
+"""recurrentgemma-9b — Griffin hybrid: RG-LRU + local attention, 1:2 pattern.
+
+[arXiv:2402.19427] Griffin: Mixing Gated Linear Recurrences with Local
+Attention.  38L, d_model=4096, 16 heads (MQA kv=1) for the local-attention
+layers, d_ff=12288, vocab=256000.  Pattern repeats (rglru, rglru, local_attn).
+Runs long_500k natively (state + 2048-token window).
+"""
+from repro.config import ModelConfig, HybridConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    source="arXiv:2402.19427 (RecurrentGemma-9B / Griffin)",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256_000,
+    head_dim=256,
+    mlp="swiglu",
+    sliding_window=0,            # hybrid handles long context natively
+    hybrid=HybridConfig(
+        pattern=("rglru", "rglru", "local_attn"),
+        lru_width=4096,
+        local_window=2048,
+        conv1d_width=4,
+    ),
+)

@@ -1,0 +1,25 @@
+"""rwkv6-3b — "Finch": attention-free RNN with data-dependent decay.
+
+[arXiv:2404.05892] Eagle and Finch: RWKV with Matrix-Valued States and
+Dynamic Recurrence.  32L, d_model=2560, d_ff=8960, vocab=65536; head_dim=64
+(40 WKV heads).  Decode state is O(1): recycling restores the (wkv, shift)
+state snapshot instead of a KV tensor (DESIGN.md §4).
+"""
+from repro.config import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    arch_type="ssm",
+    source="arXiv:2404.05892 (RWKV-6 Finch 3B)",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,                # 2560 / 64
+    num_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    head_dim=64,
+    norm="layernorm",
+    mlp="gelu_mlp",              # RWKV channel-mix (relu^2 handled in-model)
+    sliding_window=0,            # attention-free: native long context
+    rwkv=RWKVConfig(head_dim=64),
+)

@@ -1,0 +1,41 @@
+"""whisper-base — encoder-decoder audio transformer backbone.
+
+[arXiv:2212.04356] Robust Speech Recognition via Large-Scale Weak Supervision.
+Backbone only: 6 decoder layers, d_model=512, 8 heads (MHA, kv=8), d_ff=2048,
+vocab=51865.  The mel-spectrogram + conv frontend is a STUB — ``input_specs``
+supplies precomputed frame embeddings (1500 frames, the 30 s window) which the
+6-layer encoder consumes; the decoder cross-attends to encoder output.
+"""
+from repro.config import ModelConfig, FrontendConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="enc_dec",
+    source="arXiv:2212.04356 (Whisper base)",
+    num_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    head_dim=64,
+    # whisper uses learned decoder positions up to 448; our assigned shapes
+    # reach 524k positions, so we substitute on-the-fly sinusoids (same family
+    # as the whisper encoder; noted in DESIGN.md §3 hardware adaptation).
+    pos="sinusoid",
+    norm="layernorm",
+    mlp="gelu_mlp",
+    qkv_bias=True,
+    tie_embeddings=True,
+    sliding_window=8192,
+    max_seq_len=524_288,
+    frontend=FrontendConfig(
+        kind="audio",
+        num_tokens=1500,          # 30 s of audio at 50 frames/s
+        embed_dim=512,
+        cross_attention=True,
+        encoder_layers=6,
+        encoder_heads=8,
+        encoder_d_ff=2048,
+    ),
+)

@@ -1,0 +1,30 @@
+"""The paper's contribution: cross-prompt KV cache recycling ("token
+recycling"), productionized.
+
+Paper-faithful pipeline (Pandey 2025, §2–§4):
+  embed prompt -> retrieve most-similar cached prompt (dot product) ->
+  exact-prefix token test -> reuse serialized past_key_values, feed only
+  suffix tokens.
+
+Beyond-paper extensions (reported separately, DESIGN.md §7):
+  block-granular radix prefix cache with partial-LCP reuse and ref-counted
+  LRU eviction; recurrent-state snapshot recycling for SSM/hybrid archs.
+"""
+from repro.core.embedder import HashEmbedder
+from repro.core.index import EmbeddingIndex
+from repro.core.kvstore import HostKVStore, CacheEntry
+from repro.core.recycler import Recycler, RecycleResult
+from repro.core.radix import RadixPrefixCache
+from repro.core.metrics import RunMetrics, summarize_runs
+
+__all__ = [
+    "HashEmbedder",
+    "EmbeddingIndex",
+    "HostKVStore",
+    "CacheEntry",
+    "Recycler",
+    "RecycleResult",
+    "RadixPrefixCache",
+    "RunMetrics",
+    "summarize_runs",
+]

@@ -1,0 +1,69 @@
+"""Deterministic hashed n-gram sentence embedder.
+
+The paper indexes cached prompts with a pretrained sentence-transformer.
+Offline we cannot ship MiniLM weights, so the retrieval substrate is a
+feature-hashing embedder: character n-grams and word unigrams/bigrams hashed
+into a d-dim space with signed buckets, L2-normalized.  Properties we rely
+on (validated in tests):
+
+  * identical texts -> identical embeddings (cos = 1)
+  * a prompt and its extended-prefix variant (the paper's test design,
+    §4.3) -> high cosine similarity
+  * unrelated prompts -> low similarity
+
+The recycler's *correctness* never depends on the embedder — retrieval only
+nominates a candidate; the exact token-prefix test gates reuse (§3.1).
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+
+import numpy as np
+
+_WORD_RE = re.compile(r"[a-z0-9']+")
+
+
+def _bucket(token: str, seed: int, dim: int) -> tuple[int, float]:
+    h = hashlib.blake2b(f"{seed}:{token}".encode(), digest_size=8).digest()
+    v = int.from_bytes(h, "little")
+    return (v >> 1) % dim, 1.0 if (v & 1) else -1.0
+
+
+class HashEmbedder:
+    """L2-normalized signed-hash bag of {char 3-grams, words, word bigrams}."""
+
+    def __init__(self, dim: int = 384, char_n: int = 3):
+        self.dim = dim
+        self.char_n = char_n
+
+    def _features(self, text: str):
+        t = text.lower().strip()
+        words = _WORD_RE.findall(t)
+        feats = []
+        feats.extend(("w", w) for w in words)
+        feats.extend(("b", f"{a} {b}") for a, b in zip(words, words[1:]))
+        compact = " ".join(words)
+        n = self.char_n
+        feats.extend(("c", compact[i:i + n])
+                     for i in range(max(len(compact) - n + 1, 0)))
+        if not feats:
+            # non-word text (e.g. random-init model babble): raw char
+            # n-grams keep identical texts at cos=1 instead of a 0 vector
+            feats.extend(("r", t[i:i + n])
+                         for i in range(max(len(t) - n + 1, 0)))
+            feats.append(("r", t[:n] or t))
+        return feats
+
+    def encode(self, text: str) -> np.ndarray:
+        v = np.zeros((self.dim,), np.float32)
+        for seed, (kind, tok) in enumerate(self._features(text)):
+            idx, sign = _bucket(tok, hash(kind) & 0xFFFF, self.dim)
+            v[idx] += sign
+        norm = float(np.linalg.norm(v))
+        return v / norm if norm > 0 else v
+
+    def encode_batch(self, texts) -> np.ndarray:
+        if not texts:
+            return np.zeros((0, self.dim), np.float32)
+        return np.stack([self.encode(t) for t in texts])

@@ -1,0 +1,45 @@
+"""Nearest-neighbour retrieval over cached-prompt embeddings.
+
+Paper §2.5: ``i* = argmax_i <e_i, e_t>`` over L2-normalized embeddings
+(dot product == cosine).  The paper uses faiss-cpu; at our scale a blocked
+numpy matmul is exact and dependency-free, and supports incremental add /
+remove (needed by cache eviction).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+class EmbeddingIndex:
+    def __init__(self, dim: int):
+        self.dim = dim
+        self._vecs = np.zeros((0, dim), np.float32)
+        self._ids: List[int] = []
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def add(self, entry_id: int, vec: np.ndarray) -> None:
+        assert vec.shape == (self.dim,)
+        self._vecs = np.concatenate([self._vecs, vec[None]], axis=0)
+        self._ids.append(entry_id)
+
+    def remove(self, entry_id: int) -> None:
+        if entry_id not in self._ids:
+            return
+        i = self._ids.index(entry_id)
+        self._vecs = np.delete(self._vecs, i, axis=0)
+        del self._ids[i]
+
+    def search(self, vec: np.ndarray, k: int = 1
+               ) -> List[Tuple[int, float]]:
+        """Top-k (entry_id, similarity), best first."""
+        if not self._ids:
+            return []
+        sims = self._vecs @ vec.astype(np.float32)
+        k = min(k, len(self._ids))
+        top = np.argpartition(-sims, k - 1)[:k]
+        top = top[np.argsort(-sims[top])]
+        return [(self._ids[i], float(sims[i])) for i in top]

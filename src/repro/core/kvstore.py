@@ -1,0 +1,199 @@
+"""Host-resident KV cache store with disk serialization.
+
+Paper §3.4: "We store KVs per layer on the CPU (torch.save) and reload them
+together with the cached prompt's token IDs to enable exact prefix checks."
+Here an entry is the model's whole cache pytree (any family: attention KV,
+MLA latent, recurrent state) moved to host numpy, keyed by an integer id,
+with byte accounting and LRU order for eviction.
+
+Disk format: one ``<id>.npz`` per entry ('/'-joined tree paths as npz keys)
+plus a json sidecar with text/tokens/length — transparent and reloadable
+across sessions, like the paper's CSV+torch.save layout.
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def flatten_cache(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_cache(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def unflatten_cache(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for path, arr in flat.items():
+        parts = path.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = arr
+    return root
+
+
+def to_host(cache) -> Any:
+    """Device pytree -> host numpy pytree (the paper's ``.to(cpu)``)."""
+    return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), cache)
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.asarray(a).nbytes for a in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# int8 host-cache compression (beyond paper; cf. its CacheGen citation).
+# The paper notes host caches "grow large" (§6.1); symmetric per-vector int8
+# halves bf16 KV bytes (4x for f32) at ~0.4% RMS error — recycled outputs
+# stay semantically identical (validated in tests/benchmarks).
+# ---------------------------------------------------------------------------
+_QKEY = "__q8__"
+_NO_COMPRESS = {"slot_pos"}
+
+
+def quantize_tree(tree):
+    """Float leaves -> {_QKEY: int8, "scale": f32 per last-dim vector}."""
+    def walk(t, name=None):
+        if isinstance(t, dict):
+            return {k: walk(v, k) for k, v in t.items()}
+        a = np.asarray(t)
+        if name in _NO_COMPRESS or not np.issubdtype(a.dtype, np.floating):
+            return a
+        amax = np.max(np.abs(a.astype(np.float32)), axis=-1, keepdims=True)
+        scale = (amax / 127.0 + 1e-12).astype(np.float32)
+        q = np.clip(np.round(a.astype(np.float32) / scale), -127, 127)
+        return {_QKEY: q.astype(np.int8), "scale": scale,
+                "dtype": np.dtype(a.dtype).str}
+    return walk(tree)
+
+
+def dequantize_tree(tree):
+    def walk(t):
+        if isinstance(t, dict):
+            if _QKEY in t:
+                dt = t["dtype"]
+                dt = dt.item() if hasattr(dt, "item") else dt
+                a = t[_QKEY].astype(np.float32) * t["scale"]
+                return a.astype(np.dtype(str(dt)))
+            return {k: walk(v) for k, v in t.items()}
+        return t
+    return walk(tree)
+
+
+def is_quantized(tree) -> bool:
+    def walk(t):
+        if isinstance(t, dict):
+            return _QKEY in t or any(walk(v) for v in t.values())
+        return False
+    return walk(tree)
+
+
+@dataclass
+class CacheEntry:
+    entry_id: int
+    text: str
+    token_ids: np.ndarray        # (k,) int32 — enables the exact prefix test
+    cache: Any                   # host numpy cache pytree
+    length: int                  # tokens covered (reuse depth ceiling)
+    capacity: int                # slot capacity of the attention buffers
+    nbytes: int = 0
+
+    def __post_init__(self):
+        if not self.nbytes:
+            self.nbytes = tree_bytes(self.cache)
+
+
+class HostKVStore:
+    """LRU-ordered entry store with a byte budget."""
+
+    def __init__(self, max_bytes: Optional[int] = None):
+        self.max_bytes = max_bytes
+        self._entries: "OrderedDict[int, CacheEntry]" = OrderedDict()
+        self._next_id = 0
+        self.total_bytes = 0
+        self.evictions = 0
+
+    def __len__(self):
+        return len(self._entries)
+
+    def __contains__(self, entry_id: int):
+        return entry_id in self._entries
+
+    def ids(self) -> List[int]:
+        return list(self._entries.keys())
+
+    def put(self, text: str, token_ids, cache, length: int,
+            capacity: Optional[int] = None) -> CacheEntry:
+        token_ids = np.asarray(token_ids, np.int32)
+        entry = CacheEntry(self._next_id, text, token_ids, cache,
+                           int(length), int(capacity or length))
+        self._next_id += 1
+        self._entries[entry.entry_id] = entry
+        self.total_bytes += entry.nbytes
+        return entry
+
+    def get(self, entry_id: int, *, touch: bool = True) -> CacheEntry:
+        e = self._entries[entry_id]
+        if touch:
+            self._entries.move_to_end(entry_id)
+        return e
+
+    def remove(self, entry_id: int) -> None:
+        e = self._entries.pop(entry_id, None)
+        if e is not None:
+            self.total_bytes -= e.nbytes
+
+    def evict_to_budget(self) -> List[int]:
+        """Evict LRU entries until under max_bytes; returns evicted ids."""
+        evicted = []
+        if self.max_bytes is None:
+            return evicted
+        while self.total_bytes > self.max_bytes and self._entries:
+            eid, e = self._entries.popitem(last=False)
+            self.total_bytes -= e.nbytes
+            self.evictions += 1
+            evicted.append(eid)
+        return evicted
+
+    # ---- disk ----------------------------------------------------------
+    def save_dir(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        meta = {}
+        for eid, e in self._entries.items():
+            np.savez(os.path.join(path, f"{eid}.npz"), **flatten_cache(e.cache))
+            meta[str(eid)] = {
+                "text": e.text,
+                "token_ids": e.token_ids.tolist(),
+                "length": e.length,
+                "capacity": e.capacity,
+            }
+        with open(os.path.join(path, "index.json"), "w") as f:
+            json.dump({"next_id": self._next_id, "entries": meta}, f)
+
+    @classmethod
+    def load_dir(cls, path: str, max_bytes: Optional[int] = None
+                 ) -> "HostKVStore":
+        store = cls(max_bytes)
+        with open(os.path.join(path, "index.json")) as f:
+            meta = json.load(f)
+        for eid_s, m in meta["entries"].items():
+            eid = int(eid_s)
+            with np.load(os.path.join(path, f"{eid}.npz")) as z:
+                cache = unflatten_cache({k: z[k] for k in z.files})
+            e = CacheEntry(eid, m["text"], np.asarray(m["token_ids"], np.int32),
+                           cache, m["length"], m["capacity"])
+            store._entries[eid] = e
+            store.total_bytes += e.nbytes
+        store._next_id = meta["next_id"]
+        return store

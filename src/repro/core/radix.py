@@ -1,0 +1,85 @@
+"""Block-granular radix prefix index (beyond-paper extension).
+
+The paper only reuses a cache when the cached prompt is an *exact full
+prefix* of the new one.  This index generalizes to vLLM-style automatic
+prefix caching, adapted to host-offloaded whole-prefix entries and TPU
+static shapes (DESIGN.md §3): token ids are grouped into fixed-size blocks;
+a trie over block keys maps any new prompt to the deepest cached ancestor,
+giving partial reuse depth = LCP rounded down to a block boundary.
+
+Nodes carry the set of store entry ids whose caches cover that depth; the
+store's LRU eviction calls back into ``forget_entry`` so dead references
+never serve a hit.  Invariants (property-tested):
+
+  I1  lookup(tokens) returns (depth, entry) with depth % block == 0,
+      depth <= len(tokens), and entry.token_ids[:depth] == tokens[:depth]
+  I2  depth is maximal over live entries at block granularity
+  I3  forget_entry(e) makes e unreachable
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Set, Tuple
+
+
+@dataclass
+class _Node:
+    depth: int
+    entries: Set[int] = field(default_factory=set)
+    children: Dict[Tuple[int, ...], "_Node"] = field(default_factory=dict)
+
+
+class RadixPrefixCache:
+    def __init__(self, block_size: int = 64):
+        assert block_size >= 1
+        self.block = block_size
+        self._root = _Node(0)
+        self._entry_depth: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    def insert(self, token_ids, entry_id: int, length: Optional[int] = None):
+        """Register that ``entry_id``'s cache covers token_ids[:length]."""
+        n = length if length is not None else len(token_ids)
+        n = (n // self.block) * self.block
+        node = self._root
+        node.entries.add(entry_id)
+        for b0 in range(0, n, self.block):
+            key = tuple(int(t) for t in token_ids[b0:b0 + self.block])
+            node = node.children.setdefault(key, _Node(b0 + self.block))
+            node.entries.add(entry_id)
+        self._entry_depth[entry_id] = n
+
+    def lookup(self, token_ids) -> Tuple[int, Optional[int]]:
+        """Deepest block-aligned cached prefix of token_ids.
+        Returns (depth, entry_id) — (0, None) on miss."""
+        node = self._root
+        best: Tuple[int, Optional[int]] = (0, None)
+        n = len(token_ids)
+        for b0 in range(0, (n // self.block) * self.block, self.block):
+            key = tuple(int(t) for t in token_ids[b0:b0 + self.block])
+            child = node.children.get(key)
+            if child is None or not child.entries:
+                break
+            node = child
+            # prefer the entry registered most recently (max id ~ MRU-ish)
+            best = (node.depth, max(node.entries))
+        return best
+
+    def forget_entry(self, entry_id: int) -> None:
+        """Remove all references to an evicted entry, pruning empty nodes."""
+        self._entry_depth.pop(entry_id, None)
+
+        def prune(node: _Node) -> bool:
+            node.entries.discard(entry_id)
+            dead = [k for k, c in node.children.items() if prune(c)]
+            for k in dead:
+                del node.children[k]
+            return not node.entries and not node.children
+
+        prune(self._root)
+
+    def entries(self) -> Set[int]:
+        return set(self._entry_depth)
+
+    def __contains__(self, entry_id: int) -> bool:
+        return entry_id in self._entry_depth

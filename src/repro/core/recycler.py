@@ -1,0 +1,181 @@
+"""The recycling decision path: retrieval -> prefix test -> cache surgery.
+
+Paper-faithful mode (§2.5/§3.1): embed the new prompt, retrieve the most
+similar cached prompt, require the cached token ids to be an *exact full
+prefix* (reuse depth r == k), then hand the cached pytree + suffix tokens to
+the engine.
+
+Beyond-paper mode adds the block-radix partial path: the deepest
+block-aligned common prefix of ANY cached entry can be reused by *trimming*
+the cached attention buffers to that depth (slot_pos masking — valid because
+causal prefix KVs are independent of what follows).  Recurrent-state caches
+(RWKV/Griffin) are not trimmable — a state snapshot cannot be rewound — so
+they only ever hit via the exact full-prefix rule, as DESIGN.md §4 requires.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.embedder import HashEmbedder
+from repro.core.index import EmbeddingIndex
+from repro.core import kvstore as kvq
+from repro.core.kvstore import CacheEntry, HostKVStore
+from repro.core.radix import RadixPrefixCache
+
+_STATEFUL_KEYS = {"wkv", "h", "conv", "shift_t", "shift_c"}
+# capacity-axis (from the right) per leaf name, for grow_capacity
+_CAP_AXIS = {"k": -3, "v": -3, "ckv": -2, "krope": -2, "slot_pos": -1,
+             "k_scale": -2, "v_scale": -2}
+_NO_RESIZE = {"cross_k", "cross_v"}
+
+
+def common_prefix_len(a, b) -> int:
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    a = np.asarray(a[:n])
+    b = np.asarray(b[:n])
+    neq = np.nonzero(a != b)[0]
+    return int(neq[0]) if len(neq) else n
+
+
+def is_trimmable(cache) -> bool:
+    """True iff the cache contains no recurrent state (pure attention)."""
+    def walk(t) -> bool:
+        if isinstance(t, dict):
+            if _STATEFUL_KEYS & set(t.keys()):
+                return False
+            return all(walk(v) for v in t.values())
+        return True
+    return walk(cache)
+
+
+def trim_to_depth(cache, depth: int):
+    """Mask every cached slot holding a position >= depth (prefix reuse)."""
+    def walk(t):
+        if isinstance(t, dict):
+            return {k: (np.where(v < depth, v, -1).astype(v.dtype)
+                        if k == "slot_pos" else walk(v))
+                    for k, v in t.items()}
+        return t
+    return walk(cache)
+
+
+def grow_capacity(cache, new_capacity: int):
+    """Pad attention buffers' slot axis up to new_capacity (host numpy)."""
+    def walk(t, name=None):
+        if isinstance(t, dict):
+            return {k: walk(v, k) for k, v in t.items()}
+        if name in _NO_RESIZE or name not in _CAP_AXIS:
+            return t
+        ax = _CAP_AXIS[name] % t.ndim if t.ndim >= abs(_CAP_AXIS[name]) else None
+        ax = t.ndim + _CAP_AXIS[name]
+        cur = t.shape[ax]
+        if cur >= new_capacity:
+            return t
+        pad = [(0, 0)] * t.ndim
+        pad[ax] = (0, new_capacity - cur)
+        fill = -1 if name == "slot_pos" else 0
+        return np.pad(t, pad, constant_values=fill)
+    return walk(cache)
+
+
+@dataclass
+class RecycleResult:
+    hit: bool
+    mode: str                    # "exact_prefix" | "partial_block" | "miss"
+    entry: Optional[CacheEntry]
+    reuse_depth: int             # k — tokens skipped
+    similarity: float            # retrieval similarity (paper metric)
+    cache: Any = None            # host cache pytree ready for the engine
+
+
+class Recycler:
+    """Cross-prompt KV recycling policy over a HostKVStore."""
+
+    def __init__(self, store: Optional[HostKVStore] = None,
+                 embedder: Optional[HashEmbedder] = None,
+                 *, enable_partial: bool = False, block_size: int = 64,
+                 retrieval_k: int = 4, compress: bool = False):
+        # NB: not ``store or ...`` — an empty HostKVStore is falsy (__len__)
+        self.store = store if store is not None else HostKVStore()
+        self.embedder = embedder if embedder is not None else HashEmbedder()
+        self.index = EmbeddingIndex(self.embedder.dim)
+        self.radix = RadixPrefixCache(block_size) if enable_partial else None
+        self.retrieval_k = retrieval_k
+        # int8 host-cache compression (beyond paper): halves bf16 KV bytes
+        self.compress = compress
+
+    # ------------------------------------------------------------------
+    def admit(self, text: str, token_ids, cache_host, length: int,
+              capacity: Optional[int] = None) -> CacheEntry:
+        """Store a finished run's cache for future recycling (paper §2.4)."""
+        if self.compress:
+            cache_host = kvq.quantize_tree(cache_host)
+        entry = self.store.put(text, token_ids, cache_host, length, capacity)
+        self.index.add(entry.entry_id, self.embedder.encode(text))
+        if self.radix is not None and is_trimmable(cache_host):
+            self.radix.insert(entry.token_ids, entry.entry_id, length)
+        for eid in self.store.evict_to_budget():
+            self.index.remove(eid)
+            if self.radix is not None:
+                self.radix.forget_entry(eid)
+        return entry
+
+    # ------------------------------------------------------------------
+    def lookup(self, text: str, token_ids) -> RecycleResult:
+        token_ids = np.asarray(token_ids, np.int32)
+        m = len(token_ids)
+        max_depth = m - 1          # generation needs >= 1 input token
+
+        # --- paper-faithful: retrieve -> exact full-prefix test ---------
+        best_exact: Optional[tuple] = None
+        sim_best = 0.0
+        for eid, sim in self.index.search(self.embedder.encode(text),
+                                          self.retrieval_k):
+            if eid not in self.store:
+                continue
+            e = self.store.get(eid, touch=False)
+            sim_best = max(sim_best, sim)
+            r = common_prefix_len(token_ids, e.token_ids[:e.length])
+            if r != e.length or r == 0:
+                continue                          # cached not a full prefix
+            # Attention caches tolerate depth < e.length (overwritten by the
+            # suffix); recurrent state cannot rewind, so it needs the full
+            # cached length to fit under max_depth.
+            depth = min(r, max_depth)
+            if not is_trimmable(e.cache) and e.length > max_depth:
+                continue
+            if depth > 0 and (best_exact is None or depth > best_exact[0]):
+                best_exact = (depth, e, sim)
+
+        # --- beyond-paper: block-radix partial prefix --------------------
+        best_partial: Optional[tuple] = None
+        if self.radix is not None:
+            depth, eid = self.radix.lookup(token_ids)
+            depth = min(depth, max_depth)
+            if depth > 0 and eid is not None and eid in self.store:
+                best_partial = (depth, self.store.get(eid, touch=False))
+
+        def _materialize(cache):
+            return kvq.dequantize_tree(cache) if self.compress else cache
+
+        if best_exact and (not best_partial or best_exact[0] >= best_partial[0]):
+            depth, e, sim = best_exact
+            self.store.get(e.entry_id)            # LRU touch
+            # exact path needs no trim: cached positions are all < e.length
+            # <= m, and [depth, e.length) get overwritten by the suffix.
+            return RecycleResult(True, "exact_prefix", e, depth, sim,
+                                 _materialize(e.cache))
+        if best_partial:
+            depth, e = best_partial
+            self.store.get(e.entry_id)
+            if is_trimmable(e.cache):
+                return RecycleResult(True, "partial_block", e, depth,
+                                     sim_best,
+                                     _materialize(trim_to_depth(e.cache,
+                                                                depth)))
+        return RecycleResult(False, "miss", None, 0, sim_best, None)

@@ -1,0 +1,6 @@
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.pipeline import (SyntheticDialogues, paper_prompt_sets,
+                                 TrainBatches)
+
+__all__ = ["ByteTokenizer", "SyntheticDialogues", "paper_prompt_sets",
+           "TrainBatches"]

@@ -1,0 +1,119 @@
+"""Data pipeline: the paper's prompt sets + a synthetic training corpus.
+
+``paper_prompt_sets`` reproduces §4.3's construction exactly: a cache set of
+concise knowledge queries and a test set of *extended-prefix* variants
+("near duplicate and extended prefix cases, precisely the scenarios where
+token recycling should offer measurable benefit"), persisted as CSVs
+(data/cache_prompts.csv, data/test_prompts.csv) like the notebook.
+
+``SyntheticDialogues`` generates deterministic Reddit-exchange-shaped text
+for training the ~100M example model; ``TrainBatches`` packs it to
+(global_batch, seq_len) token blocks.
+"""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer, EOS
+
+# --- the paper's prompt design (§4.3) --------------------------------------
+CACHE_PROMPTS = [
+    "Explain machine learning in simple terms.",
+    "What is the capital of France?",
+    "How do airplanes fly?",
+    "What causes rain to fall?",
+    "Describe how photosynthesis works.",
+    "What is the speed of light?",
+    "Explain how vaccines protect the body.",
+    "Why is the sky blue during the day?",
+    "What is a black hole in space?",
+    "How do computers store information?",
+]
+
+TEST_PROMPTS = [
+    "Explain machine learning in simple terms. Give an example application.",
+    "What is the capital of France? Also mention a nearby tourist destination.",
+    "How do airplanes fly? Keep the answer short.",
+    "What causes rain to fall? Explain for a child.",
+    "Describe how photosynthesis works. Focus on the role of sunlight.",
+    "What is the speed of light? State it in kilometers per second.",
+]
+
+
+def paper_prompt_sets(data_dir: Optional[str] = None
+                      ) -> Tuple[List[str], List[str]]:
+    """Returns (cache_prompts, test_prompts); writes the notebook's CSVs."""
+    if data_dir:
+        os.makedirs(data_dir, exist_ok=True)
+        for name, rows in (("cache_prompts.csv", CACHE_PROMPTS),
+                           ("test_prompts.csv", TEST_PROMPTS)):
+            with open(os.path.join(data_dir, name), "w", newline="") as f:
+                wr = csv.writer(f)
+                wr.writerow(["prompt"])
+                wr.writerows([[r] for r in rows])
+    return list(CACHE_PROMPTS), list(TEST_PROMPTS)
+
+
+# --- synthetic corpus -------------------------------------------------------
+_TOPICS = ["the weather", "a new phone", "a football match", "cooking pasta",
+           "a sci-fi movie", "guitar practice", "a road trip", "gardening",
+           "video games", "the stock market", "a history book", "running"]
+_OPENERS = ["what do you think about", "anyone else into", "need advice on",
+            "just tried", "can someone explain", "hot take about"]
+_REPLIES = ["honestly it depends on the details.",
+            "i had the same experience last week.",
+            "source? that does not sound right.",
+            "great point, never thought of it that way.",
+            "this is the way.", "counterpoint: not always true."]
+
+
+class SyntheticDialogues:
+    """Deterministic pseudo-Reddit exchanges (seeded), shaped like the
+    DialoGPT training distribution the paper describes."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self) -> str:
+        op = self.rng.choice(_OPENERS)
+        topic = self.rng.choice(_TOPICS)
+        n_turns = int(self.rng.integers(1, 4))
+        turns = [f"{op} {topic}?"]
+        turns += [str(self.rng.choice(_REPLIES)) for _ in range(n_turns)]
+        return " <eot> ".join(turns)
+
+    def stream(self) -> Iterator[str]:
+        while True:
+            yield self.sample()
+
+
+class TrainBatches:
+    """Pack the dialogue stream into (batch, seq_len) int32 blocks with EOS
+    separators — a minimal but real packed-LM pipeline."""
+
+    def __init__(self, tokenizer: ByteTokenizer, batch: int, seq_len: int,
+                 seed: int = 0):
+        self.tok = tokenizer
+        self.batch = batch
+        self.seq_len = seq_len
+        self._src = SyntheticDialogues(seed).stream()
+        self._buf = np.zeros((0,), np.int32)
+
+    def _fill(self, n: int) -> np.ndarray:
+        while len(self._buf) < n:
+            ids = self.tok.encode(next(self._src))
+            self._buf = np.concatenate(
+                [self._buf, ids, np.asarray([EOS], np.int32)])
+        out, self._buf = self._buf[:n], self._buf[n:]
+        return out
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        flat = self._fill(self.batch * self.seq_len)
+        return {"tokens": flat.reshape(self.batch, self.seq_len)}

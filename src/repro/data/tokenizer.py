@@ -1,0 +1,40 @@
+"""Deterministic byte-level tokenizer.
+
+The paper uses GPT-2 BPE via HF; offline we cannot ship merge tables, so the
+framework tokenizes at the byte level (vocab = 256 bytes + specials) and
+*folds* ids into the model's vocab size when smaller (reduced smoke configs).
+What matters for the paper's mechanism is that tokenization is a pure
+deterministic function of the text — the exact-prefix test then behaves
+identically to BPE: equal text prefixes <=> equal token prefixes.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+_SPECIALS = 3
+
+
+class ByteTokenizer:
+    def __init__(self, vocab_size: int):
+        assert vocab_size >= 16
+        self.vocab_size = vocab_size
+
+    def _fold(self, b: int) -> int:
+        return _SPECIALS + b % (self.vocab_size - _SPECIALS)
+
+    def encode(self, text: str, *, bos: bool = True) -> np.ndarray:
+        ids = [BOS] if bos else []
+        ids.extend(self._fold(b) for b in text.encode("utf-8"))
+        return np.asarray(ids, np.int32)
+
+    def decode(self, ids) -> str:
+        out = bytearray()
+        for t in np.asarray(ids).ravel():
+            t = int(t)
+            if t < _SPECIALS:
+                continue
+            out.append((t - _SPECIALS) % 256)
+        return out.decode("utf-8", errors="replace")

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
+exposes the jit'd wrappers the model layer dispatches to via
+``Runtime.use_pallas``.  On this CPU container kernels execute with
+``interpret=True``; on TPU the same ``pallas_call``s compile via Mosaic.
+"""

@@ -1,0 +1,114 @@
+"""Flash-attention prefill kernel (causal / sliding-window, GQA).
+
+TPU-native adaptation (DESIGN.md §3): grid = (batch*q_heads, q_blocks,
+kv_blocks) with the kv dimension sequential ("arbitrary") so the online
+softmax state (m, l, acc) lives in VMEM scratch across kv steps.  Block
+shapes are MXU-aligned (multiples of 128 on seq, full head_dim lanes).
+GQA is expressed in the kv index_map (q row -> kv row // group), so no
+K/V replication ever hits HBM.
+
+This is the compute the paper's token recycling *skips*: a recycled prefix
+of k tokens removes ceil(k/BQ) grid rows of this kernel per layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, q_start, bq, bk, nk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T * scale                               # (bq, bk)
+
+    qp = q_start + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kp = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= kp > qp - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_start=0,
+                    block_q=128, block_k=128, scale=None, interpret=True):
+    """q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D) -> (B,Sq,H,D).
+
+    kv positions are 0..Skv-1; q positions start at ``q_start`` (recycled
+    prefill: q_start = reuse depth k)."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale or D ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+
+    def kv_row(bh, qi, ki):
+        return (bh // (H * G) * Hkv * G + bh % H) // G * 1  # placeholder
+
+    # bh = b*H + h  ->  kv row = b*Hkv + h // G
+    def kv_index(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * Hkv + h // G, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_start=q_start, bq=bq, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,50 @@
+"""Jit'd wrappers around the Pallas kernels (the model-facing surface)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_start",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_start=0,
+                    block_q=128, block_k=128, interpret=True):
+    bq = min(block_q, q.shape[1])
+    while q.shape[1] % bq:
+        bq //= 2
+    bk = min(block_k, k.shape[1])
+    while k.shape[1] % bk:
+        bk //= 2
+    return _flash(q, k, v, causal=causal, window=window, q_start=q_start,
+                  block_q=bq, block_k=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window=0,
+                     block_k=256, interpret=True):
+    bk = min(block_k, k_cache.shape[1])
+    while k_cache.shape[1] % bk:
+        bk //= 2
+    return _decode(q, k_cache, v_cache, slot_pos, pos, window=window,
+                   block_k=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r, k, v, w, u, s0, *, chunk=16, interpret=True):
+    c = min(chunk, r.shape[1])
+    while r.shape[1] % c:
+        c //= 2
+    return _wkv(r, k, v, w, u, s0, chunk=c, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan(a, b, h0, *, chunk=64, block_w=512, interpret=True):
+    return _rglru(a, b, h0, chunk=chunk, block_w=block_w,
+                  interpret=interpret)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are deliberately naive — full score materialization, step-by-step
+scans — so they are obviously correct; kernel tests sweep shapes/dtypes and
+assert_allclose against them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_flash_attention(q, k, v, *, causal=True, window=0, q_start=0,
+                        scale=None):
+    """q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D).  Naive full-softmax GQA attention.
+    q positions are q_start..q_start+Sq-1; kv positions 0..Skv-1."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale or D ** -0.5
+    qp = q_start + jnp.arange(Sq)
+    kp = jnp.arange(Skv)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window:
+        ok &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ref_decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window=0,
+                         scale=None):
+    """q: (B,1,H,D); caches (B,C,Hkv,D); slot_pos (C,) abs positions or -1;
+    pos: scalar query position."""
+    B, _, H, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale or D ** -0.5
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)) * scale
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        ok &= slot_pos > pos - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def ref_rwkv6_wkv(r, k, v, w, u, s0):
+    """Step-by-step WKV recurrence.  r,k,v,w: (B,S,H,D) f32; u: (H,D);
+    s0: (B,H,D,D).  Returns (y (B,S,H,D), s_final)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for a in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def ref_rglru_scan(a, b, h0):
+    """Step-by-step linear recurrence h_t = a_t h_{t-1} + b_t.
+    a, b: (B,S,W); h0: (B,W).  Returns (h (B,S,W), h_final)."""
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    xs = (a.transpose(1, 0, 2), b.transpose(1, 0, 2))
+    h_fin, hs = jax.lax.scan(step, h0, xs)
+    return hs.transpose(1, 0, 2), h_fin

@@ -1,0 +1,80 @@
+"""Blocked RG-LRU linear-recurrence kernel:  h_t = a_t * h_{t-1} + b_t.
+
+The recurrence is elementwise (diagonal transition), so the MXU cannot
+help — the roofline is HBM streaming of a/b and VPU multiply-adds.  The
+kernel blocks over (batch, width, time): grid = (B, W/BW, S/T) with the
+time dimension sequential; the running state lives in VMEM scratch and each
+grid step streams one (T, BW) tile of a and b.  Versus the jnp
+``associative_scan`` path this avoids materializing the O(S) scan tree in
+HBM and keeps a single state tile resident.
+
+Inside a tile the recurrence runs as an unrolled sequential loop —
+numerically exact for any decay magnitude (the closed-form cumprod trick
+divides by vanishing decays; see rwkv6_wkv.py where decays are bounded).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hT_ref, h_scr, *, T, nt):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)              # (T, BW)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, T, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ti == nt - 1)
+    def _write():
+        hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+def rglru_scan(a, b, h0, *, chunk: int = 64, block_w: int = 512,
+               interpret: bool = True):
+    """a, b: (B, S, W) f32; h0: (B, W) f32 -> (h (B,S,W), h_final (B,W))."""
+    B, S, W = a.shape
+    T = min(chunk, S)
+    while S % T:
+        T //= 2
+    BW = min(block_w, W)
+    while W % BW:
+        BW //= 2
+    nt = S // T
+
+    kernel = functools.partial(_rglru_kernel, T=T, nt=nt)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, W // BW, nt),
+        in_specs=[
+            pl.BlockSpec((1, T, BW), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, T, BW), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, BW), lambda bi, wi, ti: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, BW), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, BW), lambda bi, wi, ti: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((BW,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, hT

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, record memory/cost/collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--recycled]
+
+Each run writes experiments/dryrun/<arch>__<shape>__<mesh>[__rec].json with:
+  bytes-per-device (memory_analysis), FLOPs/bytes (cost_analysis),
+  collective schedule + bytes (parsed HLO), derived roofline terms, and the
+  fallback-to-replication log from the sharding rules.
+
+``--recycled`` lowers the *recycled prefill* variant: suffix = half the
+tokens against a cache already holding the other half — the paper's
+technique as a compiled artifact (suffix prefill FLOPs ~ half of full).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs import ASSIGNED_ARCHS, get_config, get_shape
+from repro.launch.mesh import make_production_mesh, HBM_BYTES
+from repro.launch.specs import input_specs, decode_window, text_len
+from repro.models import decode_step, prefill, train_loss, init_params
+from repro.models.cache import cache_struct
+from repro.roofline import (RooflineTerms, model_flops, max_scan_trip,
+                            parse_collective_bytes)
+from repro.sharding import (batch_shardings, cache_shardings,
+                            param_shardings, runtime_for)
+from repro.training.optimizer import AdamWState, adamw_update, cosine_lr
+
+OUT_DIR = "experiments/dryrun"
+
+
+def _params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _opt_struct(params_struct):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                      jax.tree.map(f32, params_struct),
+                      jax.tree.map(f32, params_struct))
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, rt,
+               *, recycled: bool = False, suffix_frac: float = 0.5,
+               kv_quant: bool = False):
+    """Returns (fn, arg_structs, in_shardings, donate)."""
+    specs = input_specs(cfg, shape, kv_quant=kv_quant)
+    pstruct = _params_struct(cfg)
+    dp_all = tuple(a for a in mesh.axis_names if a != "model")
+    pshard = param_shardings(pstruct, mesh, expert_fsdp_axes=dp_all)
+    window = decode_window(cfg, shape)
+
+    if shape.kind == "train":
+        ostruct = _opt_struct(pstruct)
+        dp = rt.batch_axes
+        oshard = AdamWState(
+            NamedSharding(mesh, P()),
+            param_shardings(pstruct, mesh, zero1_axes=dp,
+                            expert_fsdp_axes=dp_all),
+            param_shardings(pstruct, mesh, zero1_axes=dp,
+                            expert_fsdp_axes=dp_all))
+        schedule = cosine_lr(3e-4, 100, 10_000)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: train_loss(cfg, p, batch, rt), has_aux=True)(params)
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 schedule)
+            return params, opt_state, {**metrics, **om}
+
+        bshard = batch_shardings(cfg, shape, mesh, rt)
+        args = (pstruct, ostruct, specs["batch"])
+        shards = (pshard, oshard, bshard)
+        out_shards = (pshard, oshard, None)
+        return train_step, args, shards, out_shards, (0, 1)
+
+    cstruct = specs["cache"]
+    cshard = cache_shardings(cstruct, cfg, mesh, rt.batch_axes,
+                             shape.global_batch)
+    if shape.kind == "prefill":
+        if recycled:
+            # the paper's technique: a (1-suffix_frac) prefix is recycled
+            tl = text_len(cfg, shape)
+            suf = max(int(tl * suffix_frac) // 256 * 256, 256)
+            tok_struct = jax.ShapeDtypeStruct((shape.global_batch, suf),
+                                              jnp.int32)
+            start = tl - suf
+        else:
+            tok_struct = specs["tokens"]
+            start = 0
+        has_fe = "frontend" in specs
+
+        if has_fe:
+            def prefill_step(params, tokens, cache, frontend):
+                return prefill(cfg, params, tokens, cache, start_pos=start,
+                               frontend=frontend, window=window, rt=rt)
+            bsh = batch_shardings(cfg, shape, mesh, rt)
+            args = (pstruct, tok_struct, cstruct, specs["frontend"])
+            shards = (pshard, bsh["tokens"], cshard, bsh["frontend"])
+            return prefill_step, args, shards, (None, cshard), (2,)
+
+        def prefill_step(params, tokens, cache):
+            return prefill(cfg, params, tokens, cache, start_pos=start,
+                           window=window, rt=rt)
+        bsh = batch_shardings(cfg, shape, mesh, rt)
+        args = (pstruct, tok_struct, cstruct)
+        shards = (pshard, bsh["tokens"], cshard)
+        return prefill_step, args, shards, (None, cshard), (2,)
+
+    # decode
+    def serve_step(params, token, cache, pos):
+        return decode_step(cfg, params, token, cache, pos, window=window,
+                           rt=rt)
+
+    b = rt.batch_axes if rt.batch_axes else None
+    tshard = NamedSharding(mesh, P(b, None))
+    args = (pstruct, specs["token"], cstruct, specs["pos"])
+    shards = (pshard, tshard, cshard, NamedSharding(mesh, P()))
+    return serve_step, args, shards, (None, cshard), (2,)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            recycled: bool = False, out_dir: str = OUT_DIR,
+            save_hlo: bool = False, seq_parallel: bool = False,
+            moe_fsharded: bool = False, suffix_frac: float = 0.5,
+            kv_quant: bool = False, tag_suffix: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = (f"{arch}__{shape_name}__{mesh_name}"
+           + ("__rec" if recycled else "") + tag_suffix)
+    rt = runtime_for(cfg, shape, mesh, seq_parallel=seq_parallel,
+                     moe_fsharded=moe_fsharded)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "recycled": recycled, "chips": mesh.size, "ok": False}
+    try:
+        fn, args, in_sh, out_sh, donate = build_step(
+            cfg, shape, mesh, rt, recycled=recycled, suffix_frac=suffix_frac,
+            kv_quant=kv_quant)
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0 - rec["lower_s"], 1)
+
+        # --- memory ------------------------------------------------------
+        try:
+            ma = compiled.memory_analysis()
+            mem = {k: int(getattr(ma, k)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes")
+                   if hasattr(ma, k)}
+        except Exception as e:                      # CPU backend limitations
+            mem = {"error": str(e)}
+        rec["memory"] = mem
+        arg_b = mem.get("argument_size_in_bytes", 0)
+        tmp_b = mem.get("temp_size_in_bytes", 0)
+        rec["bytes_per_device"] = arg_b + tmp_b
+        rec["fits_hbm"] = bool(arg_b + tmp_b <= HBM_BYTES)
+
+        # --- cost --------------------------------------------------------
+        try:
+            ca = compiled.cost_analysis() or {}
+        except Exception as e:
+            ca = {"error": str(e)}
+        flops = float(ca.get("flops", 0.0))
+        bytes_acc = float(ca.get("bytes accessed", 0.0))
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float))}
+
+        # --- collectives ---------------------------------------------------
+        trip = max_scan_trip(cfg)
+        hlo = compiled.as_text()
+        colls = parse_collective_bytes(hlo, scan_trip=trip)
+        rec["collectives"] = colls
+        rec["scan_trip_multiplier"] = trip
+        if save_hlo:
+            import os as _os
+            _os.makedirs(out_dir, exist_ok=True)
+            with open(f"{out_dir}/{tag}.hlo.txt", "w") as f:
+                f.write(hlo)
+
+        # --- roofline -----------------------------------------------------
+        mf = model_flops(cfg, shape)
+        if recycled and shape.kind == "prefill":
+            mf *= suffix_frac               # only suffix tokens recomputed
+        terms = RooflineTerms(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=mesh.size,
+            hlo_flops=flops, hlo_bytes=bytes_acc,
+            collective_bytes=colls.get("total", 0.0) / mesh.size,
+            model_flops=mf,
+        ).finalize()
+        rec["roofline"] = terms.as_dict()
+        rec["ok"] = True
+    except Exception:
+        rec["error"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+
+    import os as _os
+    _os.makedirs(out_dir, exist_ok=True)
+    with open(f"{out_dir}/{tag}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK " if rec["ok"] else "FAIL"
+    print(f"[{status}] {tag}  ({rec['total_s']}s)", flush=True)
+    if not rec["ok"]:
+        print(rec["error"].splitlines()[-1], flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--recycled", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--moe-fsharded", action="store_true")
+    ap.add_argument("--suffix-frac", type=float, default=0.5)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--tag-suffix", default="")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in pairs:
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        tag = f"{a}__{s}__{mesh_name}" + ("__rec" if args.recycled else "")
+        tag += args.tag_suffix
+        if args.skip_existing:
+            import os as _os
+            p = f"{args.out_dir}/{tag}.json"
+            if _os.path.exists(p):
+                with open(p) as f:
+                    if json.load(f).get("ok"):
+                        print(f"[skip] {tag}", flush=True)
+                        continue
+        results.append(run_one(a, s, multi_pod=args.multi_pod,
+                               recycled=args.recycled, out_dir=args.out_dir,
+                               save_hlo=args.save_hlo,
+                               seq_parallel=args.seq_parallel,
+                               moe_fsharded=args.moe_fsharded,
+                               suffix_frac=args.suffix_frac,
+                               kv_quant=args.kv_int8,
+                               tag_suffix=args.tag_suffix))
+    ok = sum(r["ok"] for r in results)
+    print(f"done: {ok}/{len(results)} ok", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh definition.
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS for 512 host devices *before* any
+jax import; tests and benches see the real single CPU device).
+
+  single pod:  16 x 16            axes (data, model)   = 256 chips (v5e pod)
+  multi pod:   2 x 16 x 16        axes (pod, data, model) = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~; used for the collective term)
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB

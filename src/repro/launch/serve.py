@@ -1,0 +1,79 @@
+"""Serving launcher: build a recycling engine and run the paper's two-phase
+evaluation (cache construction + baseline vs recycled), or an interactive
+request loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch dialogpt-medium \
+      --reduced --max-new 16 [--partial] [--compare]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.core import HashEmbedder
+from repro.core.metrics import RunMetrics, summarize_runs
+from repro.data.pipeline import paper_prompt_sets
+from repro.models import init_params
+from repro.serving import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dialogpt-medium")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--partial", action="store_true",
+                    help="enable beyond-paper block-radix partial reuse")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--compare", action="store_true",
+                    help="run the paper's baseline-vs-recycled table")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = Engine(cfg, params, max_new_tokens=args.max_new,
+                 enable_partial=args.partial, block_size=args.block_size)
+
+    cache_prompts, test_prompts = paper_prompt_sets("data")
+    print(f"building KV cache for {len(cache_prompts)} prompts ...")
+    eng.precache(cache_prompts)
+    print(f"store: {len(eng.recycler.store)} entries, "
+          f"{eng.recycler.store.total_bytes / 1e6:.1f} MB host bytes")
+
+    if not args.compare:
+        for p in test_prompts:
+            r = eng.generate(p)
+            print(f"[{r.mode:13s}] reuse={r.reuse_depth:3d}/{r.prompt_tokens}"
+                  f" {r.latency_s*1e3:7.1f} ms  sim={r.prompt_similarity:.2f}"
+                  f"  '{p[:40]}...'")
+        return
+
+    # paper §4.4 two-phase comparison with warmup (jit compile excluded)
+    for p in test_prompts:
+        eng.warmup(p, use_recycling=False)
+        eng.warmup(p)
+    base, rec = [], []
+    for p in test_prompts:
+        b = eng.generate(p, use_recycling=False)
+        r = eng.generate(p)
+        base.append(RunMetrics(p, "baseline", b.latency_s, b.prompt_tokens,
+                               b.gen_tokens, output_text=b.text))
+        rec.append(RunMetrics(p, "recycled", r.latency_s, r.prompt_tokens,
+                              r.gen_tokens, r.reuse_depth, r.cache_hit,
+                              r.prompt_similarity, r.mode, r.text))
+        sp = (b.latency_s - r.latency_s) / b.latency_s * 100
+        print(f"reuse={r.reuse_depth:3d}/{r.prompt_tokens:3d} "
+              f"base={b.latency_s*1e3:7.1f}ms rec={r.latency_s*1e3:7.1f}ms "
+              f"speedup={sp:5.1f}%  same_output={b.text == r.text}")
+    table = summarize_runs(base, rec, embedder=HashEmbedder())
+    print(json.dumps(table, indent=1))
+
+
+if __name__ == "__main__":
+    main()

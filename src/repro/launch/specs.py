@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+``input_specs`` builds weak-type-correct, shardable specs with zero device
+allocation — the dry-run lowers against these.  The same shape logic is the
+single source of truth for what each step function consumes:
+
+  train_4k     train_step(params, opt_state, batch)
+  prefill_32k  prefill_step(params, tokens, cache[, frontend])
+  decode_*     serve_step(params, token, cache, pos)   # ONE new token
+
+VLM note: ``seq_len`` budgets the whole sequence; 256 positions are patch
+embeddings, the rest text.  Whisper note: decoder consumes seq_len text
+tokens; the (stub) audio frontend contributes 1500 encoder frames.
+Long-context note: archs with ``sliding_window`` switch their decode cache
+to a ring of that size; SSM/hybrid archs carry O(1)/windowed state natively.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, InputShape
+from repro.models.cache import cache_struct
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Ring-buffer window for attention layers at this shape (0 = full)."""
+    if shape.long_context and cfg.sliding_window:
+        return cfg.sliding_window
+    return 0
+
+
+def text_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Text-token count: VLM reserves patch positions out of seq_len."""
+    if cfg.frontend is not None and not cfg.frontend.cross_attention:
+        return shape.seq_len - cfg.frontend.num_tokens
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                kv_quant: bool = False) -> Dict[str, Any]:
+    B = shape.global_batch
+    dtype = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, text_len(cfg, shape)), jnp.int32)}
+        if cfg.frontend is not None:
+            f = cfg.frontend
+            batch["frontend"] = sds((B, f.num_tokens, f.embed_dim), dtype)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, text_len(cfg, shape)), jnp.int32),
+               "cache": cache_struct(cfg, B, shape.seq_len,
+                                     window=decode_window(cfg, shape),
+                                     dtype=dtype, kv_quant=kv_quant)}
+        if cfg.frontend is not None:
+            f = cfg.frontend
+            out["frontend"] = sds((B, f.num_tokens, f.embed_dim), dtype)
+        return out
+    # decode: one token against a seq_len-deep cache
+    return {
+        "token": sds((B, 1), jnp.int32),
+        "cache": cache_struct(cfg, B, shape.seq_len,
+                              window=decode_window(cfg, shape), dtype=dtype,
+                              kv_quant=kv_quant),
+        "pos": sds((), jnp.int32),
+    }

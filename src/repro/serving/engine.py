@@ -1,0 +1,178 @@
+"""Serving engine: tokenizer -> recycler -> prefill(suffix) -> decode loop.
+
+This is the paper's evaluation loop (§4.4) as a production surface:
+
+  baseline run    engine.generate(p, use_recycling=False)
+  cache build     engine.precache(prompts)          # §4.4 "Cache Construction"
+  recycled run    engine.generate(p)                # retrieval + prefix test
+                                                    # + past_key_values reuse
+
+plus what the paper doesn't have: capacity-bucketed cache allocation (stable
+jit signatures), automatic admission of finished generations (multi-turn
+prefix reuse), block-radix partial hits, and byte-budget LRU eviction.
+
+Latency accounting mirrors §4.5: wall time around the whole generate call
+with ``block_until_ready`` as the synchronize analogue, reuse depth k, and
+prompt similarity from the retrieval stage.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import HashEmbedder, Recycler
+from repro.core.kvstore import to_host
+from repro.core.recycler import grow_capacity, is_trimmable, trim_to_depth
+from repro.data.tokenizer import ByteTokenizer, EOS
+from repro.models import decode_step, init_cache, prefill
+from repro.runtime import Runtime, LOCAL
+from repro.serving.sampling import greedy
+
+
+@dataclass
+class GenResult:
+    text: str
+    token_ids: np.ndarray
+    latency_s: float
+    prompt_tokens: int
+    gen_tokens: int
+    reuse_depth: int = 0
+    cache_hit: bool = False
+    mode: str = "baseline"
+    prompt_similarity: float = 0.0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 tokenizer: Optional[ByteTokenizer] = None,
+                 recycler: Optional[Recycler] = None,
+                 enable_partial: bool = False,
+                 block_size: int = 64,
+                 max_new_tokens: int = 32,
+                 window: int = 0,
+                 compress_host_cache: bool = False,
+                 kv_quant: bool = False,
+                 rt: Runtime = LOCAL):
+        self.cfg = cfg
+        self.params = params
+        self.tok = tokenizer or ByteTokenizer(cfg.vocab_size)
+        self.recycler = recycler or Recycler(
+            embedder=HashEmbedder(), enable_partial=enable_partial,
+            block_size=block_size, compress=compress_host_cache)
+        self.block = block_size
+        self.max_new = max_new_tokens
+        self.window = window
+        self.kv_quant = kv_quant
+        self.rt = rt
+        self._prefill_fn = jax.jit(
+            lambda p, t, c, sp: prefill(cfg, p, t, c, start_pos=sp,
+                                        window=window, rt=rt))
+        self._decode_fn = jax.jit(
+            lambda p, t, c, pos: decode_step(cfg, p, t, c, pos,
+                                             window=window, rt=rt))
+        self.stats = {"requests": 0, "hits": 0, "tokens_reused": 0,
+                      "tokens_prefilled": 0}
+
+    # ------------------------------------------------------------------
+    def _capacity(self, n: int) -> int:
+        return ((n + self.block - 1) // self.block) * self.block
+
+    def _make_cache(self, capacity: int):
+        return init_cache(self.cfg, 1, capacity, window=self.window,
+                          dtype=jnp.dtype(self.cfg.dtype),
+                          kv_quant=self.kv_quant)
+
+    # ------------------------------------------------------------------
+    def precache(self, prompts, lengths: Optional[Dict[str, int]] = None):
+        """Paper §4.4 cache construction: one forward pass per cache prompt
+        with caching enabled; serialize to host and index by embedding."""
+        for p in prompts:
+            ids = self.tok.encode(p)
+            cap = self._capacity(len(ids) + self.max_new)
+            cache = self._make_cache(cap)
+            _, cache = self._prefill_fn(self.params, jnp.asarray(ids)[None],
+                                        cache, 0)
+            self.recycler.admit(p, ids, to_host(cache), len(ids), cap)
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: str, *, max_new_tokens: Optional[int] = None,
+                 use_recycling: bool = True, admit: bool = False,
+                 stop_at_eos: bool = True) -> GenResult:
+        max_new = max_new_tokens or self.max_new
+        t0 = time.perf_counter()
+        ids = self.tok.encode(prompt)
+        m = len(ids)
+        cap = self._capacity(m + max_new)
+
+        depth, hit, mode, sim = 0, False, "baseline", 0.0
+        if use_recycling:
+            res = self.recycler.lookup(prompt, ids)
+            sim = res.similarity
+            if res.hit:
+                depth, hit, mode = res.reuse_depth, True, res.mode
+                host_cache = grow_capacity(res.cache, cap)
+                cache = jax.tree.map(jnp.asarray, host_cache)
+            else:
+                mode = "miss"
+        if not hit:
+            cache = self._make_cache(cap)
+
+        suffix = jnp.asarray(ids[depth:])[None]
+        logits, cache = self._prefill_fn(self.params, suffix,
+                                         cache, depth)
+        out_ids = []
+        tok = greedy(logits)[:, None]
+        pos = m
+        for _ in range(max_new):
+            out_ids.append(int(tok[0, 0]))
+            if stop_at_eos and out_ids[-1] == EOS:
+                break
+            logits, cache = self._decode_fn(self.params, tok, cache,
+                                            jnp.int32(pos))
+            tok = greedy(logits)[:, None]
+            pos += 1
+        jax.block_until_ready(logits)
+        latency = time.perf_counter() - t0
+
+        all_ids = np.concatenate([ids, np.asarray(out_ids, np.int32)])
+        if admit:
+            host = to_host(cache)
+            if is_trimmable(host):
+                # admit at PROMPT depth: future prompts extending this one
+                # (without the generated reply) still pass the exact-prefix
+                # test; generated positions are masked out.
+                self.recycler.admit(prompt, ids, trim_to_depth(host, m),
+                                    m, cap)
+            else:
+                # recurrent state can't rewind: admit the full trajectory
+                self.recycler.admit(prompt, all_ids, host, len(all_ids), cap)
+
+        self.stats["requests"] += 1
+        self.stats["hits"] += int(hit)
+        self.stats["tokens_reused"] += depth
+        self.stats["tokens_prefilled"] += m - depth
+        return GenResult(
+            text=self.tok.decode(out_ids),
+            token_ids=all_ids,
+            latency_s=latency,
+            prompt_tokens=m,
+            gen_tokens=len(out_ids),
+            reuse_depth=depth,
+            cache_hit=hit,
+            mode=mode if use_recycling else "baseline",
+            prompt_similarity=sim,
+        )
+
+    # ------------------------------------------------------------------
+    def warmup(self, prompt: str, *, max_new_tokens: Optional[int] = None,
+               use_recycling: bool = True) -> None:
+        """Compile the shapes a subsequent timed call will use (the paper's
+        T4 runs have no compile step; jit does — exclude it from latency)."""
+        self.generate(prompt, max_new_tokens=max_new_tokens,
+                      use_recycling=use_recycling, admit=False)

@@ -1,0 +1,20 @@
+"""Token sampling: deterministic greedy (the paper's do_sample=False) plus
+temperature / top-k for the examples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_logits(logits, rng, *, temperature: float = 1.0, top_k: int = 0):
+    if temperature <= 0.0:
+        return greedy(logits)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        logits = jnp.where(logits < vals[..., -1:], -jnp.inf, logits)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)

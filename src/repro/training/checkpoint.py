@@ -1,0 +1,41 @@
+"""Checkpointing: pytree <-> npz with '/'-joined paths (same layout as the
+host KV store serialization, so tooling can inspect both)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.kvstore import flatten_cache, unflatten_cache
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    extra: Dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), params)
+    np.savez(os.path.join(path, "params.npz"), **flatten_cache(host))
+    if opt_state is not None:
+        tree = {"step": opt_state.step, "m": opt_state.m, "v": opt_state.v}
+        host_o = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        np.savez(os.path.join(path, "opt.npz"), **flatten_cache(host_o))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": int(step), **(extra or {})}, f)
+
+
+def load_checkpoint(path: str, with_opt: bool = False
+                    ) -> Tuple[Any, Any, Dict]:
+    with np.load(os.path.join(path, "params.npz")) as z:
+        params = unflatten_cache({k: z[k] for k in z.files})
+    opt = None
+    opt_path = os.path.join(path, "opt.npz")
+    if with_opt and os.path.exists(opt_path):
+        from repro.training.optimizer import AdamWState
+        with np.load(opt_path) as z:
+            tree = unflatten_cache({k: z[k] for k in z.files})
+        opt = AdamWState(tree["step"], tree["m"], tree["v"])
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return params, opt, meta

@@ -1,0 +1,58 @@
+"""Training loop: jit'd (optionally pjit-sharded) train step + driver.
+
+``make_train_step`` closes over config/runtime and returns a donated-state
+step function; the launcher supplies in/out shardings for the production
+mesh (repro.launch.train), while examples run it on CPU unsharded.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import train_loss
+from repro.runtime import Runtime, LOCAL
+from repro.training.optimizer import adamw_init, adamw_update, cosine_lr
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime = LOCAL, *,
+                    lr=3e-4, warmup: int = 100, total_steps: int = 1000,
+                    jit: bool = True):
+    schedule = cosine_lr(lr, warmup, total_steps) if not callable(lr) else lr
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: train_loss(cfg, p, batch, rt), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, schedule)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    if jit:
+        step = jax.jit(step, donate_argnums=(0, 1))
+    return step
+
+
+def train(cfg: ModelConfig, params, batches: Iterable[Dict], *,
+          steps: int, rt: Runtime = LOCAL, lr=3e-4, warmup: int = 100,
+          log_every: int = 10, callback: Optional[Callable] = None):
+    """Simple driver: returns (params, opt_state, history)."""
+    opt_state = adamw_init(params)
+    step_fn = make_train_step(cfg, rt, lr=lr, warmup=warmup,
+                              total_steps=steps)
+    history = []
+    it = iter(batches)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(m)
+    return params, opt_state, history

@@ -1,0 +1,79 @@
+"""Config registry: exact assigned dims, reduced-variant invariants."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_configs
+from repro.config import INPUT_SHAPES
+
+
+def test_all_assigned_archs_present():
+    assert len(ASSIGNED_ARCHS) == 10
+    for a in ASSIGNED_ARCHS:
+        assert get_config(a).name == a
+
+
+def test_input_shapes():
+    s = INPUT_SHAPES
+    assert s["train_4k"].seq_len == 4096 and s["train_4k"].global_batch == 256
+    assert s["prefill_32k"].seq_len == 32768 and s["prefill_32k"].global_batch == 32
+    assert s["decode_32k"].seq_len == 32768 and s["decode_32k"].global_batch == 128
+    assert s["long_500k"].seq_len == 524288 and s["long_500k"].global_batch == 1
+    assert s["long_500k"].long_context
+
+
+EXACT = {
+    "whisper-base": dict(num_layers=6, d_model=512, num_heads=8,
+                         num_kv_heads=8, d_ff=2048, vocab_size=51865),
+    "qwen2.5-3b": dict(num_layers=36, d_model=2048, num_heads=16,
+                       num_kv_heads=2, d_ff=11008, vocab_size=151936),
+    "recurrentgemma-9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                              num_kv_heads=1, d_ff=12288, vocab_size=256000),
+    "deepseek-v2-236b": dict(num_layers=60, d_model=5120, num_heads=128,
+                             d_ff=1536, vocab_size=102400),
+    "qwen1.5-32b": dict(num_layers=64, d_model=5120, num_heads=40,
+                        num_kv_heads=40, d_ff=27392, vocab_size=152064),
+    "rwkv6-3b": dict(num_layers=32, d_model=2560, d_ff=8960,
+                     vocab_size=65536),
+    "qwen3-1.7b": dict(num_layers=28, d_model=2048, num_heads=16,
+                       num_kv_heads=8, d_ff=6144, vocab_size=151936),
+    "command-r-35b": dict(num_layers=40, d_model=8192, num_heads=64,
+                          num_kv_heads=8, d_ff=22528, vocab_size=256000),
+    "internvl2-76b": dict(num_layers=80, d_model=8192, num_heads=64,
+                          num_kv_heads=8, d_ff=28672, vocab_size=128256),
+    "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                            num_kv_heads=8, d_ff=2048, vocab_size=163840),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXACT))
+def test_exact_assigned_dims(arch):
+    cfg = get_config(arch)
+    for k, v in EXACT[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+
+
+def test_moe_configs():
+    ds = get_config("deepseek-v2-236b")
+    assert ds.moe.num_experts == 160 and ds.moe.top_k == 6
+    assert ds.moe.num_shared_experts == 2
+    assert ds.mla.kv_lora_rank == 512
+    k2 = get_config("kimi-k2-1t-a32b")
+    assert k2.moe.num_experts == 384 and k2.moe.top_k == 8
+    # ~1T total, ~32B active
+    assert 0.9e12 < k2.param_count() < 1.15e12
+    assert 25e9 < k2.active_param_count() < 40e9
+
+
+def test_hybrid_pattern():
+    rg = get_config("recurrentgemma-9b")
+    assert rg.hybrid.pattern == ("rglru", "rglru", "local_attn")
+    assert rg.hybrid.local_window == 2048
+
+
+@pytest.mark.parametrize("arch", sorted(list_configs()))
+def test_reduced_invariants(arch):
+    r = get_config(arch).reduced()
+    blk = len(r.hybrid.pattern) if r.hybrid else 2
+    assert r.num_layers <= max(2, blk)
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.num_experts <= 4

@@ -1,0 +1,151 @@
+"""Unit tests for the recycling core: store, index, recycler policies."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import (EmbeddingIndex, HashEmbedder, HostKVStore,
+                        RadixPrefixCache, Recycler)
+from repro.core.recycler import (common_prefix_len, grow_capacity,
+                                 is_trimmable, trim_to_depth)
+
+
+def _attn_cache(n_slots=16, filled=8):
+    sp = np.where(np.arange(n_slots) < filled, np.arange(n_slots), -1)
+    return {"seg0": {"k": np.random.randn(2, 1, n_slots, 2, 4).astype(np.float32),
+                     "v": np.random.randn(2, 1, n_slots, 2, 4).astype(np.float32),
+                     "slot_pos": np.tile(sp, (2, 1)).astype(np.int32)}}
+
+
+def _state_cache():
+    return {"seg0": {"wkv": np.zeros((2, 1, 2, 4, 4), np.float32),
+                     "shift_t": np.zeros((2, 1, 8), np.float32),
+                     "shift_c": np.zeros((2, 1, 8), np.float32)}}
+
+
+class TestEmbedder:
+    def test_deterministic(self):
+        e = HashEmbedder()
+        a = e.encode("hello world")
+        np.testing.assert_array_equal(a, e.encode("hello world"))
+        assert abs(np.linalg.norm(a) - 1.0) < 1e-5
+
+    def test_extended_prefix_similar(self):
+        e = HashEmbedder()
+        base = e.encode("Explain machine learning in simple terms.")
+        ext = e.encode("Explain machine learning in simple terms. "
+                       "Give an example application.")
+        other = e.encode("How do airplanes fly?")
+        assert float(base @ ext) > 0.6
+        assert float(base @ other) < 0.3
+
+
+class TestIndex:
+    def test_search_and_remove(self):
+        e = HashEmbedder(dim=64)
+        idx = EmbeddingIndex(64)
+        texts = ["alpha beta", "gamma delta", "alpha beta gamma"]
+        for i, t in enumerate(texts):
+            idx.add(i, e.encode(t))
+        top = idx.search(e.encode("alpha beta"), k=2)
+        assert top[0][0] == 0
+        idx.remove(0)
+        top = idx.search(e.encode("alpha beta"), k=1)
+        assert top[0][0] == 2
+
+
+class TestStore:
+    def test_lru_eviction_budget(self):
+        cache = _attn_cache()
+        entry_bytes = sum(a.nbytes for seg in cache.values()
+                          for a in seg.values())
+        store = HostKVStore(max_bytes=int(entry_bytes * 2.5))
+        for i in range(4):
+            store.put(f"p{i}", np.arange(6), _attn_cache(), 6)
+            store.evict_to_budget()
+        assert len(store) == 2
+        assert store.total_bytes <= store.max_bytes
+        assert store.evictions == 2
+
+    def test_disk_roundtrip(self):
+        store = HostKVStore()
+        e = store.put("prompt a", np.arange(8), _attn_cache(), 8, 16)
+        with tempfile.TemporaryDirectory() as d:
+            store.save_dir(d)
+            loaded = HostKVStore.load_dir(d)
+        e2 = loaded.get(e.entry_id)
+        assert e2.text == "prompt a" and e2.length == 8
+        np.testing.assert_array_equal(
+            e2.cache["seg0"]["k"], e.cache["seg0"]["k"])
+
+
+class TestCacheSurgery:
+    def test_trimmable(self):
+        assert is_trimmable(_attn_cache())
+        assert not is_trimmable(_state_cache())
+
+    def test_trim_masks_slots(self):
+        t = trim_to_depth(_attn_cache(filled=8), 5)
+        sp = t["seg0"]["slot_pos"]
+        assert (sp[:, :5] >= 0).all() and (sp[:, 5:] == -1).all()
+
+    def test_grow_capacity(self):
+        g = grow_capacity(_attn_cache(n_slots=16), 32)
+        assert g["seg0"]["k"].shape[2] == 32
+        assert (g["seg0"]["slot_pos"][:, 16:] == -1).all()
+
+    def test_common_prefix_len(self):
+        assert common_prefix_len([1, 2, 3], [1, 2, 3, 4]) == 3
+        assert common_prefix_len([1, 2, 9], [1, 2, 3, 4]) == 2
+        assert common_prefix_len([], [1]) == 0
+
+
+class TestRecycler:
+    def test_exact_prefix_hit(self):
+        r = Recycler()
+        toks = np.arange(10)
+        r.admit("what is the capital of france?", toks, _attn_cache(), 10)
+        res = r.lookup("what is the capital of france? and italy?",
+                       np.concatenate([toks, [11, 12, 13]]))
+        assert res.hit and res.mode == "exact_prefix" and res.reuse_depth == 10
+
+    def test_identical_prompt_leaves_one_token(self):
+        r = Recycler()
+        toks = np.arange(10)
+        r.admit("same prompt", toks, _attn_cache(), 10)
+        res = r.lookup("same prompt", toks)
+        assert res.hit and res.reuse_depth == 9
+
+    def test_recurrent_state_requires_full_prefix(self):
+        r = Recycler()
+        toks = np.arange(10)
+        r.admit("state prompt xyz", toks, _state_cache(), 10)
+        # identical prompt: state can't rewind to m-1 -> miss
+        res = r.lookup("state prompt xyz", toks)
+        assert not res.hit
+        # strict extension: full state reuse OK
+        res2 = r.lookup("state prompt xyz etc",
+                        np.concatenate([toks, [11, 12]]))
+        assert res2.hit and res2.reuse_depth == 10
+
+    def test_partial_block_hit(self):
+        r = Recycler(enable_partial=True, block_size=4)
+        r.admit("p", np.arange(12), _attn_cache(filled=12), 12)
+        res = r.lookup("q", np.asarray([0, 1, 2, 3, 4, 5, 99, 98, 97]))
+        assert res.hit and res.mode == "partial_block" and res.reuse_depth == 4
+        sp = res.cache["seg0"]["slot_pos"]
+        assert (sp[:, 4:] == -1).all()      # trimmed beyond reuse depth
+
+    def test_eviction_reaches_index_and_radix(self):
+        cache = _attn_cache()
+        entry_bytes = sum(a.nbytes for seg in cache.values()
+                          for a in seg.values())
+        r = Recycler(HostKVStore(max_bytes=int(entry_bytes * 1.5)),
+                     enable_partial=True, block_size=4)
+        e0 = r.admit("first prompt", np.arange(8), _attn_cache(), 8)
+        e1 = r.admit("second prompt", np.arange(100, 108), _attn_cache(), 8)
+        assert e0.entry_id not in r.store          # evicted
+        assert e0.entry_id not in r.radix
+        res = r.lookup("first prompt zz", np.arange(10))
+        assert not res.hit

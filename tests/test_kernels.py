@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (2, 64, 4, 2, 32), (1, 128, 8, 8, 64), (2, 96, 4, 1, 16),
+    (1, 256, 2, 2, 128),
+])
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, Hkv, D, window, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=32, block_k=32)
+    exp = ref.ref_flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_q_start():
+    """Recycled prefill: q block positions offset by the reuse depth."""
+    B, S, H, D, k0 = 1, 64, 2, 32, 32
+    q = jnp.asarray(RNG.standard_normal((B, S - k0, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, q_start=k0,
+                              block_q=32, block_k=32)
+    exp = ref.ref_flash_attention(q, k, v, causal=True, q_start=k0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,C", [
+    (2, 4, 2, 32, 64), (1, 8, 1, 64, 128), (3, 2, 2, 16, 96),
+])
+@pytest.mark.parametrize("window", [0, 20])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, Hkv, D, C, window, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, 1, H, D)), dtype)
+    kc = jnp.asarray(RNG.standard_normal((B, C, Hkv, D)), dtype)
+    vc = jnp.asarray(RNG.standard_normal((B, C, Hkv, D)), dtype)
+    pos = 70
+    slot_pos = np.full(C, -1, np.int32)
+    for p in range(max(0, pos + 1 - C), pos + 1):
+        slot_pos[p % C] = p
+    sp = jnp.asarray(slot_pos)
+    out = ops.decode_attention(q, kc, vc, sp, jnp.int32(pos), window=window,
+                               block_k=32)
+    exp = ref.ref_decode_attention(q, kc, vc, sp, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_empty_slots():
+    """Half-filled cache: empty slots (-1) are masked out."""
+    B, H, D, C = 1, 2, 16, 64
+    q = jnp.asarray(RNG.standard_normal((B, 1, H, D)), jnp.float32)
+    kc = jnp.asarray(RNG.standard_normal((B, C, H, D)), jnp.float32)
+    vc = jnp.asarray(RNG.standard_normal((B, C, H, D)), jnp.float32)
+    sp = jnp.asarray(np.where(np.arange(C) < 20, np.arange(C), -1), jnp.int32)
+    out = ops.decode_attention(q, kc, vc, sp, jnp.int32(19), block_k=16)
+    exp = ref.ref_decode_attention(q, kc, vc, sp, 19)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,D", [(2, 64, 2, 16), (1, 48, 4, 32),
+                                     (1, 33, 1, 64)])
+def test_rwkv6_wkv(B, S, H, D):
+    r = jnp.asarray(RNG.standard_normal((B, S, H, D)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, D)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, D)) * 0.5, jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.7, 0.999, (B, S, H, D)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, D)) * 0.5, jnp.float32)
+    s0 = jnp.asarray(RNG.standard_normal((B, H, D, D)) * 0.1, jnp.float32)
+    y, sT = ops.rwkv6_wkv(r, k, v, w, u, s0, chunk=16)
+    ye, sTe = ref.ref_rwkv6_wkv(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sTe),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_wkv_state_continuity():
+    """Two chunked calls == one long call (state carry across calls)."""
+    B, S, H, D = 1, 64, 2, 16
+    r, k, v = (jnp.asarray(RNG.standard_normal((B, S, H, D)) * 0.5,
+                           jnp.float32) for _ in range(3))
+    w = jnp.asarray(RNG.uniform(0.8, 0.999, (B, S, H, D)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, D)) * 0.5, jnp.float32)
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    y_all, s_all = ops.rwkv6_wkv(r, k, v, w, u, s0)
+    h = S // 2
+    y1, s1 = ops.rwkv6_wkv(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, s0)
+    y2, s2 = ops.rwkv6_wkv(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s1)
+    np.testing.assert_allclose(np.asarray(y_all[:, h:]), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_all), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,W", [(2, 64, 32), (1, 48, 128), (3, 37, 16)])
+def test_rglru_scan(B, S, W):
+    a = jnp.asarray(RNG.uniform(0.2, 0.999, (B, S, W)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((B, S, W)), jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((B, W)), jnp.float32)
+    y, hT = ops.rglru_scan(a, b, h0, chunk=16, block_w=16)
+    ye, hTe = ref.ref_rglru_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTe),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rglru_scan_state_continuity():
+    B, S, W = 1, 64, 32
+    a = jnp.asarray(RNG.uniform(0.5, 0.999, (B, S, W)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((B, S, W)), jnp.float32)
+    h0 = jnp.zeros((B, W), jnp.float32)
+    y_all, h_all = ops.rglru_scan(a, b, h0)
+    h = S // 2
+    _, h1 = ops.rglru_scan(a[:, :h], b[:, :h], h0)
+    y2, h2 = ops.rglru_scan(a[:, h:], b[:, h:], h1)
+    np.testing.assert_allclose(np.asarray(y_all[:, h:]), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_all), np.asarray(h2),
+                               rtol=1e-5, atol=1e-5)

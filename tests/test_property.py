@@ -1,0 +1,98 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.radix import RadixPrefixCache
+from repro.core.recycler import common_prefix_len, trim_to_depth
+from repro.data.tokenizer import ByteTokenizer
+
+tokens_st = st.lists(st.integers(0, 50), min_size=0, max_size=40)
+
+
+class TestRadixInvariants:
+    @given(st.lists(tokens_st, min_size=1, max_size=8), tokens_st,
+           st.integers(1, 5))
+    @settings(max_examples=200, deadline=None)
+    def test_lookup_is_true_block_prefix(self, corpus, query, block):
+        """I1/I2: lookup depth is block-aligned, <= len(query), the returned
+        entry really covers that prefix, and depth is maximal."""
+        r = RadixPrefixCache(block_size=block)
+        corpus = [np.asarray(c, np.int32) for c in corpus]
+        for i, c in enumerate(corpus):
+            r.insert(c, i)
+        q = np.asarray(query, np.int32)
+        depth, eid = r.lookup(q)
+        assert depth % block == 0 and depth <= len(q)
+        if eid is not None:
+            assert depth > 0
+            assert common_prefix_len(q, corpus[eid]) >= depth
+        # maximality over the corpus
+        best = 0
+        for c in corpus:
+            lcp = common_prefix_len(q, c)
+            best = max(best, (min(lcp, (len(c) // block) * block)
+                              // block) * block)
+        assert depth == best
+
+    @given(st.lists(tokens_st, min_size=2, max_size=6), st.data())
+    @settings(max_examples=100, deadline=None)
+    def test_forget_makes_unreachable(self, corpus, data):
+        """I3: forgotten entries never serve a hit."""
+        r = RadixPrefixCache(block_size=2)
+        for i, c in enumerate(corpus):
+            r.insert(np.asarray(c, np.int32), i)
+        victim = data.draw(st.integers(0, len(corpus) - 1))
+        r.forget_entry(victim)
+        for c in corpus:
+            depth, eid = r.lookup(np.asarray(c, np.int32))
+            assert eid != victim
+
+    @given(tokens_st, st.integers(1, 4))
+    @settings(max_examples=100, deadline=None)
+    def test_self_lookup(self, toks, block):
+        """Inserting t then looking up t finds floor(len/block)*block."""
+        r = RadixPrefixCache(block_size=block)
+        t = np.asarray(toks, np.int32)
+        r.insert(t, 0)
+        depth, eid = r.lookup(t)
+        assert depth == (len(t) // block) * block
+        assert (eid == 0) == (depth > 0)
+
+
+class TestPrefixProperties:
+    @given(tokens_st, tokens_st)
+    @settings(max_examples=200, deadline=None)
+    def test_common_prefix_len_definition(self, a, b):
+        r = common_prefix_len(a, b)
+        assert a[:r] == b[:r]
+        if r < min(len(a), len(b)):
+            assert a[r] != b[r]
+
+    @given(st.text(max_size=60), st.text(max_size=30))
+    @settings(max_examples=200, deadline=None)
+    def test_tokenizer_prefix_consistency(self, base, ext):
+        """Text prefix => token prefix (what makes the paper's exact prefix
+        test equivalent to a text-prefix test)."""
+        tok = ByteTokenizer(512)
+        a = tok.encode(base)
+        ab = tok.encode(base + ext)
+        assert common_prefix_len(a, ab) == len(a)
+
+    @given(st.text(max_size=60))
+    @settings(max_examples=100, deadline=None)
+    def test_tokenizer_deterministic(self, text):
+        tok = ByteTokenizer(1024)
+        np.testing.assert_array_equal(tok.encode(text), tok.encode(text))
+
+
+class TestTrimProperty:
+    @given(st.integers(0, 20), st.integers(1, 20))
+    @settings(max_examples=50, deadline=None)
+    def test_trim_never_exposes_deeper_positions(self, depth, filled):
+        sp = np.where(np.arange(20) < filled, np.arange(20), -1)
+        cache = {"k": np.zeros((1, 20, 1, 2)), "slot_pos": sp.astype(np.int32)}
+        t = trim_to_depth(cache, depth)
+        assert (t["slot_pos"] < depth).all()
+        # positions below depth that existed are preserved
+        keep = (sp >= 0) & (sp < depth)
+        np.testing.assert_array_equal(t["slot_pos"][keep], sp[keep])
