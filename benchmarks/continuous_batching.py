@@ -1,0 +1,125 @@
+# Continuous batching vs serial FIFO: tokens/s on a mixed workload.
+"""Throughput benchmark for the slot-pool decode engine.
+
+  PYTHONPATH=src python benchmarks/continuous_batching.py
+  PYTHONPATH=src python benchmarks/continuous_batching.py --full --max-new 32
+
+Workload: a fixed mix of recycled exact-prefix hits, partial-block hits and
+cold misses (the three admission modes a production pool sees), served by
+
+  * the serial FIFO scheduler (one generate per request — the seed's path),
+  * the continuous-batching scheduler at batch sizes {1, 4, 8}.
+
+Both paths see identical precached recycler contents.  Each configuration
+runs the workload once untimed (jit warmup — per-suffix-length prefill
+executables plus the one pool decode executable) and once timed.  Reported
+tokens/s counts generated tokens only; the acceptance bar for this PR is
+batch=8 >= 2x serial.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                           Engine, FIFOScheduler)
+
+CACHED = [
+    "the quick brown fox jumps over the lazy dog today",
+    "what is the capital of france and why",
+    "explain machine learning in simple terms please",
+]
+
+
+def workload(n_requests: int):
+    """Round-robin mix: exact hit / partial hit / cold miss."""
+    reqs = []
+    for i in range(n_requests):
+        kind = i % 3
+        if kind == 0:
+            reqs.append(CACHED[i % len(CACHED)] + f" extended {i}")
+        elif kind == 1:
+            base = CACHED[i % len(CACHED)].rsplit(" ", 2)[0]
+            reqs.append(base + f" divergent tail {i}")
+        else:
+            reqs.append(f"cold unseen prompt number {i} with no overlap")
+    return reqs
+
+
+def _run(sched, prompts, max_new):
+    """(seconds, generated_tokens) for one workload pass.  Run twice on the
+    SAME scheduler: the first pass compiles every per-suffix-length prefill
+    executable plus the pool decode step; only the second pass is a fair
+    timing (the paper's T4 runs have no compile step either)."""
+    sched.completed = []
+    for p in prompts:
+        sched.submit(p, max_new_tokens=max_new)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    rejected = [r for r in done if r.result is None]
+    if rejected:
+        print(f"# {len(rejected)} request(s) rejected: {rejected[0].error}")
+    toks = sum(r.result.gen_tokens for r in done if r.result is not None)
+    return dt, toks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 4, 8])
+    ap.add_argument("--capacity", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config("dialogpt-medium")
+    if not args.full:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = workload(args.requests)
+
+    eng = Engine(cfg, params, max_new_tokens=args.max_new, block_size=8,
+                 enable_partial=True)
+    eng.precache(CACHED)
+    serial_sched = FIFOScheduler(eng)
+
+    def timed_best(sched):
+        """Warmup pass, then best of two timed passes (this box is shared;
+        a single pass can eat a CPU-contention spike)."""
+        _run(sched, prompts, args.max_new)                 # warmup compile
+        a = _run(sched, prompts, args.max_new)
+        b = _run(sched, prompts, args.max_new)
+        return min(a, b)
+
+    rows = []
+    dt, toks = timed_best(serial_sched)
+    serial_tps = toks / dt
+    rows.append(("serial_fifo", dt, toks, serial_tps, 1.0))
+
+    for b in args.batches:
+        beng = BatchedEngine(cfg, params, max_batch=b,
+                             capacity=args.capacity,
+                             max_new_tokens=args.max_new, block_size=8,
+                             enable_partial=True)
+        beng.precache(CACHED)
+        sched = ContinuousBatchingScheduler(beng)
+        dt, toks = timed_best(sched)
+        rows.append((f"continuous_b{b}", dt, toks, toks / dt,
+                     (toks / dt) / serial_tps))
+
+    print(f"{'config':<16} {'wall_s':>8} {'gen_tok':>8} "
+          f"{'tok/s':>10} {'speedup':>8}")
+    for name, dt, toks, tps, sp in rows:
+        print(f"{name:<16} {dt:>8.3f} {toks:>8d} {tps:>10.1f} {sp:>7.2f}x")
+    best = max(r[4] for r in rows[1:])
+    print(f"\nbest batched speedup over serial: {best:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

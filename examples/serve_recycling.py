@@ -3,8 +3,11 @@ against a recycling engine, reproducing the paper's full evaluation and the
 beyond-paper partial-prefix mode.
 
     PYTHONPATH=src python examples/serve_recycling.py [--full] [--partial]
+    PYTHONPATH=src python examples/serve_recycling.py --continuous --batch 8
 
 ``--full`` uses the paper's real 345M DialoGPT config (slow on CPU).
+``--continuous`` serves the recycled pass through the continuous-batching
+slot pool instead of serial FIFO and reports the throughput ratio.
 """
 import argparse
 import json
@@ -16,13 +19,18 @@ from repro.core import HashEmbedder
 from repro.core.metrics import RunMetrics, summarize_runs
 from repro.data.pipeline import paper_prompt_sets
 from repro.models import init_params
-from repro.serving import Engine, FIFOScheduler
+from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                           Engine, FIFOScheduler)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--partial", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve the recycled pass on the slot pool")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
 
@@ -30,27 +38,64 @@ def main():
     if not args.full:
         cfg = cfg.reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_new_tokens=args.max_new,
-                    enable_partial=args.partial, block_size=16)
+    if args.continuous:
+        engine = BatchedEngine(cfg, params, max_batch=args.batch,
+                               capacity=args.capacity,
+                               max_new_tokens=args.max_new,
+                               enable_partial=args.partial, block_size=16)
+    else:
+        engine = Engine(cfg, params, max_new_tokens=args.max_new,
+                        enable_partial=args.partial, block_size=16)
 
     cache_prompts, test_prompts = paper_prompt_sets("data")
     engine.precache(cache_prompts)
     print(f"precached {len(engine.recycler.store)} prompts "
           f"({engine.recycler.store.total_bytes/1e6:.1f} MB host KV)")
 
-    # batched requests through the scheduler: baseline pass then recycled
+    # baseline pass stays serial (it is the paper's reference numbers)
     sched = FIFOScheduler(engine, max_batch=4)
     for p in test_prompts:                   # warm compile for both shapes
         engine.warmup(p, use_recycling=False)
         engine.warmup(p)
     for p in test_prompts:
         sched.submit(p, use_recycling=False)
-    baseline_reqs = sched.run()
+    # copy: run() returns the scheduler's own completed list, which the
+    # clear() below would otherwise empty out from under us
+    baseline_reqs = list(sched.run())
     sched.completed.clear()
-    for p in test_prompts:
-        sched.submit(p, admit=True)          # recycled + admit for reuse
-    recycled_reqs = sched.run()
+    if args.continuous:
+        csched = ContinuousBatchingScheduler(engine)
+        # full untimed pass (admit=False): compiles the pool decode step AND
+        # every per-suffix-length prefill the timed pass will dispatch
+        for p in test_prompts:
+            csched.submit(p)
+        csched.run()
+        csched.completed.clear()
+        for k in csched.stats:               # report the timed pass only
+            csched.stats[k] = 0
+        # keep submission order: run() returns requests in COMPLETION order
+        # (early-EOS rows finish first), which would misalign the zip below
+        recycled_reqs = [csched.submit(p, admit=True) for p in test_prompts]
+        csched.run()
+        print(f"continuous batching: {csched.stats['decode_steps']} decode "
+              f"steps for {len(recycled_reqs)} requests, mean occupancy "
+              f"{csched.mean_occupancy():.2f}/{args.batch}")
+        print("NOTE: per-request latency below spans the whole shared batch "
+              "(queue wait included); batching trades it for throughput — "
+              "see benchmarks/continuous_batching.py for tokens/s")
+    else:
+        for p in test_prompts:
+            sched.submit(p, admit=True)      # recycled + admit for reuse
+        recycled_reqs = list(sched.run())
 
+    rejected = [r for r in recycled_reqs if r.result is None]
+    if rejected:                             # e.g. prompt > pool capacity
+        for r in rejected:
+            print(f"rejected: {r.prompt[:40]!r}: {r.error}")
+        keep = {id(r) for r in rejected}
+        baseline_reqs, recycled_reqs = zip(*[
+            (b, r) for b, r in zip(baseline_reqs, recycled_reqs)
+            if id(r) not in keep])
     rows_b = [RunMetrics(r.prompt, "baseline", r.result.latency_s,
                          r.result.prompt_tokens, r.result.gen_tokens,
                          output_text=r.result.text) for r in baseline_reqs]

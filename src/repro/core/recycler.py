@@ -71,8 +71,9 @@ def grow_capacity(cache, new_capacity: int):
             return {k: walk(v, k) for k, v in t.items()}
         if name in _NO_RESIZE or name not in _CAP_AXIS:
             return t
-        ax = _CAP_AXIS[name] % t.ndim if t.ndim >= abs(_CAP_AXIS[name]) else None
-        ax = t.ndim + _CAP_AXIS[name]
+        if t.ndim < abs(_CAP_AXIS[name]):
+            return t                       # leaf too small to hold this axis
+        ax = _CAP_AXIS[name] % t.ndim
         cur = t.shape[ax]
         if cur >= new_capacity:
             return t
@@ -80,6 +81,29 @@ def grow_capacity(cache, new_capacity: int):
         pad[ax] = (0, new_capacity - cur)
         fill = -1 if name == "slot_pos" else 0
         return np.pad(t, pad, constant_values=fill)
+    return walk(cache)
+
+
+def shrink_capacity(cache, new_capacity: int):
+    """Slice attention buffers' slot axis down to new_capacity (host numpy).
+
+    Inverse of grow_capacity, valid only when every surviving slot index is
+    < new_capacity — true for an unwrapped (non-ring) cache whose positions
+    were written at slot == position and whose valid positions are all
+    < new_capacity (e.g. after trim_to_depth(m) with m <= new_capacity)."""
+    def walk(t, name=None):
+        if isinstance(t, dict):
+            return {k: walk(v, k) for k, v in t.items()}
+        if name in _NO_RESIZE or name not in _CAP_AXIS:
+            return t
+        if t.ndim < abs(_CAP_AXIS[name]):
+            return t
+        ax = _CAP_AXIS[name] % t.ndim
+        if t.shape[ax] <= new_capacity:
+            return t
+        sl = [slice(None)] * t.ndim
+        sl[ax] = slice(0, new_capacity)
+        return t[tuple(sl)]
     return walk(cache)
 
 

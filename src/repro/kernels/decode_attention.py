@@ -57,6 +57,89 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
                     / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
 
 
+def _decode_kernel_batched(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
+                           m_scr, l_scr, acc_scr, *, scale, window, bk, nk,
+                           hkv):
+    """Per-row variant: slot_pos and pos are indexed by the batch row this
+    (batch*head) program belongs to, so every slot-pool row is masked by its
+    own request's validity/causality — rows never see each other's slots."""
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (G, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    sp = sp_ref[0]                                    # (bk,) this row's slots
+    pos = pos_ref[pl.program_id(0) // hkv]            # this row's position
+
+    s = q @ k.T * scale                               # (G, bk)
+    ok = (sp >= 0) & (sp <= pos)
+    if window:
+        ok &= sp > pos - window
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_batched(q, k_cache, v_cache, slot_pos, pos, *, window=0,
+                             block_k=256, scale=None, interpret=True):
+    """Continuous-batching decode: q (B,1,H,D); caches (B,C,Hkv,D);
+    slot_pos (B,C) per-row; pos (B,) per-row int32.  Returns (B,1,H,D)."""
+    B, _, H, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale or D ** -0.5
+    bk = min(block_k, C)
+    assert C % bk == 0, (C, bk)
+    nk = C // bk
+
+    qr = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, C, D)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, C, D)
+    pos_arr = pos.astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel_batched, scale=scale,
+                               window=window, bk=bk, nk=nk, hkv=Hkv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk), lambda bh, ki, hkv=Hkv: (bh // hkv, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qr, kr, vr, slot_pos)
+    return out.reshape(B, Hkv, G, D).reshape(B, 1, H, D)
+
+
 def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window=0,
                      block_k=256, scale=None, interpret=True):
     """q: (B,1,H,D); caches (B,C,Hkv,D); slot_pos (C,); pos scalar int32.

@@ -7,6 +7,8 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.decode_attention import (decode_attention_batched
+                                            as _decode_batched)
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
@@ -34,6 +36,17 @@ def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window=0,
         bk //= 2
     return _decode(q, k_cache, v_cache, slot_pos, pos, window=window,
                    block_k=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention_batched(q, k_cache, v_cache, slot_pos, pos, *, window=0,
+                             block_k=256, interpret=True):
+    """Per-row (continuous-batching) decode: slot_pos (B,C), pos (B,)."""
+    bk = min(block_k, k_cache.shape[1])
+    while k_cache.shape[1] % bk:
+        bk //= 2
+    return _decode_batched(q, k_cache, v_cache, slot_pos, pos, window=window,
+                           block_k=bk, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

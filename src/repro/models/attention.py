@@ -79,7 +79,9 @@ def project_qkv(cfg: ModelConfig, p, x, positions, *, rope: bool = True):
 # ---------------------------------------------------------------------------
 def _mask_bias(q_pos, kv_pos, *, causal: bool, window: int):
     """(..., Sq, Skv) additive bias from absolute positions.  kv_pos == -1
-    marks an empty cache slot."""
+    marks an empty cache slot.  Positions may carry a leading batch axis
+    (per-slot pools: q_pos (B, Sq), kv_pos (B, Skv)) — broadcasting yields a
+    per-row (B, Sq, Skv) bias."""
     qp = q_pos[..., :, None]
     kp = kv_pos[..., None, :]
     ok = kp >= 0
@@ -105,7 +107,10 @@ def attend_direct(q, k, v, q_pos, kv_pos, *, causal=True, window=0, scale=None):
     # the convert out of the layer scan; see EXPERIMENTS.md §Perf kimi).
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = scores + _mask_bias(q_pos, kv_pos, causal=causal, window=window)
+    bias = _mask_bias(q_pos, kv_pos, causal=causal, window=window)
+    if bias.ndim == 3:          # per-row positions: align B with scores' B,
+        bias = bias[:, None, None]  # not with the grouped-head axes
+    scores = scores + bias
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -214,22 +219,28 @@ def attend_chunked(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
 # KV cache ops
 # ---------------------------------------------------------------------------
 def init_kv_cache(batch: int, capacity: int, hkv: int, dh: int, dtype,
-                  *, quant: bool = False):
+                  *, quant: bool = False, per_slot: bool = False):
     """Slot-buffer KV cache.  ``quant=True`` stores K/V as int8 with a
     per-(token, head) f32 scale — halves bf16 HBM reads per decode step
-    (the dominant term for big MHA caches; EXPERIMENTS.md §Perf-4)."""
+    (the dominant term for big MHA caches; EXPERIMENTS.md §Perf-4).
+
+    ``per_slot=True`` gives every batch row its own ``slot_pos`` vector
+    (shape (B, C) instead of (C,)) — the layout of the continuous-batching
+    slot pool, where each row holds an independent request at its own
+    decode position."""
+    sp_shape = (batch, capacity) if per_slot else (capacity,)
     if quant:
         return {
             "k": jnp.zeros((batch, capacity, hkv, dh), jnp.int8),
             "v": jnp.zeros((batch, capacity, hkv, dh), jnp.int8),
             "k_scale": jnp.zeros((batch, capacity, hkv), jnp.float32),
             "v_scale": jnp.zeros((batch, capacity, hkv), jnp.float32),
-            "slot_pos": jnp.full((capacity,), -1, jnp.int32),
+            "slot_pos": jnp.full(sp_shape, -1, jnp.int32),
         }
     return {
         "k": jnp.zeros((batch, capacity, hkv, dh), dtype),
         "v": jnp.zeros((batch, capacity, hkv, dh), dtype),
-        "slot_pos": jnp.full((capacity,), -1, jnp.int32),
+        "slot_pos": jnp.full(sp_shape, -1, jnp.int32),
     }
 
 
@@ -280,6 +291,32 @@ def cache_write(cache, k_new, v_new, start_pos):
     }
 
 
+def cache_write_batched(cache, k_new, v_new, pos):
+    """Per-row scatter for the slot pool: row b writes its ``n`` new
+    keys/values at absolute positions [pos[b], pos[b] + n); requires the
+    per-slot layout (``slot_pos`` (B, C)).  Ring-wraps per row."""
+    B, n = k_new.shape[0], k_new.shape[1]
+    C = cache["k"].shape[1]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    p = pos.astype(jnp.int32)[:, None] + jnp.arange(n, dtype=jnp.int32)
+    slots = p % C
+    if is_quant_cache(cache):
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        return {
+            "k": cache["k"].at[rows, slots].set(kq),
+            "v": cache["v"].at[rows, slots].set(vq),
+            "k_scale": cache["k_scale"].at[rows, slots].set(ks),
+            "v_scale": cache["v_scale"].at[rows, slots].set(vs),
+            "slot_pos": cache["slot_pos"].at[rows, slots].set(p),
+        }
+    return {
+        "k": cache["k"].at[rows, slots].set(k_new),
+        "v": cache["v"].at[rows, slots].set(v_new),
+        "slot_pos": cache["slot_pos"].at[rows, slots].set(p),
+    }
+
+
 def attend_cache(cfg: ModelConfig, q, cache, q_pos, *, window=0, rt=None):
     """Attention of q against everything valid in the cache."""
     if is_quant_cache(cache):
@@ -325,7 +362,16 @@ def attn_prefill(cfg: ModelConfig, p, x, *, start_pos=0, cache=None,
 
 
 def attn_decode(cfg: ModelConfig, p, x, cache, pos, *, window=0, rt=None):
-    """One-token decode: x (B, 1, d), absolute position ``pos`` (scalar)."""
+    """One-token decode: x (B, 1, d), absolute position ``pos``.
+
+    ``pos`` scalar: every row is at the same position (single-request path).
+    ``pos`` (B,): per-row positions over a per-slot pool (``slot_pos``
+    (B, C)) — each row attends only to its own row's valid slots, which is
+    what lets a continuous batch mix requests at different depths."""
+    pos = jnp.asarray(pos)
+    if pos.ndim:
+        return _attn_decode_batched(cfg, p, x, cache, pos, window=window,
+                                    rt=rt)
     positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
     q, k, v = project_qkv(cfg, p, x, positions)
     cache = cache_write(cache, k, v, positions[0])
@@ -338,6 +384,25 @@ def attn_decode(cfg: ModelConfig, p, x, cache, pos, *, window=0, rt=None):
             kc, vc = cache["k"], cache["v"]
         out = attend_direct(q, kc, vc, positions,
                             cache["slot_pos"], causal=True, window=window)
+    out = out.reshape(x.shape[0], 1, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache
+
+
+def _attn_decode_batched(cfg: ModelConfig, p, x, cache, pos, *, window=0,
+                         rt=None):
+    """Slot-pool decode: x (B, 1, d), pos (B,), cache slot_pos (B, C)."""
+    positions = pos.astype(jnp.int32)[:, None]          # (B, 1)
+    q, k, v = project_qkv(cfg, p, x, positions)
+    cache = cache_write_batched(cache, k, v, pos)
+    if rt is not None and rt.use_pallas and not is_quant_cache(cache):
+        out = _pallas_decode_batched(cfg, q, cache, pos, window, rt)
+    else:
+        if is_quant_cache(cache):
+            kc, vc = dequantize_cache(cache, q.dtype)
+        else:
+            kc, vc = cache["k"], cache["v"]
+        out = attend_direct(q, kc, vc, positions, cache["slot_pos"],
+                            causal=True, window=window)
     out = out.reshape(x.shape[0], 1, cfg.num_heads * cfg.head_dim)
     return out @ p["wo"], cache
 
@@ -389,3 +454,10 @@ def _pallas_decode(cfg, q, cache, positions, window, rt):
     return ops.decode_attention(q, cache["k"], cache["v"], cache["slot_pos"],
                                 positions[0], window=window,
                                 interpret=rt.pallas_interpret)
+
+
+def _pallas_decode_batched(cfg, q, cache, pos, window, rt):
+    from repro.kernels import ops
+    return ops.decode_attention_batched(
+        q, cache["k"], cache["v"], cache["slot_pos"], pos, window=window,
+        interpret=rt.pallas_interpret)

@@ -33,25 +33,38 @@ def _stack(tree, n: int):
 
 
 def _attn_cache(cfg: ModelConfig, batch: int, capacity: int, dtype,
-                quant: bool = False):
+                quant: bool = False, per_slot: bool = False):
     if cfg.mla is not None:
+        if per_slot:
+            raise NotImplementedError(
+                "per-slot pools require the GQA/MHA slot-buffer cache; "
+                "MLA latent caches have no per-row slot_pos")
         return mla_mod.init_mla_cache(cfg, batch, capacity, dtype)
     return attn.init_kv_cache(batch, capacity, cfg.num_kv_heads,
-                              cfg.head_dim, dtype, quant=quant)
+                              cfg.head_dim, dtype, quant=quant,
+                              per_slot=per_slot)
 
 
 def init_cache(cfg: ModelConfig, batch: int, capacity: int,
-               *, window: int = 0, dtype=None, kv_quant: bool = False):
+               *, window: int = 0, dtype=None, kv_quant: bool = False,
+               per_slot: bool = False):
     """capacity: max absolute positions the attention caches must hold.
     ``window`` > 0 switches full-attention layers to ring buffers of that
     size (long-context mode).  ``kv_quant`` stores trunk K/V in int8
-    (EXPERIMENTS.md §Perf-4)."""
+    (EXPERIMENTS.md §Perf-4).  ``per_slot`` builds the continuous-batching
+    slot pool layout: every batch row gets its own ``slot_pos`` vector so it
+    can hold an independent request at its own position (trunk attention
+    families only — recurrent/enc-dec/MLA rows can't be sliced per slot)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     eff_cap = min(window, capacity) if window else capacity
     cache = {}
     for i, (kind, n) in enumerate(segments(cfg)):
+        if per_slot and kind not in ("dense", "moe", "dense_first"):
+            raise NotImplementedError(
+                f"per-slot pool unsupported for segment kind {kind!r}")
         if kind in ("dense", "moe", "dense_first"):
-            c = _attn_cache(cfg, batch, eff_cap, dtype, quant=kv_quant)
+            c = _attn_cache(cfg, batch, eff_cap, dtype, quant=kv_quant,
+                            per_slot=per_slot)
         elif kind == "griffin_block":
             hc = cfg.hybrid
             c = {
@@ -81,10 +94,12 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
 
 
 def cache_struct(cfg: ModelConfig, batch: int, capacity: int,
-                 *, window: int = 0, dtype=None, kv_quant: bool = False):
+                 *, window: int = 0, dtype=None, kv_quant: bool = False,
+                 per_slot: bool = False):
     """ShapeDtypeStruct pytree for dry-run lowering (no allocation)."""
     fn = functools.partial(init_cache, cfg, batch, capacity,
-                           window=window, dtype=dtype, kv_quant=kv_quant)
+                           window=window, dtype=dtype, kv_quant=kv_quant,
+                           per_slot=per_slot)
     return jax.eval_shape(fn)
 
 

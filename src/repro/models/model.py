@@ -106,13 +106,20 @@ def prefill(cfg: ModelConfig, params, tokens, cache, *, start_pos=0,
 
 def decode_step(cfg: ModelConfig, params, token, cache, pos, *,
                 window: int = 0, rt: Runtime = LOCAL):
-    """One decode step: token (B,1) at absolute position ``pos`` (scalar).
+    """One decode step: token (B,1) at absolute position ``pos``.
+
+    ``pos`` scalar: all rows share one position (single-request decoding).
+    ``pos`` (B,): per-row positions over a per-slot pool cache — one jit
+    dispatch decodes a continuous batch of requests at different depths.
     Returns (logits (B,V), updated cache)."""
     x = params["embed"]["wte"][token]
-    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    pos = jnp.asarray(pos)
+    batched = pos.ndim > 0
+    positions = (pos.astype(jnp.int32)[:, None] if batched
+                 else jnp.reshape(pos, (1,)).astype(jnp.int32))
     pe = position_embedding(cfg, params["embed"], positions, x.dtype)
     if pe is not None:
-        x = x + pe[None]
+        x = x + (pe if batched else pe[None])
     if rt.mesh is not None and rt.batch_axes:
         x = rt.hint(x, rt.batch_axes, None, None)
     x, cache, _ = apply_stack(cfg, params, x, mode="decode", cache=cache,

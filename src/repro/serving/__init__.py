@@ -1,6 +1,8 @@
-from repro.serving.engine import Engine, GenResult
-from repro.serving.sampling import greedy, sample_logits
-from repro.serving.scheduler import Request, FIFOScheduler
+from repro.serving.engine import BatchedEngine, Engine, GenResult
+from repro.serving.sampling import greedy, sample_batched, sample_logits
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     FIFOScheduler)
 
-__all__ = ["Engine", "GenResult", "greedy", "sample_logits", "Request",
-           "FIFOScheduler"]
+__all__ = ["Engine", "BatchedEngine", "GenResult", "greedy", "sample_logits",
+           "sample_batched", "Request", "FIFOScheduler",
+           "ContinuousBatchingScheduler"]

@@ -1,5 +1,11 @@
 """Token sampling: deterministic greedy (the paper's do_sample=False) plus
-temperature / top-k for the examples."""
+temperature / top-k for the examples.
+
+Every function is batch-shaped: logits (B, V) in, tokens (B,) out — greedy
+reduces over the vocab axis only, and ``sample_batched`` draws one
+independent categorical per row, so the same functions serve the serial
+engine (B=1) and the continuous-batching slot pool (B=max_batch) without a
+reshape."""
 from __future__ import annotations
 
 import jax
@@ -18,3 +24,23 @@ def sample_logits(logits, rng, *, temperature: float = 1.0, top_k: int = 0):
         vals, _ = jax.lax.top_k(logits, top_k)
         logits = jnp.where(logits < vals[..., -1:], -jnp.inf, logits)
     return jax.random.categorical(rng, logits).astype(jnp.int32)
+
+
+def sample_batched(logits, rng, *, temperature=0.0, top_k: int = 0):
+    """Per-row sampling for the slot pool: logits (B, V) -> (B,) int32.
+
+    ``temperature`` may be a scalar or a per-row (B,) vector — rows at
+    temperature 0 decode greedily while others sample, so one pool can mix
+    deterministic and sampled requests in a single dispatch.  The rng is
+    split per row; pass a fresh key each step."""
+    if isinstance(temperature, (int, float)) and temperature <= 0.0:
+        return greedy(logits)                # static shortcut: trace-safe
+    temperature = jnp.asarray(temperature, jnp.float32)
+    t = jnp.broadcast_to(temperature, (logits.shape[0],))
+    scaled = logits / jnp.maximum(t, 1e-6)[:, None]
+    if top_k:
+        vals, _ = jax.lax.top_k(scaled, top_k)
+        scaled = jnp.where(scaled < vals[..., -1:], -jnp.inf, scaled)
+    keys = jax.random.split(rng, logits.shape[0])
+    drawn = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(t > 0.0, drawn, greedy(logits))

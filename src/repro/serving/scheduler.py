@@ -1,20 +1,36 @@
-"""Request scheduling: FIFO with shape-compatible micro-batching.
+"""Request scheduling: serial FIFO baseline + continuous batching.
 
-Full continuous batching is out of scope for a single-host CPU runtime; what
-ships here is honest: requests whose *suffix* token count (after recycling)
-and cache capacity land in the same bucket are decoded together by stacking
-their per-request caches along the batch axis, others run serially.  The
-bucketing exists for the same reason as the engine's capacity rounding:
-static shapes = stable compiled executables on TPU.
+Two schedulers share one Request surface:
+
+``FIFOScheduler`` is the honest serial baseline — ``step()`` pops requests
+off the queue and runs ``engine.generate`` one at a time.  It exists as the
+reference the batched path is benchmarked (and tested token-for-token)
+against.
+
+``ContinuousBatchingScheduler`` drives a ``BatchedEngine`` slot pool: it
+owns the admission policy (FIFO order, admit-before-decode), the slot
+allocator (free list over pool rows), and the in-flight set.  Every
+``step()`` first fills free slots from the queue head — each admission is a
+single-row prefill, recycled prefixes included — then advances ALL in-flight
+requests one token with a single jitted masked decode over the pool.  Rows
+that hit EOS or their token budget are freed at the step boundary and the
+next ``step()`` refills them mid-flight: the batch never drains to refill,
+which is what "continuous" means and where the throughput over the serial
+loop comes from (one dispatch per token-step instead of one per request).
+
+Static shapes still rule everything: the pool is a fixed ``[max_batch,
+capacity, ...]`` allocation, so the decode executable compiles exactly once
+per pool shape regardless of arrival order, mix of hit/miss requests, or
+occupancy.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
-from repro.serving.engine import Engine, GenResult
+from repro.serving.engine import BatchedEngine, Engine, GenResult
 
 
 @dataclass
@@ -26,13 +42,16 @@ class Request:
     admit: bool = False
     submitted_at: float = field(default_factory=time.perf_counter)
     result: Optional[GenResult] = None
+    error: Optional[str] = None          # set when admission rejects it
 
     @property
     def done(self) -> bool:
-        return self.result is not None
+        return self.result is not None or self.error is not None
 
 
 class FIFOScheduler:
+    """Serial reference scheduler: one ``engine.generate`` per request."""
+
     def __init__(self, engine: Engine, *, max_batch: int = 8):
         self.engine = engine
         self.max_batch = max_batch
@@ -50,9 +69,9 @@ class FIFOScheduler:
         return len(self._queue)
 
     def step(self) -> List[Request]:
-        """Serve up to max_batch requests from the queue head (currently
-        sequential generate calls; the engine's jit cache makes same-bucket
-        requests reuse one executable)."""
+        """Serve up to max_batch requests from the queue head, sequentially
+        (the engine's jit cache makes same-shape requests share one
+        executable, but each still pays its own dispatch per token)."""
         served = []
         while self._queue and len(served) < self.max_batch:
             req = self._queue.popleft()
@@ -67,3 +86,101 @@ class FIFOScheduler:
         while self._queue:
             self.step()
         return self.completed
+
+
+class ContinuousBatchingScheduler:
+    """Admission policy + slot allocator over a ``BatchedEngine`` pool."""
+
+    def __init__(self, engine: BatchedEngine, *,
+                 max_admissions_per_step: Optional[int] = None):
+        self.engine = engine
+        # at most this many single-row prefills per step before decoding;
+        # None = fill every free slot (prefill-heavy but maximal occupancy)
+        if max_admissions_per_step is not None and max_admissions_per_step < 1:
+            raise ValueError("max_admissions_per_step must be >= 1 (0 would "
+                             "make run() spin forever admitting nothing)")
+        self.max_admissions = max_admissions_per_step
+        self._queue: Deque[Request] = deque()
+        self._next_id = 0
+        self._free: List[int] = engine.free_slots()
+        self.in_flight: Dict[int, Request] = {}       # slot -> request
+        self.completed: List[Request] = []
+        self.stats = {"decode_steps": 0, "admissions": 0,
+                      "instant_finishes": 0, "slot_reuses": 0,
+                      "rejected": 0, "occupancy_sum": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: str, **kw) -> Request:
+        req = Request(self._next_id, prompt, **kw)
+        self._next_id += 1
+        self._queue.append(req)
+        return req
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> List[Request]:
+        """Fill free slots from the queue head; returns requests that
+        completed during admission (rejections and instant finishes)."""
+        done: List[Request] = []
+        budget = (len(self._free) if self.max_admissions is None
+                  else min(self.max_admissions, len(self._free)))
+        while self._queue and budget > 0:
+            slot = self._free.pop()
+            req = self._queue.popleft()
+            try:
+                res = self.engine.admit_slot(
+                    slot, req.prompt, max_new_tokens=req.max_new_tokens,
+                    use_recycling=req.use_recycling, admit=req.admit)
+            except ValueError as e:
+                # reject THIS request (e.g. longer than the pool capacity)
+                # without dropping the rest of the queue or the slot
+                self._free.append(slot)
+                req.error = str(e)
+                self.completed.append(req)
+                self.stats["rejected"] += 1
+                done.append(req)
+                continue
+            except Exception:
+                self._free.append(slot)      # don't leak the slot
+                raise
+            self.stats["admissions"] += 1
+            budget -= 1                      # a prefill happened either way
+            if res is not None:                       # finished at token 0
+                req.result = res
+                self.completed.append(req)
+                self.stats["instant_finishes"] += 1
+                self._free.append(slot)
+                done.append(req)
+                continue
+            self.in_flight[slot] = req
+        return done
+
+    def step(self) -> List[Request]:
+        """Admit into free slots, then advance every in-flight request one
+        token.  Returns the requests that completed this step (including
+        admission-time completions: rejections and instant finishes)."""
+        finished: List[Request] = list(self._admit())
+        decoded = bool(self.in_flight)
+        self.stats["occupancy_sum"] += len(self.in_flight)
+        for slot, result in self.engine.decode_batch():
+            req = self.in_flight.pop(slot)
+            req.result = result
+            self.completed.append(req)
+            finished.append(req)
+            if self._queue:
+                self.stats["slot_reuses"] += 1
+            self._free.append(slot)
+        self.stats["decode_steps"] += int(decoded)
+        return finished
+
+    def run(self) -> List[Request]:
+        while self._queue or self.in_flight:
+            self.step()
+        return self.completed
+
+    # ------------------------------------------------------------------
+    def mean_occupancy(self) -> float:
+        steps = max(self.stats["decode_steps"], 1)
+        return self.stats["occupancy_sum"] / steps

@@ -95,6 +95,25 @@ class TestCacheSurgery:
         assert g["seg0"]["k"].shape[2] == 32
         assert (g["seg0"]["slot_pos"][:, 16:] == -1).all()
 
+    def test_grow_capacity_1d_slot_pos(self):
+        # regression: a bare 1-D slot_pos leaf (no layer stack) must pad on
+        # its only axis with -1, and a leaf with fewer dims than its named
+        # capacity axis must be left alone instead of padding a wrong axis
+        cache = {"slot_pos": np.full((4,), -1, np.int32),
+                 "k": np.zeros((8, 2), np.float32)}  # ndim 2 < |axis -3|
+        g = grow_capacity(cache, 8)
+        assert g["slot_pos"].shape == (8,)
+        assert (g["slot_pos"] == -1).all()
+        assert g["k"].shape == (8, 2)                # untouched
+
+    def test_grow_capacity_per_slot_pos(self):
+        # batched-pool layout: slot_pos carries a batch axis (B, C)
+        cache = {"slot_pos": np.where(np.arange(6) < 3, np.arange(6),
+                                      -1).astype(np.int32)[None].repeat(2, 0)}
+        g = grow_capacity(cache, 12)
+        assert g["slot_pos"].shape == (2, 12)
+        assert (g["slot_pos"][:, 6:] == -1).all()
+
     def test_common_prefix_len(self):
         assert common_prefix_len([1, 2, 3], [1, 2, 3, 4]) == 3
         assert common_prefix_len([1, 2, 9], [1, 2, 3, 4]) == 2

@@ -6,6 +6,8 @@ multi-turn admissions, and misses in one invariant.
 """
 import jax
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.configs import get_config

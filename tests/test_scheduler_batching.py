@@ -1,0 +1,129 @@
+"""Batched-vs-serial equivalence: a continuous batch mixing {recycled exact
+hit, partial block hit, cold miss, early-EOS} requests must produce
+token-for-token identical outputs to serial ``engine.generate`` calls.
+
+This is the correctness contract of the slot pool: per-row slot_pos masking
+makes every pool row behave exactly like a dedicated single-request cache,
+so batching is a pure throughput optimization with no output drift.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import EOS
+from repro.models import init_params
+from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                           Engine)
+
+CACHED = [
+    "the quick brown fox jumps over the lazy dog today",
+    "what is the capital of france and why",
+]
+REQUESTS = [
+    # (prompt, expected mode against the CACHED precache)
+    (CACHED[0] + " and tomorrow", "exact_prefix"),
+    ("the quick brown fox jumps over a red fence", "partial_block"),
+    ("zzz qqq completely unrelated 12345", "miss"),
+    (CACHED[1] + " is it paris", "exact_prefix"),
+]
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = get_config("dialogpt-medium").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engines(stack, *, max_new=6, max_batch=3):
+    """Serial + batched engine over identical recycler contents."""
+    cfg, params = stack
+    ser = Engine(cfg, params, max_new_tokens=max_new, block_size=8,
+                 enable_partial=True)
+    ser.precache(CACHED)
+    bat = BatchedEngine(cfg, params, max_batch=max_batch, capacity=128,
+                        max_new_tokens=max_new, block_size=8,
+                        enable_partial=True)
+    bat.precache(CACHED)
+    return ser, bat
+
+
+def test_batched_equals_serial_all_modes(stack):
+    ser, bat = _engines(stack)
+    serial = {p: ser.generate(p) for p, _ in REQUESTS}
+
+    sched = ContinuousBatchingScheduler(bat)
+    reqs = [sched.submit(p) for p, _ in REQUESTS]
+    sched.run()
+
+    for (p, want_mode), req in zip(REQUESTS, reqs):
+        s, b = serial[p], req.result
+        assert b.mode == want_mode, (p, b.mode)
+        assert b.mode == s.mode and b.reuse_depth == s.reuse_depth
+        assert b.text == s.text, (p, b.mode)
+        np.testing.assert_array_equal(b.token_ids, s.token_ids)
+        assert b.gen_tokens == s.gen_tokens
+        assert b.prompt_tokens == s.prompt_tokens
+
+
+def test_batched_equals_serial_mixed_budgets(stack):
+    """Different per-request token budgets finish rows at different steps;
+    freed slots are refilled mid-flight and outputs stay identical."""
+    ser, bat = _engines(stack, max_new=8, max_batch=2)
+    prompts = [p for p, _ in REQUESTS] + ["one more cold prompt"]
+    budgets = [8, 3, 5, 2, 8]
+    serial = [ser.generate(p, max_new_tokens=n)
+              for p, n in zip(prompts, budgets)]
+
+    sched = ContinuousBatchingScheduler(bat)
+    reqs = [sched.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, budgets)]
+    sched.run()
+
+    assert sched.stats["slot_reuses"] >= 1        # genuinely mid-flight
+    for s, req in zip(serial, reqs):
+        assert req.result.text == s.text
+        np.testing.assert_array_equal(req.result.token_ids, s.token_ids)
+
+
+def test_early_eos_equivalence(stack, monkeypatch):
+    """Force EOS emission (deterministically, in BOTH paths) by remapping a
+    band of argmax ids to EOS: rows that stop early free their slot and the
+    remaining rows must keep decoding exactly like their serial runs."""
+    import repro.serving.engine as engine_mod
+
+    def eos_greedy(logits):
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.where(g % 5 == 1, jnp.int32(EOS), g)
+
+    monkeypatch.setattr(engine_mod, "greedy", eos_greedy)
+    ser, bat = _engines(stack, max_new=8)
+    serial = {p: ser.generate(p) for p, _ in REQUESTS}
+    assert any(r.gen_tokens < 8 and r.token_ids[-1] == EOS
+               for r in serial.values()), "remap produced no early EOS"
+
+    sched = ContinuousBatchingScheduler(bat)
+    reqs = [sched.submit(p) for p, _ in REQUESTS]
+    sched.run()
+    for (p, _), req in zip(REQUESTS, reqs):
+        s, b = serial[p], req.result
+        assert b.text == s.text and b.gen_tokens == s.gen_tokens
+        np.testing.assert_array_equal(b.token_ids, s.token_ids)
+
+
+def test_batched_admission_feeds_recycler(stack):
+    """admit=True requests harvested from the pool must land in the host
+    store trimmed to prompt depth, exactly like the serial path."""
+    cfg, params = stack
+    bat = BatchedEngine(cfg, params, max_batch=2, capacity=128,
+                        max_new_tokens=4, block_size=8)
+    sched = ContinuousBatchingScheduler(bat)
+    p = "tell me about rivers"
+    sched.submit(p, admit=True)
+    sched.run()
+    assert len(bat.recycler.store) == 1
+    follow = bat.recycler.lookup(p + " and lakes too",
+                                 bat.tok.encode(p + " and lakes too"))
+    assert follow.hit and follow.reuse_depth >= len(bat.tok.encode(p)) - 1
