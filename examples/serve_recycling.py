@@ -4,10 +4,16 @@ beyond-paper partial-prefix mode.
 
     PYTHONPATH=src python examples/serve_recycling.py [--full] [--partial]
     PYTHONPATH=src python examples/serve_recycling.py --continuous --batch 8
+    PYTHONPATH=src python examples/serve_recycling.py --paged --batch 8
 
 ``--full`` uses the paper's real 345M DialoGPT config (slow on CPU).
 ``--continuous`` serves the recycled pass through the continuous-batching
-slot pool instead of serial FIFO and reports the throughput ratio.
+dense slot pool instead of serial FIFO and reports the throughput ratio.
+``--paged`` serves it through the paged block-table pool: requests sharing
+a prefix reference the same ref-counted device blocks (copy-on-write on
+divergence), warm prefixes are re-admitted with zero host→device copies,
+and the host store acts as an L2 tier behind the device-resident L1 —
+the run reports resident hits, host promotions and device KV bytes in use.
 """
 import argparse
 import json
@@ -20,7 +26,7 @@ from repro.core.metrics import RunMetrics, summarize_runs
 from repro.data.pipeline import paper_prompt_sets
 from repro.models import init_params
 from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
-                           Engine, FIFOScheduler)
+                           Engine, FIFOScheduler, PagedEngine)
 
 
 def main():
@@ -28,7 +34,11 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--partial", action="store_true")
     ap.add_argument("--continuous", action="store_true",
-                    help="serve the recycled pass on the slot pool")
+                    help="serve the recycled pass on the dense slot pool")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve the recycled pass on the paged block-table "
+                         "pool (ref-counted prefix sharing, device-resident "
+                         "L1 + host L2 tiering)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=12)
@@ -38,7 +48,13 @@ def main():
     if not args.full:
         cfg = cfg.reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    if args.continuous:
+    if args.paged:
+        args.continuous = True
+        engine = PagedEngine(cfg, params, max_batch=args.batch,
+                             capacity=args.capacity,
+                             max_new_tokens=args.max_new,
+                             enable_partial=args.partial, block_size=16)
+    elif args.continuous:
         engine = BatchedEngine(cfg, params, max_batch=args.batch,
                                capacity=args.capacity,
                                max_new_tokens=args.max_new,
@@ -80,6 +96,13 @@ def main():
         print(f"continuous batching: {csched.stats['decode_steps']} decode "
               f"steps for {len(recycled_reqs)} requests, mean occupancy "
               f"{csched.mean_occupancy():.2f}/{args.batch}")
+        if args.paged:
+            print(f"paged pool: {engine.stats['resident_hits']} resident "
+                  f"(L1) hits, {engine.stats['host_promotions']} host (L2) "
+                  f"promotions, {engine.stats['cow_copies']} CoW copies, "
+                  f"{engine.stats['h2d_bytes']/1e6:.2f} MB host->device, "
+                  f"{engine.device_kv_bytes_in_use()/1e6:.2f} MB device KV "
+                  f"in use")
         print("NOTE: per-request latency below spans the whole shared batch "
               "(queue wait included); batching trades it for throughput — "
               "see benchmarks/continuous_batching.py for tokens/s")

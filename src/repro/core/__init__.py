@@ -10,14 +10,19 @@ Beyond-paper extensions (reported separately, DESIGN.md §7):
   block-granular radix prefix cache with partial-LCP reuse and ref-counted
   LRU eviction; recurrent-state snapshot recycling for SSM/hybrid archs.
 """
+from repro.core.blockpool import BlockAllocator, BlockPoolExhausted, SENTINEL
 from repro.core.embedder import HashEmbedder
 from repro.core.index import EmbeddingIndex
 from repro.core.kvstore import HostKVStore, CacheEntry
 from repro.core.recycler import Recycler, RecycleResult
-from repro.core.radix import RadixPrefixCache
+from repro.core.radix import BlockTrie, RadixPrefixCache
 from repro.core.metrics import RunMetrics, summarize_runs
 
 __all__ = [
+    "BlockAllocator",
+    "BlockPoolExhausted",
+    "BlockTrie",
+    "SENTINEL",
     "HashEmbedder",
     "EmbeddingIndex",
     "HostKVStore",

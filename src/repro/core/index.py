@@ -43,3 +43,13 @@ class EmbeddingIndex:
         top = np.argpartition(-sims, k - 1)[:k]
         top = top[np.argsort(-sims[top])]
         return [(self._ids[i], float(sims[i])) for i in top]
+
+    def similarity(self, entry_id: int, vec: np.ndarray) -> float:
+        """Cosine similarity of the query against ONE entry's embedding
+        (nan when the entry is not indexed).  Lets callers report the
+        similarity of the entry actually serving a hit, rather than the
+        best similarity seen during retrieval."""
+        if entry_id not in self._ids:
+            return float("nan")
+        i = self._ids.index(entry_id)
+        return float(self._vecs[i] @ vec.astype(np.float32))

@@ -6,6 +6,14 @@ Here an entry is the model's whole cache pytree (any family: attention KV,
 MLA latent, recurrent state) moved to host numpy, keyed by an integer id,
 with byte accounting and LRU order for eviction.
 
+Since the paged device pool (PR 2) this store is the **L2 tier** of a
+two-level cache: the paged engine serves warm prefixes from device-resident
+pool blocks (L1, ``core.radix.BlockTrie``) and only falls back here on an
+L1 miss, promoting the prefix back to device in block-granular chunks.
+Cold entries spill out of L1 under allocator pressure while their host copy
+survives; per-entry ``hits``/``last_hit`` plus ``stats`` make the tier's
+traffic observable (serving stats and benchmarks report them).
+
 Disk format: one ``<id>.npz`` per entry ('/'-joined tree paths as npz keys)
 plus a json sidecar with text/tokens/length — transparent and reloadable
 across sessions, like the paper's CSV+torch.save layout.
@@ -108,6 +116,8 @@ class CacheEntry:
     length: int                  # tokens covered (reuse depth ceiling)
     capacity: int                # slot capacity of the attention buffers
     nbytes: int = 0
+    hits: int = 0                # times this entry served a lookup (tiering)
+    last_hit: int = -1           # store clock at the last touching get()
 
     def __post_init__(self):
         if not self.nbytes:
@@ -123,6 +133,8 @@ class HostKVStore:
         self._next_id = 0
         self.total_bytes = 0
         self.evictions = 0
+        self._clock = 0                        # touching-get counter
+        self.stats = {"peeks": 0, "hits": 0}   # L2-tier traffic
 
     def __len__(self):
         return len(self._entries)
@@ -144,9 +156,19 @@ class HostKVStore:
         return entry
 
     def get(self, entry_id: int, *, touch: bool = True) -> CacheEntry:
+        """``touch=True`` marks a *served hit*: LRU order moves, and the
+        entry's tier accounting (hits / last_hit) is stamped.  Peeking
+        candidates during retrieval uses touch=False and only counts as a
+        peek, so hits / (hits + peeks-that-missed) stays meaningful."""
         e = self._entries[entry_id]
         if touch:
             self._entries.move_to_end(entry_id)
+            self._clock += 1
+            e.hits += 1
+            e.last_hit = self._clock
+            self.stats["hits"] += 1
+        else:
+            self.stats["peeks"] += 1
         return e
 
     def remove(self, entry_id: int) -> None:

@@ -54,7 +54,9 @@ def summarize_runs(baseline: List[RunMetrics], recycled: List[RunMetrics],
                                       rec[k].output_text) for k in keys]
 
     def _avg(xs):
-        xs = list(xs)
+        # nan-aware: device-resident (L1) hits carry nan similarity — no
+        # retrieval backs them — and must not poison the summary mean
+        xs = [x for x in xs if not (isinstance(x, float) and math.isnan(x))]
         return float(np.mean(xs)) if xs else float("nan")
 
     return {

@@ -1,25 +1,40 @@
-"""Block-granular radix prefix index (beyond-paper extension).
+"""Block-granular radix prefix indexes (beyond-paper extension).
 
 The paper only reuses a cache when the cached prompt is an *exact full
-prefix* of the new one.  This index generalizes to vLLM-style automatic
-prefix caching, adapted to host-offloaded whole-prefix entries and TPU
-static shapes (DESIGN.md §3): token ids are grouped into fixed-size blocks;
-a trie over block keys maps any new prompt to the deepest cached ancestor,
-giving partial reuse depth = LCP rounded down to a block boundary.
+prefix* of the new one.  Two tries generalize that to vLLM-style automatic
+prefix caching, adapted to TPU static shapes (DESIGN.md §3):
 
-Nodes carry the set of store entry ids whose caches cover that depth; the
-store's LRU eviction calls back into ``forget_entry`` so dead references
-never serve a hit.  Invariants (property-tested):
+``RadixPrefixCache`` — the **host (L2) index**: token ids grouped into
+fixed-size blocks form a trie whose nodes carry the host-store entry ids
+covering that depth.  Lookup maps any new prompt to the deepest cached
+ancestor, giving partial reuse depth = LCP rounded down to a block
+boundary.  The store's LRU eviction calls back into ``forget_entry`` so
+dead references never serve a hit.  Invariants (property-tested):
 
   I1  lookup(tokens) returns (depth, entry) with depth % block == 0,
       depth <= len(tokens), and entry.token_ids[:depth] == tokens[:depth]
   I2  depth is maximal over live entries at block granularity
   I3  forget_entry(e) makes e unreachable
+
+Recency: every insert and every served hit stamps the entry with a
+monotonic clock (``touch``); when several live entries cover the same
+node, lookup prefers the one with the **latest true last-touch** — the
+same order the store's LRU eviction uses — so eviction pressure and
+lookup preference agree (entry id order is creation order, not recency).
+
+``BlockTrie`` — the **device (L1) index**: token-block keys map directly
+to *live device pool blocks* (ids into the paged KV pool), so an admission
+whose prefix is resident composes its block table with zero copies and
+zero host round-trips.  Nodes hold exactly one block id; the last node of
+a chain may be *partial* (fill < block_size) — the tail of a prompt that
+stopped mid-block.  Chains are evicted leaf-first under allocator pressure
+in true-LRU order; interior blocks are never dropped while a descendant is
+live, so every lookup chain is contiguous from the root.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 
 @dataclass
@@ -35,8 +50,19 @@ class RadixPrefixCache:
         self.block = block_size
         self._root = _Node(0)
         self._entry_depth: Dict[int, int] = {}
+        # true last-touch order: entry id -> monotonic stamp.  max() over a
+        # node's entries by stamp is genuine MRU; max() by id is only
+        # creation order and diverges as soon as an old entry is re-hit.
+        self._clock = 0
+        self._last_touch: Dict[int, int] = {}
 
     # ------------------------------------------------------------------
+    def touch(self, entry_id: int) -> None:
+        """Stamp ``entry_id`` as most-recently-used (served a hit)."""
+        if entry_id in self._entry_depth:
+            self._clock += 1
+            self._last_touch[entry_id] = self._clock
+
     def insert(self, token_ids, entry_id: int, length: Optional[int] = None):
         """Register that ``entry_id``'s cache covers token_ids[:length]."""
         n = length if length is not None else len(token_ids)
@@ -48,6 +74,8 @@ class RadixPrefixCache:
             node = node.children.setdefault(key, _Node(b0 + self.block))
             node.entries.add(entry_id)
         self._entry_depth[entry_id] = n
+        self._clock += 1
+        self._last_touch[entry_id] = self._clock
 
     def lookup(self, token_ids) -> Tuple[int, Optional[int]]:
         """Deepest block-aligned cached prefix of token_ids.
@@ -61,13 +89,16 @@ class RadixPrefixCache:
             if child is None or not child.entries:
                 break
             node = child
-            # prefer the entry registered most recently (max id ~ MRU-ish)
-            best = (node.depth, max(node.entries))
+            # prefer the truly most-recently-touched entry (insert OR served
+            # hit), matching the host store's LRU order under eviction
+            best = (node.depth,
+                    max(node.entries, key=lambda e: self._last_touch.get(e, -1)))
         return best
 
     def forget_entry(self, entry_id: int) -> None:
         """Remove all references to an evicted entry, pruning empty nodes."""
         self._entry_depth.pop(entry_id, None)
+        self._last_touch.pop(entry_id, None)
 
         def prune(node: _Node) -> bool:
             node.entries.discard(entry_id)
@@ -83,3 +114,208 @@ class RadixPrefixCache:
 
     def __contains__(self, entry_id: int) -> bool:
         return entry_id in self._entry_depth
+
+
+# ---------------------------------------------------------------------------
+# device (L1) tier: token blocks -> live pool blocks
+# ---------------------------------------------------------------------------
+@dataclass
+class _BlockNode:
+    depth: int                    # tokens covered through this node
+    block: int                    # device pool block id
+    fill: int                     # valid tokens in the block (== bs if full)
+    last_touch: int = 0
+    children: Dict[Tuple[int, ...], "_BlockNode"] = field(default_factory=dict)
+    partials: Dict[Tuple[int, ...], "_BlockNode"] = field(default_factory=dict)
+
+
+class BlockTrie:
+    """Token-block keys -> device-resident pool blocks (the L1 authority).
+
+    ``register`` is called at admission once a request's prompt K/V is
+    block-resident; ``lookup`` at the next admission returns the deepest
+    resident chain so the new block table shares those blocks in place.
+    The trie owns ONE reference per indexed block (the cache tier's
+    reference); ``evict`` drops leaf blocks in LRU order and returns them
+    so the caller can release that reference.
+
+    A node is immutable up to its ``fill``: the writer that still appends
+    into a registered partial tail only ever touches offsets >= fill, so
+    a reader composing [0, depth) never observes the mutation.
+    """
+
+    def __init__(self, block_size: int):
+        assert block_size >= 1
+        self.block = block_size
+        self._root: Dict[Tuple[int, ...], _BlockNode] = {}
+        self._root_partials: Dict[Tuple[int, ...], _BlockNode] = {}
+        self._clock = 0
+        self._n_blocks = 0
+
+    def __len__(self) -> int:
+        return self._n_blocks
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # ------------------------------------------------------------------
+    def lookup(self, token_ids) -> Tuple[int, List[Tuple[int, int]]]:
+        """Deepest resident prefix of ``token_ids``.
+
+        Returns (depth, chain) where chain is [(block_id, fill), ...] —
+        full blocks followed by at most one partial tail.  Touches every
+        node on the chain (true recency for eviction)."""
+        ids = [int(t) for t in token_ids]
+        n = len(ids)
+        chain: List[Tuple[int, int]] = []
+        depth = 0
+        children, partials = self._root, self._root_partials
+        node: Optional[_BlockNode] = None
+        while depth + self.block <= n:
+            key = tuple(ids[depth:depth + self.block])
+            child = children.get(key)
+            if child is None:
+                break
+            node = child
+            chain.append((node.block, node.fill))
+            depth = node.depth
+            children, partials = node.children, node.partials
+        # longest partial tail extending the full chain
+        best_p: Optional[_BlockNode] = None
+        for key, p in partials.items():
+            if tuple(ids[depth:depth + len(key)]) == key:
+                if best_p is None or p.fill > best_p.fill:
+                    best_p = p
+        if best_p is not None:
+            chain.append((best_p.block, best_p.fill))
+            depth += best_p.fill
+            best_p.last_touch = self._tick()
+        # stamp the walked chain
+        t = self._tick()
+        nd = None
+        children = self._root
+        d = 0
+        while d + self.block <= depth:
+            nd = children[tuple(ids[d:d + self.block])]
+            nd.last_touch = t
+            children = nd.children
+            d += self.block
+        return depth, chain
+
+    # ------------------------------------------------------------------
+    def register(self, token_ids, length: int, blocks: List[int]
+                 ) -> List[int]:
+        """Index ``blocks`` as holding token_ids[:length] (block i holds
+        tokens [i*bs, min((i+1)*bs, length))).  Where a node already maps
+        the same key to a live block, the existing block is kept (it is
+        the more-shared copy) and the caller's block is NOT indexed.
+
+        Returns the block ids that were newly indexed — the caller must
+        acquire one allocator reference for each (the trie's reference).
+        """
+        ids = [int(t) for t in token_ids[:length]]
+        bs = self.block
+        taken: List[int] = []
+        children, partials = self._root, self._root_partials
+        depth = 0
+        for i, blk in enumerate(blocks):
+            lo = i * bs
+            if lo >= length:
+                break
+            hi = min(lo + bs, length)
+            key = tuple(ids[lo:hi])
+            if hi - lo == bs:                       # full block
+                node = children.get(key)
+                if node is None:
+                    node = _BlockNode(hi, blk, bs, self._tick())
+                    children[key] = node
+                    taken.append(blk)
+                    self._n_blocks += 1
+                else:
+                    node.last_touch = self._tick()
+                children, partials = node.children, node.partials
+                depth = hi
+            else:                                   # partial tail
+                if key not in partials:
+                    partials[key] = _BlockNode(hi, blk, hi - lo, self._tick())
+                    taken.append(blk)
+                    self._n_blocks += 1
+                else:
+                    partials[key].last_touch = self._tick()
+                break
+        return taken
+
+    # ------------------------------------------------------------------
+    def evict(self, want: int, can_evict: Callable[[int], bool]
+              ) -> List[int]:
+        """Drop up to ``want`` leaf blocks (LRU first) for which
+        ``can_evict(block_id)`` holds (typically: the trie holds the only
+        reference).  Interior nodes with live descendants are never
+        dropped, so surviving chains stay contiguous.  Returns the dropped
+        block ids — the caller releases the trie's reference on each."""
+        dropped: List[int] = []
+        while len(dropped) < want:
+            leaves: List[Tuple[int, Dict, Tuple, _BlockNode]] = []
+
+            def walk(children, partials):
+                for key, p in partials.items():
+                    leaves.append((p.last_touch, partials, key, p))
+                for key, c in children.items():
+                    if not c.children and not c.partials:
+                        leaves.append((c.last_touch, children, key, c))
+                    else:
+                        walk(c.children, c.partials)
+
+            walk(self._root, self._root_partials)
+            leaves = [l for l in leaves if can_evict(l[3].block)]
+            if not leaves:
+                break
+            leaves.sort(key=lambda l: l[0])
+            for _, holder, key, node in leaves:
+                if len(dropped) >= want:
+                    break
+                del holder[key]
+                self._n_blocks -= 1
+                dropped.append(node.block)
+        return dropped
+
+    def blocks(self) -> Set[int]:
+        """Every block id currently indexed."""
+        out: Set[int] = set()
+
+        def walk(children, partials):
+            for p in partials.values():
+                out.add(p.block)
+            for c in children.values():
+                out.add(c.block)
+                walk(c.children, c.partials)
+
+        walk(self._root, self._root_partials)
+        return out
+
+    def evictable(self, can_evict: Callable[[int], bool]) -> int:
+        """How many indexed blocks could *eventually* be freed: blocks in
+        subtrees where every node (self included) satisfies
+        ``can_evict`` — leaf-first eviction can reach all of them."""
+        count = 0
+
+        def walk(children, partials) -> bool:
+            """Returns True iff the whole subtree is evictable."""
+            nonlocal count
+            all_ok = True
+            for p in partials.values():
+                if can_evict(p.block):
+                    count += 1
+                else:
+                    all_ok = False
+            for c in children.values():
+                sub_ok = walk(c.children, c.partials)
+                if sub_ok and can_evict(c.block):
+                    count += 1
+                else:
+                    all_ok = False
+            return all_ok
+
+        walk(self._root, self._root_partials)
+        return count

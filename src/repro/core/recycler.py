@@ -158,8 +158,8 @@ class Recycler:
         # --- paper-faithful: retrieve -> exact full-prefix test ---------
         best_exact: Optional[tuple] = None
         sim_best = 0.0
-        for eid, sim in self.index.search(self.embedder.encode(text),
-                                          self.retrieval_k):
+        qvec = self.embedder.encode(text)
+        for eid, sim in self.index.search(qvec, self.retrieval_k):
             if eid not in self.store:
                 continue
             e = self.store.get(eid, touch=False)
@@ -190,16 +190,26 @@ class Recycler:
         if best_exact and (not best_partial or best_exact[0] >= best_partial[0]):
             depth, e, sim = best_exact
             self.store.get(e.entry_id)            # LRU touch
+            if self.radix is not None:
+                self.radix.touch(e.entry_id)      # keep trie recency in sync
             # exact path needs no trim: cached positions are all < e.length
             # <= m, and [depth, e.length) get overwritten by the suffix.
             return RecycleResult(True, "exact_prefix", e, depth, sim,
                                  _materialize(e.cache))
         if best_partial:
             depth, e = best_partial
-            self.store.get(e.entry_id)
+            # recency stamps (store LRU + radix last-touch) only when the
+            # entry actually SERVES: stamping before the trimmable gate
+            # would let a never-servable entry keep winning the radix's
+            # recency preference forever (self-reinforcing miss loop)
             if is_trimmable(e.cache):
+                self.store.get(e.entry_id)
+                self.radix.touch(e.entry_id)
+                # report the HIT ENTRY's own retrieval similarity — not
+                # sim_best from the exact-path loop, which may describe a
+                # different (rejected) candidate and poison the metrics.
+                sim = self.index.similarity(e.entry_id, qvec)
                 return RecycleResult(True, "partial_block", e, depth,
-                                     sim_best,
-                                     _materialize(trim_to_depth(e.cache,
-                                                                depth)))
+                                     sim, _materialize(trim_to_depth(e.cache,
+                                                                     depth)))
         return RecycleResult(False, "miss", None, 0, sim_best, None)

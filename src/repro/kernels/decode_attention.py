@@ -6,6 +6,15 @@ Validity comes from ``slot_pos`` (absolute position per slot, -1 = empty) —
 the same structure the recycler trims, so a recycled + trimmed cache is
 attended correctly with zero layout changes.  Ring-buffer (sliding-window)
 caches work unchanged: masking is position-based, not index-based.
+
+``paged_decode_attention`` is the block-table variant (PR 2): K/V live in
+ONE shared pool of fixed-size blocks and each batch row names its blocks
+via a table.  The table is a *scalar-prefetch* operand, so the BlockSpec
+index map gathers each row's next pool block by table lookup — the kernel
+body never sees the indirection, and shared prefix blocks are read in
+place with no per-request copy.  Validity is implicit (tile i, slot j ->
+position i*block_size + j, valid iff <= the row's decode position), so no
+slot_pos array exists for paged caches.
 """
 from __future__ import annotations
 
@@ -137,6 +146,90 @@ def decode_attention_batched(q, k_cache, v_cache, slot_pos, pos, *, window=0,
         ],
         interpret=interpret,
     )(pos_arr, qr, kr, vr, slot_pos)
+    return out.reshape(B, Hkv, G, D).reshape(B, 1, H, D)
+
+
+def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale, bs, nbt, hkv):
+    """One (batch*kv_head, table_entry) program: the BlockSpec index map
+    already resolved table entry ``ti`` to a pool block, so k_ref/v_ref
+    hold that block's (bs, d) tile.  Masking is implicit-position based:
+    tile ti slot j is absolute position ti*bs + j."""
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bs, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[pl.program_id(0) // hkv]            # this row's position
+    tok = ti * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+
+    s = q @ k.T * scale                               # (G, bs)
+    s = jnp.where(tok <= pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ti == nbt - 1)
+    def _write():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *,
+                           scale=None, interpret=True):
+    """Block-table decode: q (B,1,H,D); pools (NB, bs, Hkv, D) shared by
+    every request; block_tables (B, NBt) int32 (sentinel-0 padded);
+    pos (B,) per-row int32.  Returns (B,1,H,D)."""
+    B, _, H, D = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    NBt = block_tables.shape[1]
+    G = H // Hkv
+    scale = scale or D ** -0.5
+
+    qr = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    kr = k_pool.transpose(2, 0, 1, 3)                 # (Hkv, NB, bs, D)
+    vr = v_pool.transpose(2, 0, 1, 3)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, bs=bs,
+                               nbt=NBt, hkv=Hkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block table + per-row positions
+        grid=(B * Hkv, NBt),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, ti, tbl, pos: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda bh, ti, tbl, pos, hkv=Hkv:
+                         (bh % hkv, tbl[bh // hkv, ti], 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda bh, ti, tbl, pos, hkv=Hkv:
+                         (bh % hkv, tbl[bh // hkv, ti], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda bh, ti, tbl, pos: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32), qr, kr, vr)
     return out.reshape(B, Hkv, G, D).reshape(B, 1, H, D)
 
 

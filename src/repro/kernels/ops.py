@@ -9,6 +9,8 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.decode_attention import (decode_attention_batched
                                             as _decode_batched)
+from repro.kernels.decode_attention import (paged_decode_attention
+                                            as _decode_paged)
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
@@ -47,6 +49,16 @@ def decode_attention_batched(q, k_cache, v_cache, slot_pos, pos, *, window=0,
         bk //= 2
     return _decode_batched(q, k_cache, v_cache, slot_pos, pos, window=window,
                            block_k=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *,
+                           interpret=True):
+    """Block-table (paged pool) decode: pools (NB, bs, Hkv, D) shared by
+    all rows; block_tables (B, NBt) scalar-prefetched so the kernel
+    gathers each row's K/V blocks through its table; pos (B,)."""
+    return _decode_paged(q, k_pool, v_pool, block_tables, pos,
+                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

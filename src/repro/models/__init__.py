@@ -6,7 +6,8 @@ from repro.models.model import (
     decode_step,
     embed_inputs,
 )
-from repro.models.cache import init_cache, cache_struct
+from repro.models.cache import (init_cache, cache_struct, init_paged_pool,
+                                paged_block_bytes)
 
 __all__ = [
     "init_params",
@@ -16,4 +17,6 @@ __all__ = [
     "embed_inputs",
     "init_cache",
     "cache_struct",
+    "init_paged_pool",
+    "paged_block_bytes",
 ]

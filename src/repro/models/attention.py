@@ -291,6 +291,67 @@ def cache_write(cache, k_new, v_new, start_pos):
     }
 
 
+def init_paged_kv_cache(num_blocks: int, block_size: int, hkv: int, dh: int,
+                        dtype, *, max_batch: int, max_blocks_per_seq: int):
+    """Paged KV pool for one layer: ONE shared block pool plus per-request
+    block tables, instead of a private dense row per request.
+
+      k, v          (num_blocks, block_size, Hkv, Dh) — the shared pool
+      block_tables  (max_batch, max_blocks_per_seq) int32 — row b's cache
+                    is the pool blocks its table names, in order; entry j
+                    covers absolute positions [j*bs, (j+1)*bs)
+
+    Block 0 is the sentinel: tables are padded with it, so unused table
+    entries (and inactive rows) read/write one harmless scratch block.
+    Validity is *implicit* — slot j of table entry i holds position
+    i*bs + j, valid iff <= the row's decode position — so no slot_pos
+    array exists and blocks can be shared by any number of tables."""
+    return {
+        "k": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
+        "v": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
+        "block_tables": jnp.zeros((max_batch, max_blocks_per_seq),
+                                  jnp.int32),
+    }
+
+
+def is_paged_cache(cache) -> bool:
+    return isinstance(cache, dict) and "block_tables" in cache
+
+
+def paged_cache_write(cache, k_new, v_new, pos):
+    """Row b writes its one new roped K/V at absolute position ``pos[b]``
+    through its block table.  The target block is exclusively owned by row
+    b (copy-on-write upstream guarantees it), so rows never collide;
+    inactive rows carry all-sentinel tables and scribble harmlessly on
+    block 0."""
+    bs = cache["k"].shape[1]
+    B = k_new.shape[0]
+    p = pos.astype(jnp.int32)
+    rows = jnp.arange(B, dtype=jnp.int32)
+    blk = cache["block_tables"][rows, p // bs]
+    off = p % bs
+    return {
+        "k": cache["k"].at[blk, off].set(k_new[:, 0]),
+        "v": cache["v"].at[blk, off].set(v_new[:, 0]),
+        "block_tables": cache["block_tables"],
+    }
+
+
+def attend_paged(q, cache, pos):
+    """Reference paged decode attention: gather K/V through the block
+    table, mask by implicit positions.  q (B,1,H,Dh); pos (B,)."""
+    B = q.shape[0]
+    NBt = cache["block_tables"].shape[1]
+    bs = cache["k"].shape[1]
+    k = cache["k"][cache["block_tables"]]        # (B, NBt, bs, Hkv, Dh)
+    v = cache["v"][cache["block_tables"]]
+    k = k.reshape(B, NBt * bs, *k.shape[3:])
+    v = v.reshape(B, NBt * bs, *v.shape[3:])
+    kv_pos = jnp.arange(NBt * bs, dtype=jnp.int32)
+    return attend_direct(q, k, v, pos.astype(jnp.int32)[:, None], kv_pos,
+                         causal=True)
+
+
 def cache_write_batched(cache, k_new, v_new, pos):
     """Per-row scatter for the slot pool: row b writes its ``n`` new
     keys/values at absolute positions [pos[b], pos[b] + n); requires the
@@ -346,6 +407,10 @@ def attn_prefill(cfg: ModelConfig, p, x, *, start_pos=0, cache=None,
     positions = start_pos + jnp.arange(S, dtype=jnp.int32)
     q, k, v = project_qkv(cfg, p, x, positions)
     if cache is not None:
+        if is_paged_cache(cache):
+            raise NotImplementedError(
+                "prefill writes through a dense staging cache; the paged "
+                "engine scatters the result into pool blocks afterwards")
         cache = cache_write(cache, k, v, start_pos)
         if rt is not None and rt.use_pallas:
             out = _pallas_prefill(cfg, q, cache, positions, window, rt)
@@ -367,8 +432,15 @@ def attn_decode(cfg: ModelConfig, p, x, cache, pos, *, window=0, rt=None):
     ``pos`` scalar: every row is at the same position (single-request path).
     ``pos`` (B,): per-row positions over a per-slot pool (``slot_pos``
     (B, C)) — each row attends only to its own row's valid slots, which is
-    what lets a continuous batch mix requests at different depths."""
+    what lets a continuous batch mix requests at different depths.
+
+    A paged cache (``block_tables`` present) always takes the per-row
+    path: each row gathers K/V through its own block table, so requests
+    at different depths share physical prefix blocks."""
     pos = jnp.asarray(pos)
+    if is_paged_cache(cache):
+        return _attn_decode_paged(cfg, p, x, cache, pos, window=window,
+                                  rt=rt)
     if pos.ndim:
         return _attn_decode_batched(cfg, p, x, cache, pos, window=window,
                                     rt=rt)
@@ -403,6 +475,24 @@ def _attn_decode_batched(cfg: ModelConfig, p, x, cache, pos, *, window=0,
             kc, vc = cache["k"], cache["v"]
         out = attend_direct(q, kc, vc, positions, cache["slot_pos"],
                             causal=True, window=window)
+    out = out.reshape(x.shape[0], 1, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache
+
+
+def _attn_decode_paged(cfg: ModelConfig, p, x, cache, pos, *, window=0,
+                       rt=None):
+    """Paged-pool decode: x (B, 1, d), pos (B,), cache is a shared block
+    pool + per-row block tables (see ``init_paged_kv_cache``)."""
+    if window:
+        raise NotImplementedError("paged pool has no ring semantics; "
+                                  "windowed decode stays on the slot pool")
+    positions = pos.astype(jnp.int32)[:, None]          # (B, 1)
+    q, k, v = project_qkv(cfg, p, x, positions)
+    cache = paged_cache_write(cache, k, v, pos)
+    if rt is not None and rt.use_pallas:
+        out = _pallas_decode_paged(cfg, q, cache, pos, rt)
+    else:
+        out = attend_paged(q, cache, pos)
     out = out.reshape(x.shape[0], 1, cfg.num_heads * cfg.head_dim)
     return out @ p["wo"], cache
 
@@ -460,4 +550,11 @@ def _pallas_decode_batched(cfg, q, cache, pos, window, rt):
     from repro.kernels import ops
     return ops.decode_attention_batched(
         q, cache["k"], cache["v"], cache["slot_pos"], pos, window=window,
+        interpret=rt.pallas_interpret)
+
+
+def _pallas_decode_paged(cfg, q, cache, pos, rt):
+    from repro.kernels import ops
+    return ops.paged_decode_attention(
+        q, cache["k"], cache["v"], cache["block_tables"], pos,
         interpret=rt.pallas_interpret)

@@ -93,6 +93,41 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
     return cache
 
 
+def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    max_batch: int, max_blocks_per_seq: int, *, dtype=None):
+    """Paged continuous-batching pool: ONE shared block pool per layer
+    plus per-request block tables (``attention.init_paged_kv_cache``),
+    stacked over the layer scan like every other cache.  Blocks are
+    addressed identically in every layer — block id b holds token block b
+    of some request in ALL layers — so one host-side allocator covers the
+    whole stack.  Trunk attention only (same restriction as ``per_slot``):
+    recurrent/enc-dec/MLA state cannot be sliced into shared blocks."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if cfg.mla is not None:
+        raise NotImplementedError(
+            "paged pools require the GQA/MHA block layout; MLA latent "
+            "caches have no per-block K/V to share")
+    pool = {}
+    for i, (kind, n) in enumerate(segments(cfg)):
+        if kind not in ("dense", "moe", "dense_first"):
+            raise NotImplementedError(
+                f"paged pool unsupported for segment kind {kind!r}")
+        c = attn.init_paged_kv_cache(
+            num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim, dtype,
+            max_batch=max_batch, max_blocks_per_seq=max_blocks_per_seq)
+        pool[f"seg{i}"] = _stack(c, n)
+    return pool
+
+
+def paged_block_bytes(cfg: ModelConfig, block_size: int, *,
+                      dtype=None) -> int:
+    """Device bytes ONE pool block occupies across the whole layer stack
+    (K + V) — the unit of the paged engine's bytes-in-use accounting."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    per_layer = 2 * block_size * cfg.num_kv_heads * cfg.head_dim
+    return per_layer * jnp.dtype(dtype).itemsize * cfg.num_layers
+
+
 def cache_struct(cfg: ModelConfig, batch: int, capacity: int,
                  *, window: int = 0, dtype=None, kv_quant: bool = False,
                  per_slot: bool = False):

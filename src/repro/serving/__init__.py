@@ -1,8 +1,9 @@
 from repro.serving.engine import BatchedEngine, Engine, GenResult
+from repro.serving.paged import PagedEngine
 from repro.serving.sampling import greedy, sample_batched, sample_logits
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
                                      FIFOScheduler)
 
-__all__ = ["Engine", "BatchedEngine", "GenResult", "greedy", "sample_logits",
-           "sample_batched", "Request", "FIFOScheduler",
+__all__ = ["Engine", "BatchedEngine", "PagedEngine", "GenResult", "greedy",
+           "sample_logits", "sample_batched", "Request", "FIFOScheduler",
            "ContinuousBatchingScheduler"]

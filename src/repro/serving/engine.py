@@ -33,7 +33,7 @@ from repro.core.recycler import (grow_capacity, is_trimmable,
 from repro.data.tokenizer import ByteTokenizer, EOS
 from repro.models import decode_step, init_cache, prefill
 from repro.runtime import Runtime, LOCAL
-from repro.serving.sampling import greedy
+from repro.serving.sampling import greedy, sample_batched, sample_logits
 
 
 @dataclass
@@ -59,9 +59,11 @@ class Engine:
                  window: int = 0,
                  compress_host_cache: bool = False,
                  kv_quant: bool = False,
+                 sample_seed: int = 0,
                  rt: Runtime = LOCAL):
         self.cfg = cfg
         self.params = params
+        self._sample_key = jax.random.PRNGKey(sample_seed)
         self.tok = tokenizer or ByteTokenizer(cfg.vocab_size)
         self.recycler = recycler or Recycler(
             embedder=HashEmbedder(), enable_partial=enable_partial,
@@ -104,12 +106,24 @@ class Engine:
     # ------------------------------------------------------------------
     def generate(self, prompt: str, *, max_new_tokens: Optional[int] = None,
                  use_recycling: bool = True, admit: bool = False,
-                 stop_at_eos: bool = True) -> GenResult:
+                 stop_at_eos: bool = True, temperature: float = 0.0,
+                 top_k: int = 0) -> GenResult:
         max_new = max_new_tokens or self.max_new
         t0 = time.perf_counter()
         ids = self.tok.encode(prompt)
         m = len(ids)
         cap = self._capacity(m + max_new)
+        # greedy (the paper's do_sample=False) unless this request opted in;
+        # the key is folded per request AND per position -> deterministic
+        # replays without coupling requests to each other
+        if temperature > 0.0:
+            req_key = jax.random.fold_in(self._sample_key,
+                                         self.stats["requests"])
+            pick = lambda lg, p: sample_logits(
+                lg, jax.random.fold_in(req_key, p),
+                temperature=temperature, top_k=top_k)
+        else:
+            pick = lambda lg, p: greedy(lg)
 
         depth, hit, mode, sim = 0, False, "baseline", 0.0
         if use_recycling:
@@ -128,7 +142,7 @@ class Engine:
         logits, cache = self._prefill_fn(self.params, suffix,
                                          cache, depth)
         out_ids = []
-        tok = greedy(logits)[:, None]
+        tok = pick(logits, m)[:, None]
         pos = m
         for _ in range(max_new):
             out_ids.append(int(tok[0, 0]))
@@ -136,7 +150,7 @@ class Engine:
                 break
             logits, cache = self._decode_fn(self.params, tok, cache,
                                             jnp.int32(pos))
-            tok = greedy(logits)[:, None]
+            tok = pick(logits, pos + 1)[:, None]
             pos += 1
         jax.block_until_ready(logits)
         latency = time.perf_counter() - t0
@@ -198,6 +212,8 @@ class _Slot:
     sim: float
     emitted: list = field(default_factory=list)
     t0: float = 0.0
+    temperature: float = 0.0     # 0 = greedy (the paper's do_sample=False)
+    top_k: int = 0
 
 
 def _pool_load_row(pool, row, slot, tokens, pos, tok0, m):
@@ -280,13 +296,21 @@ class BatchedEngine(Engine):
         self._tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self._pos = jnp.zeros((max_batch,), jnp.int32)
         self._slots: List[Optional[_Slot]] = [None] * max_batch
+        # per-row sampling controls (0 temperature = greedy row); kept on
+        # host so the all-greedy fast path costs no rng or sort work
+        self._temp = np.zeros((max_batch,), np.float32)
+        self._topk = np.zeros((max_batch,), np.int32)
+        self._step_rng = self._sample_key
         # donate pool/tokens/pos: the step rewrites a handful of slots, so
         # without donation every decode step memcpys the whole pool
         self._load_fn = jax.jit(_pool_load_row, donate_argnums=(0, 3, 4))
         self._read_fn = jax.jit(_pool_read_row)
         self._bstep_fn = jax.jit(self._batched_step, donate_argnums=(1, 2, 3))
+        self._bstep_sampled_fn = jax.jit(self._batched_step_sampled,
+                                         donate_argnums=(1, 2, 3),
+                                         static_argnums=(7,))
         self.stats.update({"batched_decode_steps": 0, "oversize_skips": 0,
-                           "admissions": 0})
+                           "admissions": 0, "sampled_steps": 0})
 
     def _batched_step(self, params, tokens, pool, pos):
         # greedy is looked up at trace time on purpose: tests substitute it
@@ -295,6 +319,32 @@ class BatchedEngine(Engine):
                                    window=self.window, rt=self.rt)
         nxt = greedy(logits)                      # (B,)
         return nxt, nxt[:, None], pool, pos + 1
+
+    def _batched_step_sampled(self, params, tokens, pool, pos, temp, topk,
+                              rng, topk_cap):
+        """Mixed-policy step: rows with temperature > 0 draw from their
+        per-row categorical (per-row dynamic top-k), rows at 0 stay
+        greedy — one dispatch either way (ROADMAP open item).
+        ``topk_cap`` (static) is the batch's max requested k, so no row's
+        distribution is silently narrowed by a fixed cap."""
+        logits, pool = decode_step(self.cfg, params, tokens, pool, pos,
+                                   window=self.window, rt=self.rt)
+        nxt = sample_batched(logits, rng, temperature=temp, top_k=topk,
+                             top_k_cap=topk_cap)
+        return nxt, nxt[:, None], pool, pos + 1
+
+    def _advance(self):
+        """One decode step over the pool, dispatching the greedy or the
+        sampled executable depending on whether any row samples."""
+        if np.any(self._temp > 0.0):
+            self._step_rng, sub = jax.random.split(self._step_rng)
+            self.stats["sampled_steps"] += 1
+            return self._bstep_sampled_fn(
+                self.params, self._tokens, self.pool, self._pos,
+                jnp.asarray(self._temp), jnp.asarray(self._topk), sub,
+                max(int(self._topk.max()), 1))
+        return self._bstep_fn(self.params, self._tokens, self.pool,
+                              self._pos)
 
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -307,7 +357,8 @@ class BatchedEngine(Engine):
     def admit_slot(self, slot: int, prompt: str, *,
                    max_new_tokens: Optional[int] = None,
                    use_recycling: bool = True, admit: bool = False,
-                   stop_at_eos: bool = True) -> Optional[GenResult]:
+                   stop_at_eos: bool = True, temperature: float = 0.0,
+                   top_k: int = 0) -> Optional[GenResult]:
         """Prefill ``prompt`` into pool row ``slot`` (recycled prefix when
         available).  Returns a GenResult immediately — leaving the slot
         free — iff the request finishes at its very first token."""
@@ -340,7 +391,12 @@ class BatchedEngine(Engine):
 
         suffix = jnp.asarray(ids[depth:])[None]
         logits, cache = self._prefill_fn(self.params, suffix, cache, depth)
-        tok0 = greedy(logits)                     # (1,)
+        if temperature > 0.0:
+            self._step_rng, sub = jax.random.split(self._step_rng)
+            tok0 = sample_logits(logits, sub, temperature=temperature,
+                                 top_k=top_k)
+        else:
+            tok0 = greedy(logits)                 # (1,)
 
         self.stats["requests"] += 1
         self.stats["hits"] += int(hit)
@@ -350,7 +406,8 @@ class BatchedEngine(Engine):
 
         st = _Slot(prompt, ids, m, max_new, use_recycling, admit,
                    stop_at_eos, depth, hit, mode, sim,
-                   emitted=[int(tok0[0])], t0=t0)
+                   emitted=[int(tok0[0])], t0=t0,
+                   temperature=temperature, top_k=top_k)
         if (st.stop_at_eos and st.emitted[0] == EOS) or max_new == 1:
             # finished at the first token: never occupies the pool
             return self._result(st, host_cache=lambda: to_host(cache))
@@ -358,6 +415,8 @@ class BatchedEngine(Engine):
             self.pool, cache, jnp.int32(slot), self._tokens, self._pos,
             tok0, jnp.int32(m))
         self._slots[slot] = st
+        self._temp[slot] = temperature
+        self._topk[slot] = top_k
         return None
 
     # ------------------------------------------------------------------
@@ -369,8 +428,7 @@ class BatchedEngine(Engine):
         active = self.active_slots()
         if not active:
             return []
-        nxt, self._tokens, self.pool, self._pos = self._bstep_fn(
-            self.params, self._tokens, self.pool, self._pos)
+        nxt, self._tokens, self.pool, self._pos = self._advance()
         toks = np.asarray(nxt)
         self.stats["batched_decode_steps"] += 1
         done: List[Tuple[int, GenResult]] = []
@@ -383,6 +441,8 @@ class BatchedEngine(Engine):
                     st, host_cache=lambda i=i: to_host(
                         self._read_fn(self.pool, jnp.int32(i))))))
                 self._slots[i] = None
+                self._temp[i] = 0.0
+                self._topk[i] = 0
         return done
 
     # ------------------------------------------------------------------

@@ -1,0 +1,491 @@
+"""Paged continuous-batching engine: block-table KV pool with ref-counted
+prefix sharing (the device-resident recycling tier).
+
+The dense slot pool (``BatchedEngine``) gives every in-flight request a
+private ``[capacity]`` KV row and materializes every recycled hit from the
+host store — two requests sharing a 500-token prefix hold two device
+copies and both pay a host→device transfer.  This engine replaces the row
+with a *block table*: all K/V lives in ONE shared pool of ``block_size``-
+token blocks (``models.cache.init_paged_pool``), request r's cache is the
+ordered list of pool block ids in its table, and a block may appear in any
+number of tables at once.
+
+Two cache tiers serve admissions:
+
+  L1 — ``core.radix.BlockTrie``: token-block keys → live device blocks.
+       A warm-prefix admission composes its table from the resident chain
+       with **zero host round-trip**: shared full blocks are referenced in
+       place (refcount++), and only the divergent boundary block is
+       materialized fresh (copy-on-write through the prefill staging
+       buffer — a shared block is never written in place).
+  L2 — the existing ``Recycler``/``HostKVStore`` path: on an L1 miss the
+       host entry is promoted back to device in block-granular chunks and
+       indexed in L1 for the next admission.
+
+Static shapes still rule: the pool is one fixed ``[num_blocks, bs, ...]``
+allocation per layer, tables are fixed-width (sentinel-0 padded), and ONE
+compiled decode executable (`decode_step` over the paged cache) advances
+every in-flight request per step regardless of occupancy or sharing.
+
+Correctness contract (tests/test_paged_pool.py): paged decode is
+token-for-token identical to the dense slot pool — and therefore to serial
+``generate`` — for every admission mode; blocks shared between requests
+have refcount > 1 and are never written by either sharer.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import BlockAllocator, BlockPoolExhausted, BlockTrie
+from repro.core.blockpool import SENTINEL
+from repro.core.kvstore import to_host, tree_bytes
+from repro.core.recycler import grow_capacity
+from repro.data.tokenizer import EOS
+from repro.models import decode_step, init_paged_pool, paged_block_bytes
+from repro.serving import engine as engine_mod
+from repro.serving.engine import Engine, GenResult, _Slot
+from repro.serving.sampling import sample_batched, sample_logits
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# jitted pool <-> staging composition (device-to-device; no host traffic)
+# ---------------------------------------------------------------------------
+def _stage_from_pool(pool, chain_ids, depth: int, cap: int):
+    """Compose a dense single-request staging cache holding positions
+    [0, depth) gathered from pool blocks ``chain_ids`` — the layout the
+    existing (compiled) prefill consumes.  Pure device gather."""
+    stage = {}
+    for seg, c in pool.items():
+        sub = {}
+        for name in ("k", "v"):
+            a = c[name][:, chain_ids]                  # (L, ncb, bs, H, D)
+            L = a.shape[0]
+            a = a.reshape(L, -1, *a.shape[3:])[:, :depth]
+            a = jnp.pad(a, ((0, 0), (0, cap - depth), (0, 0), (0, 0)))
+            sub[name] = a[:, None]                     # (L, 1, cap, H, D)
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        sp = jnp.where(pos < depth, pos, -1)
+        sub["slot_pos"] = jnp.broadcast_to(sp, (c["k"].shape[0], cap))
+        stage[seg] = sub
+    return stage
+
+
+def _scatter_to_pool(pool, stage, dst_ids, start: int, n: int, bs: int):
+    """Write staging positions [start, start + n) into pool blocks
+    ``dst_ids`` (dst_ids[i] holds positions [start + i*bs, ...)).  The
+    copy-on-write boundary block is materialized here: staging already
+    holds the donor prefix for [start, depth), so the divergent block's
+    private copy costs no extra pass."""
+    ps = start + jnp.arange(n, dtype=jnp.int32)
+    blk = dst_ids[(ps - start) // bs]
+    off = ps % bs
+    out = {}
+    for seg, c in pool.items():
+        out[seg] = {
+            "k": c["k"].at[:, blk, off].set(stage[seg]["k"][:, 0, start:start + n]),
+            "v": c["v"].at[:, blk, off].set(stage[seg]["v"][:, 0, start:start + n]),
+            "block_tables": c["block_tables"],
+        }
+    return out
+
+
+def _set_row(pool, tokens, pos, row, table_row, tok0, m):
+    out = {}
+    for seg, c in pool.items():
+        out[seg] = {**c,
+                    "block_tables": c["block_tables"].at[:, row].set(table_row)}
+    return out, tokens.at[row].set(tok0), pos.at[row].set(m)
+
+
+def _set_table_entry(pool, row, idx, blk):
+    out = {}
+    for seg, c in pool.items():
+        out[seg] = {**c,
+                    "block_tables": c["block_tables"].at[:, row, idx].set(blk)}
+    return out
+
+
+def _clear_row(pool, row):
+    out = {}
+    for seg, c in pool.items():
+        out[seg] = {**c, "block_tables":
+                    c["block_tables"].at[:, row].set(SENTINEL)}
+    return out
+
+
+class PagedEngine(Engine):
+    """Continuous batching over a paged, prefix-shared device KV pool.
+
+    Drop-in replacement for ``BatchedEngine`` behind the scheduler surface
+    (``free_slots`` / ``admit_slot`` / ``decode_batch``); the dense slot
+    pool stays as the equivalence reference.  Trunk attention only, no
+    sliding window (paged blocks have no ring semantics), no kv_quant yet.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 capacity: int = 256, num_blocks: Optional[int] = None,
+                 **kw):
+        super().__init__(cfg, params, **kw)
+        if self.window:
+            raise NotImplementedError("paged pool does not support "
+                                      "sliding-window rings")
+        if self.kv_quant:
+            raise NotImplementedError("paged pool stores dense-dtype K/V")
+        bs = self.block                      # page size == radix block size
+        if capacity % bs:
+            capacity = _ceil_div(capacity, bs) * bs
+        self.max_batch = max_batch
+        self.capacity = capacity
+        self.nbt = capacity // bs            # fixed table width
+        if num_blocks is None:
+            # worst case every row full + one row's worth of retained
+            # prefixes in the L1 trie + the sentinel
+            num_blocks = max_batch * self.nbt + self.nbt + 1
+        self.allocator = BlockAllocator(num_blocks, bs)
+        self.trie = BlockTrie(bs)
+        self.pool = init_paged_pool(cfg, num_blocks, bs, max_batch,
+                                    self.nbt, dtype=jnp.dtype(cfg.dtype))
+        self._tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self._pos = jnp.zeros((max_batch,), jnp.int32)
+        self._slots: List[Optional[_Slot]] = [None] * max_batch
+        self._tables = np.zeros((max_batch, self.nbt), np.int32)  # host mirror
+        self._row_blocks: List[List[int]] = [[] for _ in range(max_batch)]
+        self._committed: List[int] = [0] * max_batch  # future allocs owed
+        self._temp = np.zeros((max_batch,), np.float32)
+        self._topk = np.zeros((max_batch,), np.int32)
+        self._step_rng = self._sample_key
+
+        self._stage_fn = jax.jit(_stage_from_pool, static_argnums=(2, 3))
+        self._scatter_fn = jax.jit(_scatter_to_pool,
+                                   static_argnums=(3, 4, 5),
+                                   donate_argnums=(0,))
+        self._setrow_fn = jax.jit(_set_row, donate_argnums=(0, 1, 2))
+        self._setent_fn = jax.jit(_set_table_entry, donate_argnums=(0,))
+        self._clear_fn = jax.jit(_clear_row, donate_argnums=(0,))
+        self._pstep_fn = jax.jit(self._paged_step, donate_argnums=(1, 2, 3))
+        self._pstep_sampled_fn = jax.jit(self._paged_step_sampled,
+                                         donate_argnums=(1, 2, 3),
+                                         static_argnums=(7,))
+        self.stats.update({
+            "batched_decode_steps": 0, "admissions": 0, "sampled_steps": 0,
+            "resident_hits": 0, "host_promotions": 0, "cow_copies": 0,
+            "h2d_copies": 0, "h2d_bytes": 0, "trie_evictions": 0,
+        })
+
+    # ------------------------------------------------------------------
+    def _paged_step(self, params, tokens, pool, pos):
+        # greedy via the engine module so tests can substitute it (early
+        # EOS) in the serial, dense-pool and paged paths at once
+        logits, pool = decode_step(self.cfg, params, tokens, pool, pos,
+                                   window=0, rt=self.rt)
+        nxt = engine_mod.greedy(logits)
+        return nxt, nxt[:, None], pool, pos + 1
+
+    def _paged_step_sampled(self, params, tokens, pool, pos, temp, topk,
+                            rng, topk_cap):
+        logits, pool = decode_step(self.cfg, params, tokens, pool, pos,
+                                   window=0, rt=self.rt)
+        nxt = sample_batched(logits, rng, temperature=temp, top_k=topk,
+                             top_k_cap=topk_cap)
+        return nxt, nxt[:, None], pool, pos + 1
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    # ------------------------------------------------------------------
+    # block bookkeeping
+    # ------------------------------------------------------------------
+    def _evictable(self, exclude=()) -> int:
+        ex = set(exclude)
+        return self.trie.evictable(
+            lambda b: b not in ex and self.allocator.refcount(b) == 1)
+
+    def _alloc_block(self, protect=()) -> int:
+        """A fresh private block, evicting cold L1 prefixes if needed.
+        ``protect`` names blocks that must survive eviction (e.g. the
+        boundary block an in-progress admission is about to gather)."""
+        try:
+            return self.allocator.alloc()
+        except BlockPoolExhausted:
+            ex = set(protect)
+            dropped = self.trie.evict(
+                1, lambda b: b not in ex and self.allocator.refcount(b) == 1)
+            for b in dropped:
+                self.allocator.unref(b)
+                self.stats["trie_evictions"] += 1
+            if not dropped:
+                raise
+            return self.allocator.alloc()
+
+    def device_kv_bytes_in_use(self) -> int:
+        """Bytes of pool K/V actually referenced (live blocks, counted
+        once however many tables share them)."""
+        return self.allocator.num_live() * paged_block_bytes(
+            self.cfg, self.block, dtype=jnp.dtype(self.cfg.dtype))
+
+    # ------------------------------------------------------------------
+    def admit_slot(self, slot: int, prompt: str, *,
+                   max_new_tokens: Optional[int] = None,
+                   use_recycling: bool = True, admit: bool = False,
+                   stop_at_eos: bool = True, temperature: float = 0.0,
+                   top_k: int = 0) -> Optional[GenResult]:
+        """Admit ``prompt`` into pool row ``slot``: L1 block-table reuse
+        when the prefix is device-resident, else L2 host promotion, else a
+        cold prefill — all through one staged dense prefill whose result
+        is scattered into (copy-on-write) private blocks."""
+        if self._slots[slot] is not None:
+            raise ValueError(f"slot {slot} is occupied")
+        max_new = max_new_tokens or self.max_new
+        t0 = time.perf_counter()
+        ids = self.tok.encode(prompt)
+        m = len(ids)
+        if m + max_new > self.capacity:
+            raise ValueError(f"request needs {m + max_new} positions; pool "
+                             f"capacity is {self.capacity}")
+        bs = self.block
+        nb_prompt = _ceil_div(m, bs)
+        nb_total = _ceil_div(m + max_new, bs)
+
+        depth, hit, mode, sim = 0, False, "baseline", 0.0
+        chain: List[Tuple[int, int]] = []
+        res = None
+        if use_recycling:
+            d1, chain = self.trie.lookup(ids)
+            d1 = min(d1, m - 1)
+            d2 = 0
+            if d1 < m - 1:
+                # L1 can still be beaten — consult the host (L2) tier.
+                # At maximal resident depth the lookup is skipped: no host
+                # hit (d2 <= m-1) could win, and Recycler.lookup would
+                # materialize the whole host cache just to be discarded.
+                res = self.recycler.lookup(prompt, ids)
+                d2 = res.reuse_depth if res.hit else 0
+                sim = res.similarity
+            # prefer the resident tier unless the host hit is deeper by
+            # MORE than one block: re-prefilling a partial-block tail is
+            # far cheaper than a host→device copy of the whole prefix
+            if d1 > 0 and d1 >= d2 - bs:
+                depth, hit, mode = d1, True, "resident_block"
+                # a resident hit is served by the trie, not retrieval —
+                # there is no honest similarity to report
+                sim = float("nan")
+                self.stats["resident_hits"] += 1
+            elif d2 > 0:
+                depth, hit, mode = d2, True, res.mode
+                self.stats["host_promotions"] += 1
+            else:
+                mode = "miss"
+        if mode != "resident_block":
+            chain = []
+
+        nb_shared = depth // bs if chain else 0
+        start = nb_shared * bs               # first position written fresh
+        shared = [b for b, _ in chain[:nb_shared]]
+        gather = [b for b, _ in chain[:_ceil_div(depth, bs)]] if chain else []
+
+        # admission guarantee: every block this request will ever need —
+        # now or at a later decode boundary — must be obtainable without
+        # starving the futures other in-flight rows were promised
+        need_now = nb_prompt - nb_shared
+        need_later = nb_total - nb_prompt
+        owed = sum(self._committed)
+        avail = self.allocator.num_free() + self._evictable(exclude=gather)
+        if avail < need_now + need_later + owed:
+            raise ValueError(
+                f"paged pool exhausted: request needs {need_now + need_later}"
+                f" blocks, {avail - owed} obtainable "
+                f"(free={self.allocator.num_free()}, "
+                f"in-flight reservations={owed})")
+
+        for b in shared:                      # share the resident prefix
+            self.allocator.ref(b)
+        fresh = [self._alloc_block(protect=gather) for _ in range(need_now)]
+        if chain and depth % bs:
+            # divergent boundary block: its private copy is written from
+            # staging below instead of mutating the shared original
+            self.stats["cow_copies"] += 1
+
+        # ---- staged dense prefill (the compiled serial path) ----------
+        cap = self._capacity(m)
+        if mode == "resident_block":
+            stage = self._stage_fn(self.pool, jnp.asarray(gather, jnp.int32),
+                                   depth, cap)
+        elif hit:
+            self.stats["h2d_copies"] += 1
+            self.stats["h2d_bytes"] += tree_bytes(res.cache)
+            stage = jax.tree.map(jnp.asarray, grow_capacity(res.cache, cap))
+        else:
+            stage = self._make_cache(cap)
+        suffix = jnp.asarray(ids[depth:])[None]
+        logits, stage = self._prefill_fn(self.params, suffix, stage, depth)
+
+        # ---- scatter the fresh region [start, m) into private blocks --
+        if fresh:
+            self.pool = self._scatter_fn(
+                self.pool, stage, jnp.asarray(fresh, jnp.int32),
+                start, m - start, bs)
+
+        # ---- index the now-resident prompt prefix in L1 ---------------
+        table_blocks = shared + fresh        # covers [0, m)
+        for b in self.trie.register(ids, m, table_blocks):
+            self.allocator.ref(b)            # the trie's own reference
+
+        if temperature > 0.0:
+            self._step_rng, sub = jax.random.split(self._step_rng)
+            tok0 = sample_logits(logits, sub, temperature=temperature,
+                                 top_k=top_k)
+        else:
+            tok0 = engine_mod.greedy(logits)
+
+        self.stats["requests"] += 1
+        self.stats["hits"] += int(hit)
+        self.stats["tokens_reused"] += depth
+        self.stats["tokens_prefilled"] += m - depth
+        self.stats["admissions"] += 1
+
+        st = _Slot(prompt, ids, m, max_new, use_recycling, admit,
+                   stop_at_eos, depth, hit, mode, sim,
+                   emitted=[int(tok0[0])], t0=t0,
+                   temperature=temperature, top_k=top_k)
+        if (st.stop_at_eos and st.emitted[0] == EOS) or max_new == 1:
+            # finished at its first token: the prompt prefix stays warm in
+            # L1, but the row is never occupied
+            result = self._result(st, stage=stage, cap=cap)
+            for b in table_blocks:
+                self.allocator.unref(b)
+            return result
+
+        row = np.full((self.nbt,), SENTINEL, np.int32)
+        row[:len(table_blocks)] = table_blocks
+        self._tables[slot] = row
+        self._row_blocks[slot] = list(table_blocks)
+        self._committed[slot] = need_later
+        self._temp[slot] = temperature
+        self._topk[slot] = top_k
+        self.pool, self._tokens, self._pos = self._setrow_fn(
+            self.pool, self._tokens, self._pos, slot, jnp.asarray(row),
+            tok0, jnp.int32(m))
+        self._slots[slot] = st
+        return None
+
+    # ------------------------------------------------------------------
+    def decode_batch(self) -> List[Tuple[int, GenResult]]:
+        """One masked decode step over the paged pool (single dispatch).
+        Before stepping, rows whose next write position crosses into an
+        unallocated table entry get a fresh private block (allocation is
+        on demand — device bytes track actual lengths, not capacity)."""
+        active = self.active_slots()
+        if not active:
+            return []
+        for i in active:
+            st = self._slots[i]
+            p = st.m + len(st.emitted) - 1   # position this step writes
+            idx = p // self.block
+            if self._tables[i, idx] == SENTINEL:
+                b = self._alloc_block()
+                self._tables[i, idx] = b
+                self._row_blocks[i].append(b)
+                self._committed[i] -= 1
+                self.pool = self._setent_fn(self.pool, i, idx, jnp.int32(b))
+
+        if np.any(self._temp > 0.0):
+            self._step_rng, sub = jax.random.split(self._step_rng)
+            self.stats["sampled_steps"] += 1
+            nxt, self._tokens, self.pool, self._pos = self._pstep_sampled_fn(
+                self.params, self._tokens, self.pool, self._pos,
+                jnp.asarray(self._temp), jnp.asarray(self._topk), sub,
+                max(int(self._topk.max()), 1))
+        else:
+            nxt, self._tokens, self.pool, self._pos = self._pstep_fn(
+                self.params, self._tokens, self.pool, self._pos)
+        toks = np.asarray(nxt)
+        self.stats["batched_decode_steps"] += 1
+        done: List[Tuple[int, GenResult]] = []
+        for i in active:
+            st = self._slots[i]
+            st.emitted.append(int(toks[i]))
+            if ((st.stop_at_eos and st.emitted[-1] == EOS)
+                    or len(st.emitted) >= st.max_new):
+                done.append((i, self._result(st, row=i)))
+                self._release_row(i)
+        return done
+
+    # ------------------------------------------------------------------
+    def _release_row(self, row: int) -> None:
+        """Free the row: drop its table references (prefix blocks indexed
+        in L1 survive as the device cache tier; generation-only blocks
+        fall to refcount 0 and return to the free list)."""
+        for b in self._row_blocks[row]:
+            self.allocator.unref(b)
+        self._row_blocks[row] = []
+        self._committed[row] = 0
+        self._tables[row] = SENTINEL
+        self._temp[row] = 0.0
+        self._topk[row] = 0
+        self.pool = self._clear_fn(self.pool, row)
+        self._slots[row] = None
+
+    # ------------------------------------------------------------------
+    def _result(self, st: _Slot, *, row: Optional[int] = None, stage=None,
+                cap: Optional[int] = None) -> GenResult:
+        if st.admit:
+            cap = cap or self._capacity(st.m + st.max_new)
+            if stage is None:
+                # harvest from the pool: gather the row's prompt blocks
+                # back into the dense host-store layout, valid [0, m)
+                ids = [b for b in self._tables[row]
+                       if b != SENTINEL][:_ceil_div(st.m, self.block)]
+                stage = self._stage_fn(self.pool,
+                                       jnp.asarray(ids, jnp.int32),
+                                       st.m, cap)
+            # else instant finish: the staging cache already holds exactly
+            # [0, m) — generated positions were never written into it
+            self.recycler.admit(st.prompt, st.ids, to_host(stage), st.m, cap)
+        all_ids = np.concatenate([st.ids, np.asarray(st.emitted, np.int32)])
+        return GenResult(
+            text=self.tok.decode(st.emitted),
+            token_ids=all_ids,
+            latency_s=time.perf_counter() - st.t0,
+            prompt_tokens=st.m,
+            gen_tokens=len(st.emitted),
+            reuse_depth=st.depth,
+            cache_hit=st.hit,
+            mode=st.mode if st.use_recycling else "baseline",
+            prompt_similarity=st.sim,
+        )
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Paged-pool global invariants (fuzzed in tests):
+          * allocator free/live accounting is consistent
+          * every block's refcount equals (#tables naming it) + (1 if the
+            L1 trie indexes it) — so a block in two tables is provably
+            shared, and no freed block is reachable
+          * table entries beyond a row's blocks are sentinel"""
+        self.allocator.check()
+        expected: Dict[int, int] = {}
+        for i in range(self.max_batch):
+            for b in self._row_blocks[i]:
+                expected[b] = expected.get(b, 0) + 1
+            named = [b for b in self._tables[i] if b != SENTINEL]
+            assert named == self._row_blocks[i], \
+                (i, named, self._row_blocks[i])
+        for b in self.trie.blocks():
+            expected[b] = expected.get(b, 0) + 1
+        for b in range(1, self.allocator.num_blocks):
+            assert self.allocator.refcount(b) == expected.get(b, 0), \
+                (b, self.allocator.refcount(b), expected.get(b, 0))

@@ -26,21 +26,38 @@ def sample_logits(logits, rng, *, temperature: float = 1.0, top_k: int = 0):
     return jax.random.categorical(rng, logits).astype(jnp.int32)
 
 
-def sample_batched(logits, rng, *, temperature=0.0, top_k: int = 0):
-    """Per-row sampling for the slot pool: logits (B, V) -> (B,) int32.
+def sample_batched(logits, rng, *, temperature=0.0, top_k=0,
+                   top_k_cap: int = 64):
+    """Per-row sampling for the slot/paged pools: logits (B, V) -> (B,).
 
     ``temperature`` may be a scalar or a per-row (B,) vector — rows at
     temperature 0 decode greedily while others sample, so one pool can mix
     deterministic and sampled requests in a single dispatch.  The rng is
-    split per row; pass a fresh key each step."""
+    split per row; pass a fresh key each step.
+
+    ``top_k`` likewise accepts a scalar (static, back-compat) or a per-row
+    (B,) int vector: row b keeps its ``top_k[b]`` best logits (0 = no
+    filter).  Per-row k is dynamic, so one sort of the top ``top_k_cap``
+    (static) logits serves every row; callers that know the batch's max k
+    should pass it as the cap (the pool engines do) — a row asking for
+    k > top_k_cap is clamped to the cap."""
     if isinstance(temperature, (int, float)) and temperature <= 0.0:
         return greedy(logits)                # static shortcut: trace-safe
     temperature = jnp.asarray(temperature, jnp.float32)
     t = jnp.broadcast_to(temperature, (logits.shape[0],))
     scaled = logits / jnp.maximum(t, 1e-6)[:, None]
-    if top_k:
+    if isinstance(top_k, (int,)) and top_k:
         vals, _ = jax.lax.top_k(scaled, top_k)
         scaled = jnp.where(scaled < vals[..., -1:], -jnp.inf, scaled)
+    elif not isinstance(top_k, int):
+        k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32),
+                             (logits.shape[0],))
+        cap = min(top_k_cap, logits.shape[-1])
+        vals, _ = jax.lax.top_k(scaled, cap)          # (B, cap) sorted desc
+        idx = jnp.clip(k, 1, cap) - 1
+        thr = jnp.take_along_axis(vals, idx[:, None], axis=1)
+        scaled = jnp.where((k > 0)[:, None] & (scaled < thr),
+                           -jnp.inf, scaled)
     keys = jax.random.split(rng, logits.shape[0])
     drawn = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
     return jnp.where(t > 0.0, drawn, greedy(logits))

@@ -7,9 +7,11 @@ off the queue and runs ``engine.generate`` one at a time.  It exists as the
 reference the batched path is benchmarked (and tested token-for-token)
 against.
 
-``ContinuousBatchingScheduler`` drives a ``BatchedEngine`` slot pool: it
-owns the admission policy (FIFO order, admit-before-decode), the slot
-allocator (free list over pool rows), and the in-flight set.  Every
+``ContinuousBatchingScheduler`` drives a pool engine — the dense
+``BatchedEngine`` slot pool or the paged ``PagedEngine`` block-table pool,
+both behind the same ``free_slots``/``admit_slot``/``decode_batch``
+surface: it owns the admission policy (FIFO order, admit-before-decode),
+the slot allocator (free list over pool rows), and the in-flight set.  Every
 ``step()`` first fills free slots from the queue head — each admission is a
 single-row prefill, recycled prefixes included — then advances ALL in-flight
 requests one token with a single jitted masked decode over the pool.  Rows
@@ -40,6 +42,11 @@ class Request:
     max_new_tokens: Optional[int] = None
     use_recycling: bool = True
     admit: bool = False
+    # sampling controls; 0 temperature = greedy (the paper's
+    # do_sample=False default).  Rows at different temperatures mix
+    # freely in one pool dispatch (engine `sample_batched`).
+    temperature: float = 0.0
+    top_k: int = 0
     submitted_at: float = field(default_factory=time.perf_counter)
     result: Optional[GenResult] = None
     error: Optional[str] = None          # set when admission rejects it
@@ -77,7 +84,8 @@ class FIFOScheduler:
             req = self._queue.popleft()
             req.result = self.engine.generate(
                 req.prompt, max_new_tokens=req.max_new_tokens,
-                use_recycling=req.use_recycling, admit=req.admit)
+                use_recycling=req.use_recycling, admit=req.admit,
+                temperature=req.temperature, top_k=req.top_k)
             served.append(req)
             self.completed.append(req)
         return served
@@ -132,7 +140,8 @@ class ContinuousBatchingScheduler:
             try:
                 res = self.engine.admit_slot(
                     slot, req.prompt, max_new_tokens=req.max_new_tokens,
-                    use_recycling=req.use_recycling, admit=req.admit)
+                    use_recycling=req.use_recycling, admit=req.admit,
+                    temperature=req.temperature, top_k=req.top_k)
             except ValueError as e:
                 # reject THIS request (e.g. longer than the pool capacity)
                 # without dropping the rest of the queue or the slot

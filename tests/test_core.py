@@ -156,6 +156,50 @@ class TestRecycler:
         sp = res.cache["seg0"]["slot_pos"]
         assert (sp[:, 4:] == -1).all()      # trimmed beyond reuse depth
 
+    def test_partial_hit_reports_entry_own_similarity(self):
+        """The similarity on a partial_block result must describe the hit
+        entry itself, not whatever sim_best the (rejected) exact-path
+        retrieval loop happened to see."""
+        r = Recycler(enable_partial=True, block_size=4)
+        e = r.admit("shared tokens prompt", np.arange(12),
+                    _attn_cache(filled=12), 12)
+        # textually unrelated query whose TOKENS share a block-aligned
+        # prefix: retrieval similarity to the entry is near zero, but the
+        # radix still finds the 8-token overlap
+        res = r.lookup("completely different words here",
+                       np.asarray([0, 1, 2, 3, 4, 5, 6, 7, 55, 66]))
+        assert res.hit and res.mode == "partial_block"
+        own = r.index.similarity(e.entry_id,
+                                 r.embedder.encode(
+                                     "completely different words here"))
+        assert res.similarity == pytest.approx(own)
+
+    def test_radix_lookup_prefers_true_recency(self):
+        """Two entries cover the same block prefix; lookup must prefer the
+        most recently TOUCHED one (served hit), not the highest id."""
+        rx = RadixPrefixCache(block_size=4)
+        rx.insert(np.arange(8), entry_id=1, length=8)
+        rx.insert(np.arange(8), entry_id=2, length=8)   # newer insert wins
+        assert rx.lookup(np.arange(8))[1] == 2
+        rx.touch(1)                                     # old entry re-hit
+        assert rx.lookup(np.arange(8))[1] == 1          # id order would say 2
+        rx.touch(2)
+        assert rx.lookup(np.arange(8))[1] == 2
+
+    def test_recycler_hit_refreshes_radix_recency(self):
+        """Serving a hit must stamp the entry in the radix too, so lookup
+        preference tracks the same LRU order the store eviction uses."""
+        r = Recycler(enable_partial=True, block_size=4)
+        toks = np.arange(8)
+        r.admit("first", toks, _attn_cache(), 8)
+        r.admit("second", toks.copy(), _attn_cache(), 8)
+        # both cover the same tokens; the radix serves the newer (id 1)...
+        assert r.radix.lookup(np.asarray([0, 1, 2, 3]))[1] == 1
+        # ...but after entry 0 serves an exact hit, IT is the fresher one
+        res = r.lookup("first", np.concatenate([toks, [20]]))
+        assert res.hit and res.entry.entry_id == 0
+        assert r.radix.lookup(np.asarray([0, 1, 2, 3]))[1] == 0
+
     def test_eviction_reaches_index_and_radix(self):
         cache = _attn_cache()
         entry_bytes = sum(a.nbytes for seg in cache.values()
