@@ -11,7 +11,11 @@ cold misses (the three admission modes a production pool sees), served by
   * the serial FIFO scheduler (one generate per request — the seed's path),
   * the continuous-batching dense slot pool at batch sizes {1, 4, 8},
   * the paged block-table pool at the same batch sizes (PR 2): shared
-    prefix blocks, ref-counted, device-resident across requests.
+    prefix blocks, ref-counted, device-resident across requests,
+  * with ``--int8``, the int8 paged pool (PR 4): int8 blocks + fused
+    dequant decode; the JSON gains ``paged_int8_b*`` rows and
+    ``int8_vs_fp_b*`` summaries (bytes-in-use reduction, tokens/s, max
+    resident blocks).
 
 All paths see identical precached recycler contents.  Each configuration
 runs the workload once untimed (jit warmup — per-suffix-length prefill
@@ -97,6 +101,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batches", type=int, nargs="+", default=[1, 4, 8])
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--int8", action="store_true",
+                    help="also run the int8 paged pool (kv_quant) and "
+                         "record fp-vs-int8 device_kv_bytes_in_use, "
+                         "tokens/s and max resident blocks")
     ap.add_argument("--json-out", default="BENCH_continuous_batching.json")
     args = ap.parse_args()
     if args.smoke:
@@ -132,39 +140,70 @@ def main():
                      "speedup": (toks / dt) / serial_tps,
                      "device_kv_bytes": cache_bytes(beng.pool)})
 
-    for b in args.batches:
-        peng = PagedEngine(cfg, params, max_batch=b,
-                           capacity=args.capacity,
-                           max_new_tokens=args.max_new, block_size=8,
-                           enable_partial=True)
-        peng.precache(CACHED)
-        dt, toks = timed_best(ContinuousBatchingScheduler(peng), prompts,
-                              args.max_new)
-        blk_bytes = paged_block_bytes(cfg, peng.block)
-        rows.append({"config": f"paged_pool_b{b}", "wall_s": dt,
-                     "gen_tokens": toks, "tokens_per_s": toks / dt,
-                     "speedup": (toks / dt) / serial_tps,
-                     # device_kv_bytes is the STATIC allocation in both
-                     # pool rows (apples to apples with dense_pool_b*);
-                     # the peak/in-use numbers show what sharing and
-                     # on-demand allocation actually touched
-                     "device_kv_bytes": cache_bytes(peng.pool),
-                     "device_kv_bytes_peak":
-                         peng.allocator.stats["peak_live"] * blk_bytes,
-                     "device_kv_bytes_in_use":
-                         peng.device_kv_bytes_in_use(),
-                     "resident_hits": peng.stats["resident_hits"],
-                     "host_promotions": peng.stats["host_promotions"],
-                     "h2d_bytes": peng.stats["h2d_bytes"],
-                     "cow_copies": peng.stats["cow_copies"]})
+    paged_variants = [(False, "paged_pool")]
+    if args.int8:
+        paged_variants.append((True, "paged_int8"))
+    for quant, label in paged_variants:
+        for b in args.batches:
+            peng = PagedEngine(cfg, params, max_batch=b,
+                               capacity=args.capacity,
+                               max_new_tokens=args.max_new, block_size=8,
+                               enable_partial=True, kv_quant=quant)
+            peng.precache(CACHED)
+            dt, toks = timed_best(ContinuousBatchingScheduler(peng), prompts,
+                                  args.max_new)
+            blk_bytes = paged_block_bytes(cfg, peng.block, quant=quant)
+            rows.append({"config": f"{label}_b{b}", "wall_s": dt,
+                         "gen_tokens": toks, "tokens_per_s": toks / dt,
+                         "speedup": (toks / dt) / serial_tps,
+                         # device_kv_bytes is the STATIC allocation in both
+                         # pool rows (apples to apples with dense_pool_b*);
+                         # the peak/in-use numbers show what sharing and
+                         # on-demand allocation actually touched
+                         "device_kv_bytes": cache_bytes(peng.pool),
+                         "device_kv_bytes_peak":
+                             peng.allocator.stats["peak_live"] * blk_bytes,
+                         "device_kv_bytes_in_use":
+                             peng.device_kv_bytes_in_use(),
+                         "max_resident_blocks":
+                             peng.allocator.stats["peak_live"],
+                         "resident_hits": peng.stats["resident_hits"],
+                         "host_promotions": peng.stats["host_promotions"],
+                         "h2d_bytes": peng.stats["h2d_bytes"],
+                         "cow_copies": peng.stats["cow_copies"]})
 
+    if args.int8:
+        # machine-readable fp-vs-int8 summary per batch size: the whole
+        # point of the int8 tier is more resident context per HBM byte
+        by = {r["config"]: r for r in rows}
+        for b in args.batches:
+            fp, q8 = by[f"paged_pool_b{b}"], by[f"paged_int8_b{b}"]
+            rows.append({
+                "config": f"int8_vs_fp_b{b}",
+                "bytes_in_use_fp": fp["device_kv_bytes_in_use"],
+                "bytes_in_use_int8": q8["device_kv_bytes_in_use"],
+                "bytes_reduction":
+                    fp["device_kv_bytes_in_use"]
+                    / max(q8["device_kv_bytes_in_use"], 1),
+                "tokens_per_s_fp": fp["tokens_per_s"],
+                "tokens_per_s_int8": q8["tokens_per_s"],
+                "max_resident_blocks_fp": fp["max_resident_blocks"],
+                "max_resident_blocks_int8": q8["max_resident_blocks"],
+            })
+
+    timed = [r for r in rows if "wall_s" in r]
     print(f"{'config':<16} {'wall_s':>8} {'gen_tok':>8} "
           f"{'tok/s':>10} {'speedup':>8}")
-    for r in rows:
+    for r in timed:
         print(f"{r['config']:<16} {r['wall_s']:>8.3f} {r['gen_tokens']:>8d} "
               f"{r['tokens_per_s']:>10.1f} {r['speedup']:>7.2f}x")
-    best = max(r["speedup"] for r in rows[1:])
+    best = max(r["speedup"] for r in timed[1:])
     print(f"\nbest batched speedup over serial: {best:.2f}x")
+    for r in rows:
+        if r["config"].startswith("int8_vs_fp"):
+            print(f"{r['config']}: {r['bytes_reduction']:.2f}x fewer device "
+                  f"KV bytes in use ({r['bytes_in_use_fp']} -> "
+                  f"{r['bytes_in_use_int8']})")
 
     record = {
         "benchmark": "continuous_batching",

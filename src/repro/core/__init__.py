@@ -14,6 +14,7 @@ from repro.core.blockpool import BlockAllocator, BlockPoolExhausted, SENTINEL
 from repro.core.embedder import HashEmbedder
 from repro.core.index import EmbeddingIndex
 from repro.core.kvstore import HostKVStore, CacheEntry
+from repro.core.quant import (dequantize_tree, is_quantized, quantize_tree)
 from repro.core.recycler import Recycler, RecycleResult
 from repro.core.radix import BlockTrie, RadixPrefixCache
 from repro.core.metrics import RunMetrics, summarize_runs
@@ -30,6 +31,9 @@ __all__ = [
     "Recycler",
     "RecycleResult",
     "RadixPrefixCache",
+    "quantize_tree",
+    "dequantize_tree",
+    "is_quantized",
     "RunMetrics",
     "summarize_runs",
 ]

@@ -14,9 +14,18 @@ Cold entries spill out of L1 under allocator pressure while their host copy
 survives; per-entry ``hits``/``last_hit`` plus ``stats`` make the tier's
 traffic observable (serving stats and benchmarks report them).
 
-Disk format: one ``<id>.npz`` per entry ('/'-joined tree paths as npz keys)
-plus a json sidecar with text/tokens/length — transparent and reloadable
-across sessions, like the paper's CSV+torch.save layout.
+Entries may be stored quantized: ``repro.core.quant`` (the int8 scheme
+shared with the device tier) turns float leaves into int8 + per-vector
+scales with a full-precision residual tail, and this store only does the
+byte accounting — ``CacheEntry.nbytes`` always reflects the
+post-quantization size, including the metadata leaves.
+
+Disk format: one ``<id>.npz`` per entry ('/'-joined tree paths as npz keys
+— quantized ``__q8__``/scale/tail leaves round-trip bit-exactly) plus a
+json sidecar with text/tokens/length and the LRU/tier state (hits,
+last_hit, clock).  ``load_dir`` enforces the byte budget on load and
+restores the tier state, so a reload neither exceeds ``max_bytes`` nor
+resets every entry to stone cold.
 """
 from __future__ import annotations
 
@@ -61,50 +70,12 @@ def tree_bytes(tree) -> int:
 
 
 # ---------------------------------------------------------------------------
-# int8 host-cache compression (beyond paper; cf. its CacheGen citation).
-# The paper notes host caches "grow large" (§6.1); symmetric per-vector int8
-# halves bf16 KV bytes (4x for f32) at ~0.4% RMS error — recycled outputs
-# stay semantically identical (validated in tests/benchmarks).
+# int8 host-cache compression now lives in ``repro.core.quant`` (one scheme
+# shared with the device tier — dense ``kv_quant`` caches and the int8 paged
+# pool).  Re-exported here for back-compat: this module was its home first.
 # ---------------------------------------------------------------------------
-_QKEY = "__q8__"
-_NO_COMPRESS = {"slot_pos"}
-
-
-def quantize_tree(tree):
-    """Float leaves -> {_QKEY: int8, "scale": f32 per last-dim vector}."""
-    def walk(t, name=None):
-        if isinstance(t, dict):
-            return {k: walk(v, k) for k, v in t.items()}
-        a = np.asarray(t)
-        if name in _NO_COMPRESS or not np.issubdtype(a.dtype, np.floating):
-            return a
-        amax = np.max(np.abs(a.astype(np.float32)), axis=-1, keepdims=True)
-        scale = (amax / 127.0 + 1e-12).astype(np.float32)
-        q = np.clip(np.round(a.astype(np.float32) / scale), -127, 127)
-        return {_QKEY: q.astype(np.int8), "scale": scale,
-                "dtype": np.dtype(a.dtype).str}
-    return walk(tree)
-
-
-def dequantize_tree(tree):
-    def walk(t):
-        if isinstance(t, dict):
-            if _QKEY in t:
-                dt = t["dtype"]
-                dt = dt.item() if hasattr(dt, "item") else dt
-                a = t[_QKEY].astype(np.float32) * t["scale"]
-                return a.astype(np.dtype(str(dt)))
-            return {k: walk(v) for k, v in t.items()}
-        return t
-    return walk(tree)
-
-
-def is_quantized(tree) -> bool:
-    def walk(t):
-        if isinstance(t, dict):
-            return _QKEY in t or any(walk(v) for v in t.values())
-        return False
-    return walk(tree)
+from repro.core.quant import (_QKEY, NO_COMPRESS as _NO_COMPRESS,  # noqa: F401
+                              dequantize_tree, is_quantized, quantize_tree)
 
 
 @dataclass
@@ -190,6 +161,11 @@ class HostKVStore:
 
     # ---- disk ----------------------------------------------------------
     def save_dir(self, path: str) -> None:
+        """Entries are written in LRU order (coldest first) — the same
+        order ``_entries`` maintains — so a reload under a byte budget
+        keeps the hottest entries.  The json sidecar carries the tier
+        state (hits / last_hit / clock) so a reload doesn't reset every
+        entry to stone cold."""
         os.makedirs(path, exist_ok=True)
         meta = {}
         for eid, e in self._entries.items():
@@ -199,13 +175,22 @@ class HostKVStore:
                 "token_ids": e.token_ids.tolist(),
                 "length": e.length,
                 "capacity": e.capacity,
+                "hits": e.hits,
+                "last_hit": e.last_hit,
             }
         with open(os.path.join(path, "index.json"), "w") as f:
-            json.dump({"next_id": self._next_id, "entries": meta}, f)
+            json.dump({"next_id": self._next_id, "clock": self._clock,
+                       "entries": meta}, f)
 
     @classmethod
     def load_dir(cls, path: str, max_bytes: Optional[int] = None
                  ) -> "HostKVStore":
+        """Reload a saved store.  The byte budget is enforced on load —
+        previously a reload could exceed ``max_bytes`` indefinitely (no
+        eviction ran until the next put) — and LRU/tier state (hits,
+        last_hit, clock) round-trips through the sidecar instead of
+        resetting to zero.  Quantized entries round-trip bit-exactly: npz
+        stores the ``__q8__``/scale/dtype leaves verbatim."""
         store = cls(max_bytes)
         with open(os.path.join(path, "index.json")) as f:
             meta = json.load(f)
@@ -214,8 +199,12 @@ class HostKVStore:
             with np.load(os.path.join(path, f"{eid}.npz")) as z:
                 cache = unflatten_cache({k: z[k] for k in z.files})
             e = CacheEntry(eid, m["text"], np.asarray(m["token_ids"], np.int32),
-                           cache, m["length"], m["capacity"])
+                           cache, m["length"], m["capacity"],
+                           hits=m.get("hits", 0),
+                           last_hit=m.get("last_hit", -1))
             store._entries[eid] = e
             store.total_bytes += e.nbytes
         store._next_id = meta["next_id"]
+        store._clock = meta.get("clock", 0)
+        store.evict_to_budget()
         return store

@@ -21,14 +21,12 @@ import numpy as np
 
 from repro.core.embedder import HashEmbedder
 from repro.core.index import EmbeddingIndex
-from repro.core import kvstore as kvq
+from repro.core import quant as kvq
 from repro.core.kvstore import CacheEntry, HostKVStore
+from repro.core.quant import CAP_AXIS as _CAP_AXIS
 from repro.core.radix import RadixPrefixCache
 
 _STATEFUL_KEYS = {"wkv", "h", "conv", "shift_t", "shift_c"}
-# capacity-axis (from the right) per leaf name, for grow_capacity
-_CAP_AXIS = {"k": -3, "v": -3, "ckv": -2, "krope": -2, "slot_pos": -1,
-             "k_scale": -2, "v_scale": -2}
 _NO_RESIZE = {"cross_k", "cross_v"}
 
 
@@ -123,22 +121,31 @@ class Recycler:
     def __init__(self, store: Optional[HostKVStore] = None,
                  embedder: Optional[HashEmbedder] = None,
                  *, enable_partial: bool = False, block_size: int = 64,
-                 retrieval_k: int = 4, compress: bool = False):
+                 retrieval_k: int = 4, compress: bool = False,
+                 compress_residual: int = kvq.DEFAULT_RESIDUAL):
         # NB: not ``store or ...`` — an empty HostKVStore is falsy (__len__)
         self.store = store if store is not None else HostKVStore()
         self.embedder = embedder if embedder is not None else HashEmbedder()
         self.index = EmbeddingIndex(self.embedder.dim)
         self.radix = RadixPrefixCache(block_size) if enable_partial else None
         self.retrieval_k = retrieval_k
-        # int8 host-cache compression (beyond paper): halves bf16 KV bytes
+        # int8 host-cache compression (beyond paper): halves bf16 KV bytes.
+        # The last ``compress_residual`` valid positions stay full precision
+        # (core.quant residual tail) so recycled greedy output matches the
+        # uncompressed path; the invalid region beyond ``length`` is dropped.
         self.compress = compress
+        self.compress_residual = compress_residual
 
     # ------------------------------------------------------------------
     def admit(self, text: str, token_ids, cache_host, length: int,
-              capacity: Optional[int] = None) -> CacheEntry:
-        """Store a finished run's cache for future recycling (paper §2.4)."""
-        if self.compress:
-            cache_host = kvq.quantize_tree(cache_host)
+              capacity: Optional[int] = None,
+              compress: Optional[bool] = None) -> CacheEntry:
+        """Store a finished run's cache for future recycling (paper §2.4).
+        ``compress`` overrides the recycler-wide default for this entry
+        (byte-budget eviction fires either way)."""
+        if self.compress if compress is None else compress:
+            cache_host = kvq.quantize_tree(cache_host, length=length,
+                                           residual=self.compress_residual)
         entry = self.store.put(text, token_ids, cache_host, length, capacity)
         self.index.add(entry.entry_id, self.embedder.encode(text))
         if self.radix is not None and is_trimmable(cache_host):
@@ -185,7 +192,11 @@ class Recycler:
                 best_partial = (depth, self.store.get(eid, touch=False))
 
         def _materialize(cache):
-            return kvq.dequantize_tree(cache) if self.compress else cache
+            # per-entry, not self.compress: admit() can toggle compression
+            # per entry, and natively-quantized device-layout caches
+            # (k_scale present, no __q8__) pass through untouched
+            return (kvq.dequantize_tree(cache) if kvq.is_quantized(cache)
+                    else cache)
 
         if best_exact and (not best_partial or best_exact[0] >= best_partial[0]):
             depth, e, sim = best_exact

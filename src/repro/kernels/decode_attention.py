@@ -149,14 +149,15 @@ def decode_attention_batched(q, k_cache, v_cache, slot_pos, pos, *, window=0,
     return out.reshape(B, Hkv, G, D).reshape(B, 1, H, D)
 
 
-def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *, scale, bs, nbt, hkv):
-    """One (batch*kv_head, table_entry) program: the BlockSpec index map
-    already resolved table entry ``ti`` to a pool block, so k_ref/v_ref
-    hold that block's (bs, d) tile.  Masking is implicit-position based:
-    tile ti slot j is absolute position ti*bs + j."""
-    ti = pl.program_id(1)
-
+def _paged_accumulate(ti, nbt, q_ref, k, v, pos, o_ref, m_scr, l_scr,
+                      acc_scr, *, scale, bs):
+    """Shared body of the paged decode kernels: one online-softmax step of
+    the G grouped query heads against this program's (bs, d) K/V tile,
+    masked by implicit positions (tile ti slot j == position ti*bs + j,
+    valid iff <= the row's decode position), with the normalized write on
+    the last tile.  The fp and int8 kernels differ only in how they
+    source ``k``/``v`` — everything that must stay in lockstep for
+    fp-vs-int8 token equivalence lives here."""
     @pl.when(ti == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
@@ -164,9 +165,6 @@ def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0].astype(jnp.float32)                  # (G, d)
-    k = k_ref[0, 0].astype(jnp.float32)               # (bs, d)
-    v = v_ref[0, 0].astype(jnp.float32)
-    pos = pos_ref[pl.program_id(0) // hkv]            # this row's position
     tok = ti * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
 
     s = q @ k.T * scale                               # (G, bs)
@@ -186,6 +184,19 @@ def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     def _write():
         o_ref[0] = (acc_scr[...]
                     / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale, bs, nbt, hkv):
+    """One (batch*kv_head, table_entry) program: the BlockSpec index map
+    already resolved table entry ``ti`` to a pool block, so k_ref/v_ref
+    hold that block's (bs, d) tile."""
+    ti = pl.program_id(1)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bs, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[pl.program_id(0) // hkv]            # this row's position
+    _paged_accumulate(ti, nbt, q_ref, k, v, pos, o_ref, m_scr, l_scr,
+                      acc_scr, scale=scale, bs=bs)
 
 
 def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *,
@@ -230,6 +241,100 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *,
         out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), pos.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(B, Hkv, G, D).reshape(B, 1, H, D)
+
+
+def _paged_decode_kernel_quant(tbl_ref, pos_ref, q_ref, k_ref, v_ref,
+                               ks_ref, vs_ref, kt_ref, vt_ref, o_ref,
+                               m_scr, l_scr, acc_scr, *, scale, bs, nbt,
+                               hkv, rtail):
+    """int8 variant of ``_paged_decode_kernel``: K/V tiles arrive as int8
+    pool blocks plus their per-vector f32 scales (same table-lookup index
+    map), and the dequant multiply is fused into the gather — HBM traffic
+    for sealed blocks is the int8 bytes.  The row's most recent ``rtail``
+    blocks are instead read from its fp ring tail (ring slot ti % rtail),
+    so quantization error never sits where attention mass is largest."""
+    ti = pl.program_id(1)
+    k8 = k_ref[0, 0].astype(jnp.float32)              # (bs, d) int8 tile
+    v8 = v_ref[0, 0].astype(jnp.float32)
+    ks = ks_ref[0, 0].astype(jnp.float32)             # (bs,) f32 scales
+    vs = vs_ref[0, 0].astype(jnp.float32)
+    kt = kt_ref[0, 0].astype(jnp.float32)             # (bs, d) fp ring tile
+    vt = vt_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[pl.program_id(0) // hkv]            # this row's position
+
+    open_b = pos // bs
+    use_fp = (ti <= open_b) & (ti > open_b - rtail)   # scalar: recent block?
+    k = jnp.where(use_fp, kt, k8 * ks[:, None])
+    v = jnp.where(use_fp, vt, v8 * vs[:, None])
+    _paged_accumulate(ti, nbt, q_ref, k, v, pos, o_ref, m_scr, l_scr,
+                      acc_scr, scale=scale, bs=bs)
+
+
+def paged_decode_attention_quant(q, k_pool, v_pool, k_scale, v_scale,
+                                 k_tail, v_tail, block_tables, pos, *,
+                                 scale=None, interpret=True):
+    """Fused-dequant block-table decode: q (B,1,H,D); int8 pools
+    (NB, bs, Hkv, D) with f32 scales (NB, bs, Hkv); per-row fp ring tails
+    (B, R*bs, Hkv, D); block_tables (B, NBt) int32; pos (B,).  The
+    scalar-prefetch table gather is unchanged from the fp kernel — only
+    the tile contents differ (int8 + scale, or the fp ring slot for the
+    row's most recent R blocks).  Returns (B,1,H,D)."""
+    B, _, H, D = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    NBt = block_tables.shape[1]
+    R = k_tail.shape[1] // bs
+    G = H // Hkv
+    scale = scale or D ** -0.5
+
+    qr = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    kr = k_pool.transpose(2, 0, 1, 3)                 # (Hkv, NB, bs, D) int8
+    vr = v_pool.transpose(2, 0, 1, 3)
+    ksr = k_scale.transpose(2, 0, 1)                  # (Hkv, NB, bs) f32
+    vsr = v_scale.transpose(2, 0, 1)
+    ktr = (k_tail.reshape(B, R, bs, Hkv, D)           # (B*Hkv, R, bs, D)
+           .transpose(0, 3, 1, 2, 4).reshape(B * Hkv, R, bs, D))
+    vtr = (v_tail.reshape(B, R, bs, Hkv, D)
+           .transpose(0, 3, 1, 2, 4).reshape(B * Hkv, R, bs, D))
+
+    kernel = functools.partial(_paged_decode_kernel_quant, scale=scale,
+                               bs=bs, nbt=NBt, hkv=Hkv, rtail=R)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block table + per-row positions
+        grid=(B * Hkv, NBt),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, ti, tbl, pos: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda bh, ti, tbl, pos, hkv=Hkv:
+                         (bh % hkv, tbl[bh // hkv, ti], 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda bh, ti, tbl, pos, hkv=Hkv:
+                         (bh % hkv, tbl[bh // hkv, ti], 0, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda bh, ti, tbl, pos, hkv=Hkv:
+                         (bh % hkv, tbl[bh // hkv, ti], 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda bh, ti, tbl, pos, hkv=Hkv:
+                         (bh % hkv, tbl[bh // hkv, ti], 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda bh, ti, tbl, pos, r=R: (bh, ti % r, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda bh, ti, tbl, pos, r=R: (bh, ti % r, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda bh, ti, tbl, pos: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32),
+      qr, kr, vr, ksr, vsr, ktr, vtr)
     return out.reshape(B, Hkv, G, D).reshape(B, 1, H, D)
 
 

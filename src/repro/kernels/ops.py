@@ -11,6 +11,8 @@ from repro.kernels.decode_attention import (decode_attention_batched
                                             as _decode_batched)
 from repro.kernels.decode_attention import (paged_decode_attention
                                             as _decode_paged)
+from repro.kernels.decode_attention import (paged_decode_attention_quant
+                                            as _decode_paged_quant)
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
@@ -59,6 +61,19 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *,
     gathers each row's K/V blocks through its table; pos (B,)."""
     return _decode_paged(q, k_pool, v_pool, block_tables, pos,
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_quant(q, k_pool, v_pool, k_scale, v_scale,
+                                 k_tail, v_tail, block_tables, pos, *,
+                                 interpret=True):
+    """int8 block-table decode with the dequant fused into the table
+    gather: pools (NB, bs, Hkv, D) int8 + per-vector f32 scales; the
+    row's most recent blocks come from its fp ring tail (B, R*bs, Hkv, D)
+    instead of the int8 pool."""
+    return _decode_paged_quant(q, k_pool, v_pool, k_scale, v_scale,
+                               k_tail, v_tail, block_tables, pos,
+                               interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

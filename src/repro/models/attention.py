@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.core.quant import dequantize_vectors_jnp, quantize_vectors_jnp
 from repro.models.layers import dense_init, rmsnorm, split_tree, apply_rope
 
 NEG_INF = -1e30
@@ -244,22 +245,17 @@ def init_kv_cache(batch: int, capacity: int, hkv: int, dh: int, dtype,
     }
 
 
-def _quantize_kv(x):
-    """x (B,n,H,D) -> (int8, f32 scale (B,n,H)); symmetric per vector."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    scale = amax / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale
+# Symmetric per-vector int8 — ONE scheme shared with the host tier
+# (repro.core.quant), so int8 K/V move host<->device without a
+# dequant/requant round-trip.
+_quantize_kv = quantize_vectors_jnp
 
 
 def dequantize_cache(cache, dtype):
     """int8 cache view -> dense K/V (fused into the attention matmul on
     TPU; the HBM traffic is the int8 bytes)."""
-    k = (cache["k"].astype(jnp.float32)
-         * cache["k_scale"][..., None]).astype(dtype)
-    v = (cache["v"].astype(jnp.float32)
-         * cache["v_scale"][..., None]).astype(dtype)
+    k = dequantize_vectors_jnp(cache["k"], cache["k_scale"], dtype)
+    v = dequantize_vectors_jnp(cache["v"], cache["v_scale"], dtype)
     return k, v
 
 
@@ -292,7 +288,8 @@ def cache_write(cache, k_new, v_new, start_pos):
 
 
 def init_paged_kv_cache(num_blocks: int, block_size: int, hkv: int, dh: int,
-                        dtype, *, max_batch: int, max_blocks_per_seq: int):
+                        dtype, *, max_batch: int, max_blocks_per_seq: int,
+                        quant: bool = False, fp_tail_blocks: int = 2):
     """Paged KV pool for one layer: ONE shared block pool plus per-request
     block tables, instead of a private dense row per request.
 
@@ -305,13 +302,36 @@ def init_paged_kv_cache(num_blocks: int, block_size: int, hkv: int, dh: int,
     entries (and inactive rows) read/write one harmless scratch block.
     Validity is *implicit* — slot j of table entry i holds position
     i*bs + j, valid iff <= the row's decode position — so no slot_pos
-    array exists and blocks can be shared by any number of tables."""
-    return {
-        "k": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
-        "v": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
+    array exists and blocks can be shared by any number of tables.
+
+    ``quant=True`` stores pool K/V as int8 with a per-(token, head) f32
+    scale (same scheme as the host tier, ``repro.core.quant``) — ~2-4x
+    more resident blocks per HBM byte — plus a per-ROW full-precision
+    **ring tail** ``k_tail/v_tail (max_batch, fp_tail_blocks*bs, Hkv,
+    Dh)``: the row's most recent ``fp_tail_blocks`` blocks are attended
+    in their original dtype (ring slot ``ti % fp_tail_blocks`` holds
+    block ti) and only older, effectively sealed blocks go through the
+    fused int8 dequant.  That is the device-tier analogue of the host
+    residual tail: quantization error never sits where attention mass is
+    largest."""
+    cache = {
+        "k": jnp.zeros((num_blocks, block_size, hkv, dh),
+                       jnp.int8 if quant else dtype),
+        "v": jnp.zeros((num_blocks, block_size, hkv, dh),
+                       jnp.int8 if quant else dtype),
         "block_tables": jnp.zeros((max_batch, max_blocks_per_seq),
                                   jnp.int32),
     }
+    if quant:
+        cache["k_scale"] = jnp.zeros((num_blocks, block_size, hkv),
+                                     jnp.float32)
+        cache["v_scale"] = jnp.zeros((num_blocks, block_size, hkv),
+                                     jnp.float32)
+        cache["k_tail"] = jnp.zeros(
+            (max_batch, fp_tail_blocks * block_size, hkv, dh), dtype)
+        cache["v_tail"] = jnp.zeros(
+            (max_batch, fp_tail_blocks * block_size, hkv, dh), dtype)
+    return cache
 
 
 def is_paged_cache(cache) -> bool:
@@ -323,13 +343,32 @@ def paged_cache_write(cache, k_new, v_new, pos):
     through its block table.  The target block is exclusively owned by row
     b (copy-on-write upstream guarantees it), so rows never collide;
     inactive rows carry all-sentinel tables and scribble harmlessly on
-    block 0."""
+    block 0.
+
+    int8 pools dual-write: the quantized vector goes into the pool block
+    (per-vector scales make write-time quantization identical to sealing
+    the block later — each vector is quantized exactly once) and the fp
+    original into the row's ring tail, so decode attention reads the most
+    recent blocks at full precision."""
     bs = cache["k"].shape[1]
     B = k_new.shape[0]
     p = pos.astype(jnp.int32)
     rows = jnp.arange(B, dtype=jnp.int32)
     blk = cache["block_tables"][rows, p // bs]
     off = p % bs
+    if is_quant_cache(cache):
+        kq, ks = _quantize_kv(k_new[:, 0])
+        vq, vs = _quantize_kv(v_new[:, 0])
+        ring = (p // bs) % (cache["k_tail"].shape[1] // bs) * bs + off
+        return {
+            "k": cache["k"].at[blk, off].set(kq),
+            "v": cache["v"].at[blk, off].set(vq),
+            "k_scale": cache["k_scale"].at[blk, off].set(ks),
+            "v_scale": cache["v_scale"].at[blk, off].set(vs),
+            "k_tail": cache["k_tail"].at[rows, ring].set(k_new[:, 0]),
+            "v_tail": cache["v_tail"].at[rows, ring].set(v_new[:, 0]),
+            "block_tables": cache["block_tables"],
+        }
     return {
         "k": cache["k"].at[blk, off].set(k_new[:, 0]),
         "v": cache["v"].at[blk, off].set(v_new[:, 0]),
@@ -337,19 +376,50 @@ def paged_cache_write(cache, k_new, v_new, pos):
     }
 
 
+def _paged_gather_dequant(cache, dtype):
+    """int8 pool -> per-row dense K/V (B, NBt*bs, Hkv, Dh): gather through
+    the tables with dequant fused, then overlay the row's fp ring tail on
+    its most recent ``fp_tail_blocks`` blocks."""
+    tbl = cache["block_tables"]
+    B, NBt = tbl.shape
+    bs = cache["k"].shape[1]
+    R = cache["k_tail"].shape[1] // bs
+    k = dequantize_vectors_jnp(cache["k"][tbl], cache["k_scale"][tbl], dtype)
+    v = dequantize_vectors_jnp(cache["v"][tbl], cache["v_scale"][tbl], dtype)
+    # ring slot ti % R holds block ti's fp values for the last R blocks a
+    # row progressed through; older slots are stale, so gate on recency at
+    # attention time (the caller masks positions > pos regardless)
+    ti = jnp.arange(NBt, dtype=jnp.int32)
+    tail_k = cache["k_tail"].reshape(B, R, bs, *k.shape[3:])[:, ti % R]
+    tail_v = cache["v_tail"].reshape(B, R, bs, *v.shape[3:])[:, ti % R]
+    return k, v, tail_k, tail_v
+
+
 def attend_paged(q, cache, pos):
     """Reference paged decode attention: gather K/V through the block
-    table, mask by implicit positions.  q (B,1,H,Dh); pos (B,)."""
+    table, mask by implicit positions.  q (B,1,H,Dh); pos (B,).  int8
+    pools dequantize in the gather and read the most recent
+    ``fp_tail_blocks`` blocks from the row's fp ring tail instead."""
     B = q.shape[0]
     NBt = cache["block_tables"].shape[1]
     bs = cache["k"].shape[1]
-    k = cache["k"][cache["block_tables"]]        # (B, NBt, bs, Hkv, Dh)
-    v = cache["v"][cache["block_tables"]]
+    p = pos.astype(jnp.int32)
+    if is_quant_cache(cache):
+        k, v, tail_k, tail_v = _paged_gather_dequant(cache, q.dtype)
+        R = cache["k_tail"].shape[1] // bs
+        ti = jnp.arange(NBt, dtype=jnp.int32)
+        recent = (ti[None] <= (p // bs)[:, None]) & \
+                 (ti[None] > (p // bs)[:, None] - R)       # (B, NBt)
+        sel = recent[:, :, None, None, None]
+        k = jnp.where(sel, tail_k, k)
+        v = jnp.where(sel, tail_v, v)
+    else:
+        k = cache["k"][cache["block_tables"]]    # (B, NBt, bs, Hkv, Dh)
+        v = cache["v"][cache["block_tables"]]
     k = k.reshape(B, NBt * bs, *k.shape[3:])
     v = v.reshape(B, NBt * bs, *v.shape[3:])
     kv_pos = jnp.arange(NBt * bs, dtype=jnp.int32)
-    return attend_direct(q, k, v, pos.astype(jnp.int32)[:, None], kv_pos,
-                         causal=True)
+    return attend_direct(q, k, v, p[:, None], kv_pos, causal=True)
 
 
 def cache_write_batched(cache, k_new, v_new, pos):
@@ -555,6 +625,11 @@ def _pallas_decode_batched(cfg, q, cache, pos, window, rt):
 
 def _pallas_decode_paged(cfg, q, cache, pos, rt):
     from repro.kernels import ops
+    if is_quant_cache(cache):
+        return ops.paged_decode_attention_quant(
+            q, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+            cache["k_tail"], cache["v_tail"], cache["block_tables"], pos,
+            interpret=rt.pallas_interpret)
     return ops.paged_decode_attention(
         q, cache["k"], cache["v"], cache["block_tables"], pos,
         interpret=rt.pallas_interpret)

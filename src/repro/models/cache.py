@@ -94,14 +94,19 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
 
 
 def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
-                    max_batch: int, max_blocks_per_seq: int, *, dtype=None):
+                    max_batch: int, max_blocks_per_seq: int, *, dtype=None,
+                    quant: bool = False, fp_tail_blocks: int = 2):
     """Paged continuous-batching pool: ONE shared block pool per layer
     plus per-request block tables (``attention.init_paged_kv_cache``),
     stacked over the layer scan like every other cache.  Blocks are
     addressed identically in every layer — block id b holds token block b
     of some request in ALL layers — so one host-side allocator covers the
     whole stack.  Trunk attention only (same restriction as ``per_slot``):
-    recurrent/enc-dec/MLA state cannot be sliced into shared blocks."""
+    recurrent/enc-dec/MLA state cannot be sliced into shared blocks.
+
+    ``quant=True`` stores pool K/V int8 with per-vector f32 scales plus a
+    per-row fp ring tail of ``fp_tail_blocks`` blocks — ~2-4x more
+    resident blocks per HBM byte (see ``attention.init_paged_kv_cache``)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     if cfg.mla is not None:
         raise NotImplementedError(
@@ -114,18 +119,26 @@ def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
                 f"paged pool unsupported for segment kind {kind!r}")
         c = attn.init_paged_kv_cache(
             num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim, dtype,
-            max_batch=max_batch, max_blocks_per_seq=max_blocks_per_seq)
+            max_batch=max_batch, max_blocks_per_seq=max_blocks_per_seq,
+            quant=quant, fp_tail_blocks=fp_tail_blocks)
         pool[f"seg{i}"] = _stack(c, n)
     return pool
 
 
 def paged_block_bytes(cfg: ModelConfig, block_size: int, *,
-                      dtype=None) -> int:
+                      dtype=None, quant: bool = False) -> int:
     """Device bytes ONE pool block occupies across the whole layer stack
-    (K + V) — the unit of the paged engine's bytes-in-use accounting."""
+    (K + V) — the unit of the paged engine's bytes-in-use accounting.
+    ``quant=True``: int8 K/V plus the per-vector f32 scale (the per-row fp
+    ring tails are per-ROW constants, not per-block, so they are not part
+    of the per-block unit)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
-    per_layer = 2 * block_size * cfg.num_kv_heads * cfg.head_dim
-    return per_layer * jnp.dtype(dtype).itemsize * cfg.num_layers
+    vectors = 2 * block_size * cfg.num_kv_heads
+    if quant:
+        per_layer = vectors * (cfg.head_dim + 4)     # int8 elems + f32 scale
+    else:
+        per_layer = vectors * cfg.head_dim * jnp.dtype(dtype).itemsize
+    return per_layer * cfg.num_layers
 
 
 def cache_struct(cfg: ModelConfig, batch: int, capacity: int,

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core import HashEmbedder, Recycler
+from repro.core import quant
 from repro.core.kvstore import to_host
 from repro.core.recycler import (grow_capacity, is_trimmable,
                                  shrink_capacity, trim_to_depth)
@@ -58,6 +59,7 @@ class Engine:
                  max_new_tokens: int = 32,
                  window: int = 0,
                  compress_host_cache: bool = False,
+                 compress_residual: Optional[int] = None,
                  kv_quant: bool = False,
                  sample_seed: int = 0,
                  rt: Runtime = LOCAL):
@@ -65,9 +67,12 @@ class Engine:
         self.params = params
         self._sample_key = jax.random.PRNGKey(sample_seed)
         self.tok = tokenizer or ByteTokenizer(cfg.vocab_size)
+        if compress_residual is None:
+            compress_residual = quant.DEFAULT_RESIDUAL
         self.recycler = recycler or Recycler(
             embedder=HashEmbedder(), enable_partial=enable_partial,
-            block_size=block_size, compress=compress_host_cache)
+            block_size=block_size, compress=compress_host_cache,
+            compress_residual=compress_residual)
         self.block = block_size
         self.max_new = max_new_tokens
         self.window = window

@@ -27,10 +27,19 @@ allocation per layer, tables are fixed-width (sentinel-0 padded), and ONE
 compiled decode executable (`decode_step` over the paged cache) advances
 every in-flight request per step regardless of occupancy or sharing.
 
+``kv_quant=True`` stores the L1 pool in **int8** (``repro.core.quant``
+scheme, shared with the host tier): ~2-4x more resident blocks per HBM
+byte, dequant fused into the block-table gather
+(``kernels.paged_decode_attention_quant``), a per-row fp ring tail over
+the most recent blocks, and int8-verbatim block movement between the
+tiers — see the ``PagedEngine`` docstring for the one-quantization
+invariant.
+
 Correctness contract (tests/test_paged_pool.py): paged decode is
 token-for-token identical to the dense slot pool — and therefore to serial
-``generate`` — for every admission mode; blocks shared between requests
-have refcount > 1 and are never written by either sharer.
+``generate`` — for every admission mode (and the int8 pool to the fp
+pool); blocks shared between requests have refcount > 1 and are never
+written by either sharer.
 """
 from __future__ import annotations
 
@@ -45,9 +54,12 @@ from repro.config import ModelConfig
 from repro.core import BlockAllocator, BlockPoolExhausted, BlockTrie
 from repro.core.blockpool import SENTINEL
 from repro.core.kvstore import to_host, tree_bytes
+from repro.core import quant as kvq
+from repro.core.quant import dequantize_vectors_jnp, quantize_vectors_jnp
 from repro.core.recycler import grow_capacity
 from repro.data.tokenizer import EOS
-from repro.models import decode_step, init_paged_pool, paged_block_bytes
+from repro.models import (decode_step, init_cache, init_paged_pool,
+                          paged_block_bytes)
 from repro.serving import engine as engine_mod
 from repro.serving.engine import Engine, GenResult, _Slot
 from repro.serving.sampling import sample_batched, sample_logits
@@ -63,16 +75,43 @@ def _ceil_div(a: int, b: int) -> int:
 def _stage_from_pool(pool, chain_ids, depth: int, cap: int):
     """Compose a dense single-request staging cache holding positions
     [0, depth) gathered from pool blocks ``chain_ids`` — the layout the
-    existing (compiled) prefill consumes.  Pure device gather."""
+    existing (compiled) prefill consumes.  Pure device gather.  Staging
+    is always full precision: int8 pools dequantize in the gather (the
+    prefill needs fp operands anyway; the int8 bytes in the pool are
+    untouched)."""
     stage = {}
     for seg, c in pool.items():
         sub = {}
         for name in ("k", "v"):
-            a = c[name][:, chain_ids]                  # (L, ncb, bs, H, D)
+            a = c[name][:, chain_ids]              # (L, ncb, bs, H, D)
+            if name + "_scale" in c:
+                a = dequantize_vectors_jnp(
+                    a, c[name + "_scale"][:, chain_ids], c["k_tail"].dtype)
             L = a.shape[0]
             a = a.reshape(L, -1, *a.shape[3:])[:, :depth]
             a = jnp.pad(a, ((0, 0), (0, cap - depth), (0, 0), (0, 0)))
-            sub[name] = a[:, None]                     # (L, 1, cap, H, D)
+            sub[name] = a[:, None]                 # (L, 1, cap, H, D)
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        sp = jnp.where(pos < depth, pos, -1)
+        sub["slot_pos"] = jnp.broadcast_to(sp, (c["k"].shape[0], cap))
+        stage[seg] = sub
+    return stage
+
+
+def _gather_quant(pool, chain_ids, depth: int, cap: int):
+    """Harvest gather for int8 pools: like ``_stage_from_pool`` but the
+    int8 codes and f32 scales are copied VERBATIM (no dequant) — the host
+    entry built from this keeps the pool's exact bits, so a later
+    promotion can put them back without a requant round-trip."""
+    stage = {}
+    for seg, c in pool.items():
+        sub = {}
+        for name in ("k", "v", "k_scale", "v_scale"):
+            a = c[name][:, chain_ids]              # (L, ncb, bs, H[, D])
+            L = a.shape[0]
+            a = a.reshape(L, -1, *a.shape[3:])[:, :depth]
+            pad = [(0, 0), (0, cap - depth)] + [(0, 0)] * (a.ndim - 2)
+            sub[name] = jnp.pad(a, pad)[:, None]   # (L, 1, cap, H[, D])
         pos = jnp.arange(cap, dtype=jnp.int32)
         sp = jnp.where(pos < depth, pos, -1)
         sub["slot_pos"] = jnp.broadcast_to(sp, (c["k"].shape[0], cap))
@@ -85,17 +124,80 @@ def _scatter_to_pool(pool, stage, dst_ids, start: int, n: int, bs: int):
     ``dst_ids`` (dst_ids[i] holds positions [start + i*bs, ...)).  The
     copy-on-write boundary block is materialized here: staging already
     holds the donor prefix for [start, depth), so the divergent block's
-    private copy costs no extra pass."""
+    private copy costs no extra pass.  int8 pools quantize the scattered
+    region here — for fresh tokens this is their first (and only)
+    quantization."""
     ps = start + jnp.arange(n, dtype=jnp.int32)
     blk = dst_ids[(ps - start) // bs]
     off = ps % bs
     out = {}
     for seg, c in pool.items():
-        out[seg] = {
-            "k": c["k"].at[:, blk, off].set(stage[seg]["k"][:, 0, start:start + n]),
-            "v": c["v"].at[:, blk, off].set(stage[seg]["v"][:, 0, start:start + n]),
-            "block_tables": c["block_tables"],
-        }
+        upd = {}
+        for name in ("k", "v"):
+            vals = stage[seg][name][:, 0, start:start + n]
+            if name + "_scale" in c:
+                q, s = quantize_vectors_jnp(vals)
+                upd[name] = c[name].at[:, blk, off].set(q)
+                upd[name + "_scale"] = \
+                    c[name + "_scale"].at[:, blk, off].set(s)
+            else:
+                upd[name] = c[name].at[:, blk, off].set(vals)
+        out[seg] = {**c, **upd}
+    return out
+
+
+def _upload_q8(pool, ent, dst_ids, bs: int):
+    """L2 -> L1 promotion of a quantized host entry's int8 region: copy
+    the stored int8 codes + f32 scales straight into pool blocks
+    ``dst_ids`` (positions [0, n), block-aligned).  No dequant/requant —
+    the bits that were quantized once at the vectors' first write are the
+    bits that land back in the pool."""
+    out = {}
+    for seg, c in pool.items():
+        e = ent[seg]
+        n = e["k"].shape[2]
+        ps = jnp.arange(n, dtype=jnp.int32)
+        blk = dst_ids[ps // bs]
+        off = ps % bs
+        upd = {name: c[name].at[:, blk, off].set(e[name][:, 0])
+               for name in e}
+        out[seg] = {**c, **upd}
+    return out
+
+
+def _fill_tail(pool, stage, row, m):
+    """Populate pool row ``row``'s fp ring tail from a staging cache:
+    ring slot r receives the fp values of block ``ti(r)`` — the unique
+    block in the row's initial recency window (m//bs - R, m//bs] with
+    ti % R == r — so the first decode step already attends its most
+    recent R blocks at full precision.  Slots whose ti falls before the
+    prompt (or holds no data yet) are zeroed; the kernel's recency gate
+    never selects them.  int8 staging is dequantized here — tail fidelity
+    is best-effort for admitted positions (exact for fp misses' freshly
+    prefilled tokens, dequant for promoted/resident ones) and exact for
+    every token decode later dual-writes."""
+    out = {}
+    for seg, c in pool.items():
+        bs = c["k"].shape[2]                       # (L, NB, bs, H, D)
+        R = c["k_tail"].shape[2] // bs             # (L, B, R*bs, H, D)
+        cap = stage[seg]["k"].shape[2]             # (L, 1, cap, H[, D])
+        open_b = m // bs
+        r = jnp.arange(R, dtype=jnp.int32)
+        ti = open_b - ((open_b - r) % R)           # block held by ring slot r
+        j = jnp.arange(bs, dtype=jnp.int32)
+        posm = ti[:, None] * bs + j[None]          # (R, bs) abs positions
+        valid = ((posm >= 0) & (posm < cap)).reshape(-1)
+        idx = jnp.clip(posm, 0, cap - 1).reshape(-1)
+        upd = {}
+        for name in ("k", "v"):
+            vals = stage[seg][name][:, 0, idx]
+            if name + "_scale" in stage[seg]:
+                vals = dequantize_vectors_jnp(
+                    vals, stage[seg][name + "_scale"][:, 0, idx],
+                    c[name + "_tail"].dtype)
+            vals = vals * valid[None, :, None, None]
+            upd[name + "_tail"] = c[name + "_tail"].at[:, row].set(vals)
+        out[seg] = {**c, **upd}
     return out
 
 
@@ -129,23 +231,54 @@ class PagedEngine(Engine):
     Drop-in replacement for ``BatchedEngine`` behind the scheduler surface
     (``free_slots`` / ``admit_slot`` / ``decode_batch``); the dense slot
     pool stays as the equivalence reference.  Trunk attention only, no
-    sliding window (paged blocks have no ring semantics), no kv_quant yet.
+    sliding window (paged blocks have no ring semantics).
+
+    ``kv_quant=True`` switches the pool to the **int8 tier layout**
+    (``core.quant`` scheme): pool K/V are int8 with per-vector f32 scales
+    — ~2-4x more resident blocks per HBM byte, i.e. deeper batches and
+    longer shareable prefixes on the same hardware.  Decode fuses the
+    dequant into the block-table gather, and each row's most recent
+    ``fp_tail_blocks`` blocks are attended from a full-precision ring
+    tail (the device analogue of the host residual tail, which keeps
+    greedy decoding token-identical to the fp pool).  The host (L2) tier
+    holds quantized-tree entries with an fp residual tail; both tiers
+    share one scheme, so:
+
+      * a token's K/V is quantized ONCE — at the scatter/seal of its
+        block (prefill scatter or decode dual-write);
+      * harvest copies pool int8 verbatim into the host entry, and
+        promotion copies the entry's full int8 blocks verbatim back into
+        pool blocks — no dequant/requant round-trip (only the sub-block
+        remainder of a partial boundary block re-quantizes, a
+        value-preserving <= half-step event bounded to < block_size
+        tokens per promotion);
+      * the entry's fp residual tail feeds the pool's fp ring tail — the
+        recent window is exact for entries admitted from an fp staging
+        cache (precache, instant finish) and dequant-precision for
+        pool-harvested ones, whose tails are rebuilt from the sealed int8
+        codes (see ROADMAP "Int8 two-tier quantization", Known limits).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  capacity: int = 256, num_blocks: Optional[int] = None,
-                 **kw):
+                 fp_tail_blocks: int = 2, **kw):
+        if kw.get("kv_quant"):
+            # the int8 tier compresses its host tier by default, with a
+            # residual deep enough that a promoted prefix can fill the
+            # whole device fp ring tail with exact values
+            kw.setdefault("compress_host_cache", True)
+            kw.setdefault("compress_residual",
+                          (fp_tail_blocks + 1) * kw.get("block_size", 64))
         super().__init__(cfg, params, **kw)
         if self.window:
             raise NotImplementedError("paged pool does not support "
                                       "sliding-window rings")
-        if self.kv_quant:
-            raise NotImplementedError("paged pool stores dense-dtype K/V")
         bs = self.block                      # page size == radix block size
         if capacity % bs:
             capacity = _ceil_div(capacity, bs) * bs
         self.max_batch = max_batch
         self.capacity = capacity
+        self.fp_tail_blocks = fp_tail_blocks
         self.nbt = capacity // bs            # fixed table width
         if num_blocks is None:
             # worst case every row full + one row's worth of retained
@@ -154,7 +287,9 @@ class PagedEngine(Engine):
         self.allocator = BlockAllocator(num_blocks, bs)
         self.trie = BlockTrie(bs)
         self.pool = init_paged_pool(cfg, num_blocks, bs, max_batch,
-                                    self.nbt, dtype=jnp.dtype(cfg.dtype))
+                                    self.nbt, dtype=jnp.dtype(cfg.dtype),
+                                    quant=self.kv_quant,
+                                    fp_tail_blocks=fp_tail_blocks)
         self._tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self._pos = jnp.zeros((max_batch,), jnp.int32)
         self._slots: List[Optional[_Slot]] = [None] * max_batch
@@ -166,9 +301,13 @@ class PagedEngine(Engine):
         self._step_rng = self._sample_key
 
         self._stage_fn = jax.jit(_stage_from_pool, static_argnums=(2, 3))
+        self._gather_q_fn = jax.jit(_gather_quant, static_argnums=(2, 3))
         self._scatter_fn = jax.jit(_scatter_to_pool,
                                    static_argnums=(3, 4, 5),
                                    donate_argnums=(0,))
+        self._upload_fn = jax.jit(_upload_q8, static_argnums=(3,),
+                                  donate_argnums=(0,))
+        self._tail_fn = jax.jit(_fill_tail, donate_argnums=(0,))
         self._setrow_fn = jax.jit(_set_row, donate_argnums=(0, 1, 2))
         self._setent_fn = jax.jit(_set_table_entry, donate_argnums=(0,))
         self._clear_fn = jax.jit(_clear_row, donate_argnums=(0,))
@@ -180,7 +319,91 @@ class PagedEngine(Engine):
             "batched_decode_steps": 0, "admissions": 0, "sampled_steps": 0,
             "resident_hits": 0, "host_promotions": 0, "cow_copies": 0,
             "h2d_copies": 0, "h2d_bytes": 0, "trie_evictions": 0,
+            "layout_skips": 0, "q8_block_promotions": 0,
         })
+
+    # ------------------------------------------------------------------
+    def _make_cache(self, capacity: int):
+        """Admission staging is always full precision — the int8 pool
+        quantizes at the scatter boundary (once per token), never inside
+        the prefill — so one staging layout serves both pool tiers."""
+        return init_cache(self.cfg, 1, capacity, window=self.window,
+                          dtype=jnp.dtype(self.cfg.dtype), kv_quant=False)
+
+    def _host_layout_ok(self, cache) -> bool:
+        """A host entry is promotable iff it materializes to the plain fp
+        staging layout.  Entries admitted by the dense ``kv_quant``
+        engines carry native int8 + k_scale leaves the staged prefill
+        can't consume — honest miss instead of corrupting the pool."""
+        return not any(isinstance(c, dict) and "k_scale" in c
+                       for c in cache.values())
+
+    def _q8_blocks(self, raw, depth: int) -> int:
+        """How many FULL blocks of a quantized host entry's int8 region
+        cover [0, depth) — the part of a promotion that moves verbatim."""
+        if raw is None or not kvq.is_quantized(raw):
+            return 0
+        for c in raw.values():
+            leaf = c.get("k") if isinstance(c, dict) else None
+            if isinstance(leaf, dict) and kvq._QKEY in leaf:
+                if "ax" not in leaf:
+                    # legacy quantized entry (pre-residual format): no
+                    # verbatim upload — fall back to dequant + scatter
+                    return 0
+                ax = int(np.asarray(leaf["ax"]))
+                split = leaf[kvq._QKEY].shape[ax]
+                return min(split, depth) // self.block
+        return 0
+
+    def _slice_q8(self, raw, n8: int):
+        """Host-side view of a quantized entry's first ``n8`` positions in
+        the pool's upload layout: int8 codes + f32 scales (keepdim
+        dropped), per segment.  Pure slicing — no arithmetic touches the
+        stored bits."""
+        ent = {}
+        for seg, c in raw.items():
+            sub = {}
+            for name in ("k", "v"):
+                leaf = c[name]
+                ax = int(np.asarray(leaf["ax"]))
+                sl = [slice(None)] * leaf[kvq._QKEY].ndim
+                sl[ax] = slice(0, n8)
+                sub[name] = jnp.asarray(leaf[kvq._QKEY][tuple(sl)])
+                sub[name + "_scale"] = jnp.asarray(
+                    np.asarray(leaf["scale"])[tuple(sl)][..., 0])
+            ent[seg] = sub
+        return ent
+
+    def _harvest(self, chain_ids, depth: int, cap: int):
+        """Gather pool blocks [0, depth) into a host-store entry.  fp
+        pools return the dense staging layout; int8 pools return the
+        quantized-tree host format built from the pool's VERBATIM int8
+        codes (plus a dequantized fp residual tail), so the quantization
+        the blocks received at their seal is the only one they ever get."""
+        if not self.kv_quant:
+            return to_host(self._stage_fn(self.pool, chain_ids, depth, cap))
+        g = to_host(self._gather_q_fn(self.pool, chain_ids, depth, cap))
+        residual = self.recycler.compress_residual
+        split = max(0, depth - residual)
+        dt = jnp.dtype(self.cfg.dtype)
+        entry = {}
+        for seg, c in g.items():
+            sub = {"slot_pos": c["slot_pos"]}
+            for name in ("k", "v"):
+                q = c[name]                        # (L, 1, cap, H, D) int8
+                s = c[name + "_scale"]             # (L, 1, cap, H) f32
+                tail = (q[:, :, split:depth].astype(np.float32)
+                        * s[:, :, split:depth, :, None]).astype(dt)
+                sub[name] = {
+                    kvq._QKEY: q[:, :, :split],
+                    "scale": s[:, :, :split, :, None],
+                    "dtype": np.dtype(dt).str,
+                    "tail": tail,
+                    "cap": np.int64(cap),
+                    "ax": np.int64(2),
+                }
+            entry[seg] = sub
+        return entry
 
     # ------------------------------------------------------------------
     def _paged_step(self, params, tokens, pool, pos):
@@ -233,9 +456,14 @@ class PagedEngine(Engine):
 
     def device_kv_bytes_in_use(self) -> int:
         """Bytes of pool K/V actually referenced (live blocks, counted
-        once however many tables share them)."""
+        once however many tables share them).  In int8 mode a block costs
+        int8 K/V + per-vector f32 scales — the ~2-4x reduction this
+        returns vs an fp pool is the whole point of the tier; the per-row
+        fp ring tails are a constant (max_batch-sized) overhead, not a
+        per-block cost, and are excluded."""
         return self.allocator.num_live() * paged_block_bytes(
-            self.cfg, self.block, dtype=jnp.dtype(self.cfg.dtype))
+            self.cfg, self.block, dtype=jnp.dtype(self.cfg.dtype),
+            quant=self.kv_quant)
 
     # ------------------------------------------------------------------
     def admit_slot(self, slot: int, prompt: str, *,
@@ -273,7 +501,15 @@ class PagedEngine(Engine):
                 # hit (d2 <= m-1) could win, and Recycler.lookup would
                 # materialize the whole host cache just to be discarded.
                 res = self.recycler.lookup(prompt, ids)
-                d2 = res.reuse_depth if res.hit else 0
+                if res.hit and self._host_layout_ok(res.cache):
+                    d2 = res.reuse_depth
+                elif res.hit:
+                    # entry admitted by an engine with the other pool
+                    # layout (fp vs int8) — can't promote it; honest miss
+                    self.stats["layout_skips"] += 1
+                    d2 = 0
+                else:
+                    d2 = 0
                 sim = res.similarity
             # prefer the resident tier unless the host hit is deeper by
             # MORE than one block: re-prefilling a partial-block tail is
@@ -334,10 +570,29 @@ class PagedEngine(Engine):
         logits, stage = self._prefill_fn(self.params, suffix, stage, depth)
 
         # ---- scatter the fresh region [start, m) into private blocks --
+        # A quantized host entry's full int8 blocks are promoted verbatim
+        # (_upload_q8, no requant); everything after them — the entry's fp
+        # residual tail, the sub-block remainder, the fresh suffix — is
+        # quantized here, at its one scatter.
         if fresh:
+            up = (self._q8_blocks(res.entry.cache, depth)
+                  if self.kv_quant and hit and mode != "resident_block"
+                  and res is not None and res.entry is not None else 0)
+            if up:
+                self.pool = self._upload_fn(
+                    self.pool, self._slice_q8(res.entry.cache, up * bs),
+                    jnp.asarray(fresh[:up], jnp.int32), bs)
+                self.stats["q8_block_promotions"] += up
+            s0 = start + up * bs             # start == 0 on the host path
             self.pool = self._scatter_fn(
-                self.pool, stage, jnp.asarray(fresh, jnp.int32),
-                start, m - start, bs)
+                self.pool, stage, jnp.asarray(fresh[up:], jnp.int32),
+                s0, m - s0, bs)
+        if self.kv_quant:
+            # the row's fp ring tail must cover its last R blocks from the
+            # very first decode step — even on a fully-shared resident hit
+            # the previous occupant's tail is stale for this request
+            self.pool = self._tail_fn(self.pool, stage, jnp.int32(slot),
+                                      jnp.int32(m))
 
         # ---- index the now-resident prompt prefix in L1 ---------------
         table_blocks = shared + fresh        # covers [0, m)
@@ -446,15 +701,17 @@ class PagedEngine(Engine):
             cap = cap or self._capacity(st.m + st.max_new)
             if stage is None:
                 # harvest from the pool: gather the row's prompt blocks
-                # back into the dense host-store layout, valid [0, m)
+                # back into the host-store layout, valid [0, m) — int8
+                # pools keep their codes verbatim (_harvest)
                 ids = [b for b in self._tables[row]
                        if b != SENTINEL][:_ceil_div(st.m, self.block)]
-                stage = self._stage_fn(self.pool,
-                                       jnp.asarray(ids, jnp.int32),
-                                       st.m, cap)
-            # else instant finish: the staging cache already holds exactly
-            # [0, m) — generated positions were never written into it
-            self.recycler.admit(st.prompt, st.ids, to_host(stage), st.m, cap)
+                host = self._harvest(jnp.asarray(ids, jnp.int32),
+                                     st.m, cap)
+            else:
+                # instant finish: the staging cache already holds exactly
+                # [0, m) — generated positions were never written into it
+                host = to_host(stage)
+            self.recycler.admit(st.prompt, st.ids, host, st.m, cap)
         all_ids = np.concatenate([st.ids, np.asarray(st.emitted, np.int32)])
         return GenResult(
             text=self.tok.decode(st.emitted),

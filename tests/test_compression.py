@@ -55,6 +55,34 @@ def test_engine_with_compression_end_to_end():
     assert rec.text == base.text
 
 
+def test_compression_deep_prefix_argmax_stable():
+    """Regression for the greedy-divergence bug: quantize a DEEP prefix
+    (several radix blocks, so the quantized region is non-trivial even
+    with the fp residual tail) and check the greedy argmax over the fresh
+    suffix is identical to the uncompressed path."""
+    cfg = get_config("dialogpt-medium").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    deep = ("the committee reviewed the annual budget line by line and "
+            "flagged every discrepancy it could find in the report")
+    eng = Engine(cfg, params, max_new_tokens=8, block_size=16,
+                 compress_host_cache=True)
+    eng.precache([deep])
+    e = next(iter(eng.recycler.store._entries.values()))
+    from repro.core.quant import _QKEY
+    assert _QKEY in e.cache["seg0"]["k"]
+    # the quantized (non-tail) region must span multiple blocks
+    assert e.cache["seg0"]["k"][_QKEY].shape[2] > 2 * 16
+
+    eng_ref = Engine(cfg, params, max_new_tokens=8, block_size=16)
+    eng_ref.precache([deep])
+    for suffix in (" and then voted", " before adjourning for the day"):
+        base = eng_ref.generate(deep + suffix)
+        rec = eng.generate(deep + suffix)
+        assert rec.cache_hit and rec.reuse_depth > 0
+        assert base.cache_hit
+        assert rec.text == base.text, (suffix, rec.text, base.text)
+
+
 def test_int8_device_kv_cache_equivalence():
     """§Perf-4: int8 on-device KV cache — greedy decode tokens match the
     bf16/f32 cache path (logits within quantization tolerance)."""

@@ -323,12 +323,10 @@ def test_paged_admit_feeds_host_store(stack):
     assert follow.hit and follow.reuse_depth >= len(pag.tok.encode(p)) - 1
 
 
-def test_paged_rejects_window_and_quant(stack):
+def test_paged_rejects_window(stack):
     cfg, params = stack
     with pytest.raises(NotImplementedError):
         PagedEngine(cfg, params, window=32)
-    with pytest.raises(NotImplementedError):
-        PagedEngine(cfg, params, kv_quant=True)
 
 
 def test_paged_pool_rejects_stateful_arch():
@@ -336,6 +334,216 @@ def test_paged_pool_rejects_stateful_arch():
     cfg = get_config("rwkv6-3b").reduced()
     with pytest.raises(NotImplementedError):
         init_paged_pool(cfg, 8, 8, 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# int8 paged pool (kv_quant=True): greedy-identical to the fp pool,
+# ~2-4x fewer device bytes, int8-verbatim host promotions
+# ---------------------------------------------------------------------------
+def _paged(stack, *, quant, max_new=6, max_batch=3, capacity=128):
+    cfg, params = stack
+    eng = PagedEngine(cfg, params, max_batch=max_batch, capacity=capacity,
+                      max_new_tokens=max_new, block_size=8,
+                      enable_partial=True, kv_quant=quant)
+    eng.precache(CACHED)
+    return eng
+
+
+def _run_workload(eng, reqs=REQUESTS, **submit_kw):
+    sched = ContinuousBatchingScheduler(eng)
+    out = [sched.submit(p, **submit_kw) for p, _ in reqs]
+    sched.run()
+    eng.check_invariants()
+    return out
+
+
+def test_int8_paged_equals_fp_paged_all_modes(stack):
+    """Acceptance: the int8 pool is greedy-token-identical to the fp pool
+    on exact/partial/miss admissions of the reduced DialoGPT workload."""
+    fp = _paged(stack, quant=False)
+    q8 = _paged(stack, quant=True)
+    fp_reqs = _run_workload(fp)
+    q8_reqs = _run_workload(q8)
+    for (p, want), rf, rq in zip(REQUESTS, fp_reqs, q8_reqs):
+        assert rq.result.mode == rf.result.mode, p
+        assert rq.result.text == rf.result.text, (p, rq.result.mode)
+        np.testing.assert_array_equal(rq.result.token_ids,
+                                      rf.result.token_ids)
+    assert q8.stats["hits"] == fp.stats["hits"] == 3
+    # host promotions moved full int8 blocks verbatim
+    assert q8.stats["q8_block_promotions"] > 0
+
+
+def test_int8_paged_early_eos_equivalence(stack, monkeypatch):
+    import repro.serving.engine as engine_mod
+
+    def eos_greedy(logits):
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.where(g % 5 == 1, jnp.int32(EOS), g)
+
+    monkeypatch.setattr(engine_mod, "greedy", eos_greedy)
+    fp = _paged(stack, quant=False, max_new=8)
+    q8 = _paged(stack, quant=True, max_new=8)
+    fp_reqs = _run_workload(fp)
+    q8_reqs = _run_workload(q8)
+    assert any(r.result.gen_tokens < 8 and r.result.token_ids[-1] == EOS
+               for r in fp_reqs), "remap produced no early EOS"
+    for rf, rq in zip(fp_reqs, q8_reqs):
+        assert rq.result.text == rf.result.text
+        assert rq.result.gen_tokens == rf.result.gen_tokens
+
+
+def test_int8_pool_bytes_reduction(stack):
+    """Acceptance: >= 1.8x reduction in device_kv_bytes_in_use vs the fp
+    pool for the same workload at the same occupancy."""
+    fp = _paged(stack, quant=False, max_batch=4)
+    q8 = _paged(stack, quant=True, max_batch=4)
+    _run_workload(fp)
+    _run_workload(q8)
+    # identical greedy trajectories allocate identical block counts
+    assert q8.allocator.num_live() == fp.allocator.num_live()
+    ratio = fp.device_kv_bytes_in_use() / q8.device_kv_bytes_in_use()
+    assert ratio >= 1.8, ratio
+
+
+def test_int8_pool_layout(stack):
+    cfg, _ = stack
+    q8 = _paged(stack, quant=True)
+    seg = q8.pool["seg0"]
+    assert seg["k"].dtype == jnp.int8 and seg["v"].dtype == jnp.int8
+    assert seg["k_scale"].dtype == jnp.float32
+    bs = q8.block
+    assert seg["k_tail"].shape[2] == q8.fp_tail_blocks * bs
+    assert seg["k_tail"].dtype == jnp.dtype(cfg.dtype)
+    # the int8 host tier is on by default with a residual covering the
+    # device fp ring tail
+    assert q8.recycler.compress
+    assert q8.recycler.compress_residual == (q8.fp_tail_blocks + 1) * bs
+
+
+def test_int8_harvest_preserves_pool_bits(stack):
+    """admit=True on the int8 pool stores the pool's int8 codes verbatim
+    (plus an fp residual tail) — harvesting is not a requantization."""
+    from repro.core.quant import _QKEY, is_quantized
+    q8 = _paged(stack, quant=True)
+    sched = ContinuousBatchingScheduler(q8)
+    p = "tell me about rivers and their deltas in detail"
+    sched.submit(p, admit=True)
+    sched.run()
+    assert len(q8.recycler.store) == len(CACHED) + 1
+    e = q8.recycler.store.get(q8.recycler.store.ids()[-1], touch=False)
+    assert is_quantized(e.cache)
+    m = len(q8.tok.encode(p))
+    split = max(0, m - q8.recycler.compress_residual)
+    leaf = e.cache["seg0"]["k"]
+    assert leaf[_QKEY].shape[2] == split
+    assert leaf[_QKEY].dtype == np.int8
+    # the stored codes equal the pool bits for the entry's blocks
+    chain = [b for b, _ in q8.trie.lookup(q8.tok.encode(p))[1]]
+    pool_k = np.asarray(q8.pool["seg0"]["k"])[:, chain]
+    pool_k = pool_k.reshape(pool_k.shape[0], -1, *pool_k.shape[3:])
+    np.testing.assert_array_equal(leaf[_QKEY][:, 0],
+                                  pool_k[:, :split])
+
+
+def test_int8_promotes_legacy_quantized_entries_via_fallback(stack):
+    """A host entry in the PRE-residual quantized format (only
+    __q8__/scale/dtype leaves, e.g. reloaded from an old save_dir) must
+    still promote — through the dequant+scatter fallback, not the
+    verbatim int8 upload (which needs the ax/cap/tail metadata)."""
+    from repro.core import quant
+    cfg, params = stack
+    eng = PagedEngine(cfg, params, max_batch=2, capacity=128,
+                      max_new_tokens=5, block_size=8, kv_quant=True)
+    eng.precache(CACHED[:1])
+    e = eng.recycler.store.get(eng.recycler.store.ids()[0], touch=False)
+
+    def legacy(t):
+        if isinstance(t, dict):
+            if quant._QKEY in t:
+                full = quant.dequantize_tree({"x": t})["x"]
+                amax = np.max(np.abs(full.astype(np.float32)), axis=-1,
+                              keepdims=True)
+                s = (amax / 127.0 + 1e-12).astype(np.float32)
+                q = np.clip(np.round(full.astype(np.float32) / s),
+                            -127, 127).astype(np.int8)
+                return {quant._QKEY: q, "scale": s,
+                        "dtype": np.dtype(full.dtype).str}
+            return {k: legacy(v) for k, v in t.items()}
+        return t
+
+    e.cache = legacy(e.cache)
+    sched = ContinuousBatchingScheduler(eng)
+    r = sched.submit(CACHED[0] + " and tomorrow")
+    sched.run()
+    eng.check_invariants()
+    assert r.result.mode == "exact_prefix"
+    assert eng.stats["q8_block_promotions"] == 0     # fallback path
+
+
+def test_int8_paged_rejects_dense_quant_host_entries(stack):
+    """A host entry in the dense kv_quant layout (native k_scale leaves)
+    can't be staged by the paged prefill — the engine must miss honestly
+    instead of corrupting the pool."""
+    cfg, params = stack
+    from repro.serving import BatchedEngine
+    donor = BatchedEngine(cfg, params, max_batch=2, capacity=128,
+                          max_new_tokens=4, block_size=8, kv_quant=True)
+    donor.precache(CACHED[:1])
+    pag = PagedEngine(cfg, params, max_batch=2, capacity=128,
+                      max_new_tokens=4, block_size=8,
+                      recycler=donor.recycler)
+    sched = ContinuousBatchingScheduler(pag)
+    r = sched.submit(CACHED[0] + " and tomorrow")
+    sched.run()
+    assert r.result.mode == "miss"
+    assert pag.stats["layout_skips"] == 1
+    pag.check_invariants()
+
+
+def test_paged_quant_kernel_matches_reference():
+    """Fused-dequant kernel == jnp reference gather (int8 pool + fp ring
+    tail overlay) across rows at different depths."""
+    from repro.kernels import ops
+    from repro.models.attention import attend_paged
+    rng = np.random.default_rng(5)
+    B, NB, bs, H, hkv, dh, R = 3, 12, 8, 4, 2, 16, 2
+    q = jnp.asarray(rng.normal(size=(B, 1, H, dh)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128, size=(NB, bs, hkv, dh)),
+                     jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, size=(NB, bs, hkv, dh)),
+                     jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.001, 0.02, size=(NB, bs, hkv)),
+                     jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.001, 0.02, size=(NB, bs, hkv)),
+                     jnp.float32)
+    kt = jnp.asarray(rng.normal(size=(B, R * bs, hkv, dh)), jnp.float32)
+    vt = jnp.asarray(rng.normal(size=(B, R * bs, hkv, dh)), jnp.float32)
+    tables = jnp.asarray([[3, 5, 7, 0], [1, 2, 0, 0], [9, 8, 6, 4]],
+                         jnp.int32)
+    pos = jnp.asarray([25, 12, 31], jnp.int32)
+    cache = {"k": kp, "v": vp, "k_scale": ks, "v_scale": vs,
+             "k_tail": kt, "v_tail": vt, "block_tables": tables}
+    out = ops.paged_decode_attention_quant(q, kp, vp, ks, vs, kt, vt,
+                                           tables, pos, interpret=True)
+    ref = attend_paged(q, cache, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_paged_quant_pallas_engine_equivalence(stack):
+    """The Pallas int8 decode path produces the same greedy tokens as the
+    jnp reference path on a real engine workload."""
+    from repro.runtime import Runtime
+    cfg, params = stack
+    outs = []
+    for rt in (Runtime(), Runtime(use_pallas=True)):
+        eng = PagedEngine(cfg, params, max_batch=2, capacity=128,
+                          max_new_tokens=5, block_size=8,
+                          enable_partial=True, kv_quant=True, rt=rt)
+        eng.precache(CACHED[:1])
+        reqs = _run_workload(eng, REQUESTS[:2])
+        outs.append([r.result.text for r in reqs])
+    assert outs[0] == outs[1]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,291 @@
+"""Properties of the shared int8 quantization module (core/quant.py) and
+the HostKVStore fixes that ride with it: bounded round-trip error, bit-exact
+NO_COMPRESS leaves, exactly-fp residual tails, idempotence, byte-accounting
+invariants, and the save/load budget + tier-state round trip (including a
+bit-exact quantized-entry npz round trip).
+
+Hypothesis-based property tests are guarded like the rest of the suite so
+the tier-1 job (no optional deps) still runs the deterministic cases.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.kvstore import (CacheEntry, HostKVStore, dequantize_tree,
+                                flatten_cache, is_quantized, quantize_tree,
+                                tree_bytes, unflatten_cache)
+from repro.core.recycler import Recycler, grow_capacity
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _attn_tree(rng, cap=32, length=None, hkv=2, dh=8, layers=2):
+    sp = np.arange(cap, dtype=np.int32)
+    if length is not None:
+        sp = np.where(sp < length, sp, -1).astype(np.int32)
+    return {"seg0": {
+        "k": rng.standard_normal((layers, 1, cap, hkv, dh)).astype(np.float32),
+        "v": rng.standard_normal((layers, 1, cap, hkv, dh)).astype(np.float32),
+        "slot_pos": np.broadcast_to(sp, (layers, cap)).copy(),
+    }}
+
+
+# ---------------------------------------------------------------------------
+# quantize_tree / dequantize_tree
+# ---------------------------------------------------------------------------
+def test_residual_tail_exactly_fp():
+    rng = np.random.default_rng(0)
+    cap, length, residual = 32, 25, 8
+    tree = _attn_tree(rng, cap, length)
+    q = quant.quantize_tree(tree, length=length, residual=residual)
+    back = quant.dequantize_tree(q)
+    split = length - residual
+    for name in ("k", "v"):
+        a, b = tree["seg0"][name], back["seg0"][name]
+        # residual tail [split, length): bit-exact
+        np.testing.assert_array_equal(a[:, :, split:length],
+                                      b[:, :, split:length])
+        # quantized region [0, split): small but nonzero error
+        assert not np.array_equal(a[:, :, :split], b[:, :, :split])
+        rel = (np.sqrt(np.mean((a[:, :, :split] - b[:, :, :split]) ** 2))
+               / np.sqrt(np.mean(a[:, :, :split] ** 2)))
+        assert rel < 0.01, rel
+        # truncated invalid region [length, cap): reconstructed as zeros
+        np.testing.assert_array_equal(b[:, :, length:], 0)
+        assert b.shape == a.shape and b.dtype == a.dtype
+
+
+def test_no_compress_leaves_bit_identical():
+    rng = np.random.default_rng(1)
+    tree = _attn_tree(rng, 16, 10)
+    tree["seg0"]["k_scale"] = rng.standard_normal((2, 1, 16, 2)).astype(
+        np.float32)
+    q = quant.quantize_tree(tree, length=10, residual=4)
+    np.testing.assert_array_equal(q["seg0"]["slot_pos"],
+                                  tree["seg0"]["slot_pos"])
+    np.testing.assert_array_equal(q["seg0"]["k_scale"],
+                                  tree["seg0"]["k_scale"])
+    assert not isinstance(q["seg0"]["k_scale"], dict)
+
+
+def test_quantize_tree_idempotent():
+    rng = np.random.default_rng(2)
+    tree = _attn_tree(rng, 16, 12)
+    q = quant.quantize_tree(tree, length=12, residual=4)
+    assert is_quantized(q)
+    assert quant.quantize_tree(q) is q            # never double-quantized
+    assert quant.quantize_tree(q, length=12, residual=4) is q
+
+
+def test_leaf_without_capacity_axis_quantized_whole():
+    # recurrent state has no token axis; residual/length must not apply
+    rng = np.random.default_rng(3)
+    tree = {"wkv_state": rng.standard_normal((2, 4, 8, 8)).astype(np.float32)}
+    q = quant.quantize_tree(tree, length=4, residual=2)
+    assert quant._QKEY in q["wkv_state"] and "cap" not in q["wkv_state"]
+    back = quant.dequantize_tree(q)
+    assert back["wkv_state"].shape == tree["wkv_state"].shape
+
+
+def test_truncation_cuts_bytes_further():
+    rng = np.random.default_rng(4)
+    tree = _attn_tree(rng, 64, 20)
+    q_full = quant.quantize_tree(tree)
+    q_trunc = quant.quantize_tree(tree, length=20, residual=8)
+    assert tree_bytes(q_trunc) < tree_bytes(q_full)
+    assert tree_bytes(tree) / tree_bytes(q_trunc) > 3.0
+
+
+def test_npz_roundtrip_of_quantized_entry_bit_exact():
+    """Disk round trip must preserve __q8__/scale/dtype/tail leaves
+    bit-exactly (int8 codes are NOT re-derivable from a lossy copy)."""
+    rng = np.random.default_rng(5)
+    tree = _attn_tree(rng, 32, 30)
+    q = quant.quantize_tree(tree, length=30, residual=8)
+    store = HostKVStore()
+    e = store.put("p", np.arange(30), q, 30, 32)
+    with tempfile.TemporaryDirectory() as d:
+        store.save_dir(d)
+        loaded = HostKVStore.load_dir(d)
+    lq = loaded.get(e.entry_id).cache
+    for name in ("k", "v"):
+        a, b = q["seg0"][name], lq["seg0"][name]
+        np.testing.assert_array_equal(a[quant._QKEY], b[quant._QKEY])
+        assert b[quant._QKEY].dtype == np.int8
+        np.testing.assert_array_equal(a["scale"], b["scale"])
+        np.testing.assert_array_equal(a["tail"], b["tail"])
+        assert str(np.asarray(b["dtype"])) == str(a["dtype"])
+    np.testing.assert_array_equal(
+        dequantize_tree(q)["seg0"]["k"], dequantize_tree(lq)["seg0"]["k"])
+
+
+def test_flatten_unflatten_quantized():
+    rng = np.random.default_rng(6)
+    q = quant.quantize_tree(_attn_tree(rng, 16, 12), length=12, residual=4)
+    flat = flatten_cache(q)
+    back = unflatten_cache(flat)
+    np.testing.assert_array_equal(
+        dequantize_tree(q)["seg0"]["v"], dequantize_tree(back)["seg0"]["v"])
+
+
+def test_grow_capacity_after_dequantize():
+    """The recycler's resize surgery composes with quantization: dequant
+    reconstructs full capacity, then grow pads it like any host cache."""
+    rng = np.random.default_rng(7)
+    tree = _attn_tree(rng, 16, 12)
+    q = quant.quantize_tree(tree, length=12, residual=4)
+    g = grow_capacity(dequantize_tree(q), 32)
+    assert g["seg0"]["k"].shape[2] == 32
+    assert (g["seg0"]["slot_pos"][:, 16:] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# byte accounting
+# ---------------------------------------------------------------------------
+def test_tree_bytes_counts_metadata_leaves():
+    rng = np.random.default_rng(8)
+    q = quant.quantize_tree(_attn_tree(rng, 16, 12), length=12, residual=4)
+    leaf = q["seg0"]["k"]
+    meta = (np.asarray(leaf["dtype"]).nbytes + np.asarray(leaf["cap"]).nbytes
+            + np.asarray(leaf["ax"]).nbytes)
+    assert meta > 0
+    assert tree_bytes({"k": leaf}) == (leaf[quant._QKEY].nbytes
+                                       + leaf["scale"].nbytes
+                                       + leaf["tail"].nbytes + meta)
+
+
+def test_nbytes_reflects_post_quantization_size():
+    rng = np.random.default_rng(9)
+    rec = Recycler(compress=True, compress_residual=4)
+    tree = _attn_tree(rng, 32, 28)
+    e = rec.admit("p", np.arange(28), tree, 28, 32)
+    assert is_quantized(e.cache)
+    assert e.nbytes == tree_bytes(e.cache) < tree_bytes(tree)
+    assert rec.store.total_bytes == e.nbytes
+
+
+def test_admit_per_entry_compress_toggle_still_evicts():
+    """Eviction must fire on admit regardless of the per-entry compress
+    override, and total_bytes must track post-quantization sizes."""
+    rng = np.random.default_rng(10)
+    probe = tree_bytes(_attn_tree(rng, 32, 28))
+    rec = Recycler(store=HostKVStore(max_bytes=int(probe * 2.5)),
+                   compress=False, compress_residual=4)
+    for i, compress in enumerate([True, False, True, False, True]):
+        rec.admit(f"p{i}", np.arange(28), _attn_tree(rng, 32, 28), 28, 32,
+                  compress=compress)
+        assert rec.store.total_bytes <= rec.store.max_bytes
+        assert rec.store.total_bytes == sum(
+            rec.store.get(i_, touch=False).nbytes for i_ in rec.store.ids())
+    assert rec.store.evictions > 0
+    kinds = {is_quantized(rec.store.get(i_, touch=False).cache)
+             for i_ in rec.store.ids()}
+    assert kinds == {True, False}                 # both layouts coexist
+
+
+# ---------------------------------------------------------------------------
+# save/load budget + tier state
+# ---------------------------------------------------------------------------
+def test_load_dir_enforces_budget():
+    rng = np.random.default_rng(11)
+    store = HostKVStore()                          # unbounded at save time
+    for i in range(4):
+        store.put(f"p{i}", np.arange(8), _attn_tree(rng, 16, 8), 8, 16)
+    per_entry = store.total_bytes // 4
+    with tempfile.TemporaryDirectory() as d:
+        store.save_dir(d)
+        loaded = HostKVStore.load_dir(d, max_bytes=int(per_entry * 2.5))
+    assert loaded.total_bytes <= loaded.max_bytes
+    assert len(loaded) == 2 and loaded.evictions == 2
+    # LRU order persisted: the two NEWEST entries survive
+    assert loaded.ids() == store.ids()[-2:]
+
+
+def test_load_dir_restores_tier_state():
+    rng = np.random.default_rng(12)
+    store = HostKVStore()
+    a = store.put("a", np.arange(8), _attn_tree(rng, 16, 8), 8, 16)
+    b = store.put("b", np.arange(8), _attn_tree(rng, 16, 8), 8, 16)
+    store.get(a.entry_id)                          # touch: a becomes MRU
+    store.get(a.entry_id)
+    with tempfile.TemporaryDirectory() as d:
+        store.save_dir(d)
+        loaded = HostKVStore.load_dir(d)
+    la = loaded.get(a.entry_id, touch=False)
+    lb = loaded.get(b.entry_id, touch=False)
+    assert (la.hits, la.last_hit) == (2, 2)
+    assert (lb.hits, lb.last_hit) == (0, -1)
+    assert loaded._clock == store._clock == 2
+    assert loaded.ids() == store.ids()             # LRU order: b then a
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=40)
+    @given(cap=st.integers(2, 24), dh=st.integers(2, 16),
+           length=st.integers(0, 30), residual=st.integers(0, 30),
+           seed=st.integers(0, 2 ** 16))
+    def test_roundtrip_bounded_error_property(cap, dh, length, residual,
+                                              seed):
+        rng = np.random.default_rng(seed)
+        tree = _attn_tree(rng, cap, min(length, cap), dh=dh)
+        q = quant.quantize_tree(tree, length=length, residual=residual)
+        back = quant.dequantize_tree(q)
+        n = min(length, cap)
+        split = max(0, n - residual)
+        for name in ("k", "v"):
+            a, b = tree["seg0"][name], back["seg0"][name]
+            assert b.shape == a.shape and b.dtype == a.dtype
+            np.testing.assert_array_equal(a[:, :, split:n], b[:, :, split:n])
+            np.testing.assert_array_equal(b[:, :, n:], 0)
+            if split:
+                err = np.abs(a[:, :, :split] - b[:, :, :split])
+                bound = np.max(np.abs(a[:, :, :split]),
+                               axis=-1, keepdims=True) / 127.0 + 1e-6
+                assert (err <= bound).all()        # per-vector step bound
+        np.testing.assert_array_equal(back["seg0"]["slot_pos"],
+                                      tree["seg0"]["slot_pos"])
+
+    @settings(deadline=None, max_examples=30)
+    @given(ops=st.lists(st.sampled_from(["put", "putq", "get", "remove",
+                                         "evict"]),
+                        min_size=1, max_size=30),
+           budget=st.integers(1, 6), seed=st.integers(0, 2 ** 16))
+    def test_store_total_bytes_invariant(ops, budget, seed):
+        """store.total_bytes == sum(e.nbytes) under any op interleaving,
+        with mixed quantized/fp entries and a byte budget."""
+        rng = np.random.default_rng(seed)
+        probe = tree_bytes(_attn_tree(rng, 16, 8))
+        store = HostKVStore(max_bytes=int(probe * budget))
+        rec = Recycler(store=store, compress_residual=4)
+        n = 0
+        for op in ops:
+            if op in ("put", "putq"):
+                rec.admit(f"p{n}", np.arange(8), _attn_tree(rng, 16, 8),
+                          8, 16, compress=(op == "putq"))
+                n += 1
+            elif op == "get" and len(store):
+                store.get(store.ids()[0])
+            elif op == "remove" and len(store):
+                eid = store.ids()[0]
+                store.remove(eid)
+                rec.index.remove(eid)
+            elif op == "evict":
+                store.evict_to_budget()
+            assert store.total_bytes == sum(
+                store.get(e, touch=False).nbytes for e in store.ids())
+            assert store.max_bytes is None or \
+                store.total_bytes <= store.max_bytes
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_quant_properties_need_hypothesis():
+        pass
