@@ -10,23 +10,32 @@ cold misses (the three admission modes a production pool sees), served by
 
   * the serial FIFO scheduler (one generate per request — the seed's path),
   * the continuous-batching dense slot pool at batch sizes {1, 4, 8},
-  * the paged block-table pool at the same batch sizes (PR 2): shared
-    prefix blocks, ref-counted, device-resident across requests,
-  * with ``--int8``, the int8 paged pool (PR 4): int8 blocks + fused
-    dequant decode; the JSON gains ``paged_int8_b*`` rows and
+  * the paged block-table pool at the same batch sizes (PR 2) in BOTH
+    admission modes: ``paged_staged_b*`` (the original staging-cache
+    round-trip) and ``paged_chunked_b*`` (PR 5's paged-native chunked
+    prefill — the default admission route),
+  * with ``--int8``, the int8 paged pool (PR 4) in both modes
+    (``paged_int8_staged_b*`` / ``paged_int8_chunked_b*``) plus
     ``int8_vs_fp_b*`` summaries (bytes-in-use reduction, tokens/s, max
     resident blocks).
 
 All paths see identical precached recycler contents.  Each configuration
 runs the workload once untimed (jit warmup — per-suffix-length prefill
-executables plus the one pool decode executable) and twice timed (best
-wins; the box is shared).  Reported tokens/s counts generated tokens only.
+executables on the staged paths, ONE chunk executable on the chunked
+paths, plus the one pool decode executable) and twice timed (best wins;
+the box is shared).  Reported tokens/s counts generated tokens only.
+
+Paged rows also record the admission-latency story this PR is about:
+``ttft_mean_s`` / ``ttft_max_s`` (submit -> first sampled token, the
+serving TTFT) and ``prefill_compiles`` (compiled prefill executables —
+per distinct suffix length on the staged path, exactly 1 on the chunked
+path), summarized per batch size in ``chunked_vs_staged_b*`` rows.
 
 Besides the table, the run writes ``BENCH_continuous_batching.json`` (or
-``--json-out PATH``) so CI can track the perf trajectory machine-readably:
-one record per config with wall seconds, generated tokens, tokens/s,
-speedup over serial, and — for the paged pool — device KV bytes in use,
-resident-hit and host-promotion counts.
+``--json-out PATH``) so CI can track the perf trajectory machine-readably.
+``--check-chunked`` (CI smoke) fails the run if any chunked config
+compiled more than one prefill executable per chunk shape or if the
+TTFT rows are missing from the artifact.
 """
 from __future__ import annotations
 
@@ -65,10 +74,11 @@ def workload(n_requests: int):
 
 
 def _run(sched, prompts, max_new):
-    """(seconds, generated_tokens) for one workload pass.  Run twice on the
-    SAME scheduler: the first pass compiles every per-suffix-length prefill
-    executable plus the pool decode step; only the second pass is a fair
-    timing (the paper's T4 runs have no compile step either)."""
+    """(seconds, generated_tokens, ttfts) for one workload pass.  Run
+    twice on the SAME scheduler: the first pass compiles every prefill
+    executable (one per suffix length staged, one total chunked) plus the
+    pool decode step; only the second pass is a fair timing (the paper's
+    T4 runs have no compile step either)."""
     sched.completed = []
     for p in prompts:
         sched.submit(p, max_new_tokens=max_new)
@@ -78,17 +88,23 @@ def _run(sched, prompts, max_new):
     rejected = [r for r in done if r.result is None]
     if rejected:
         print(f"# {len(rejected)} request(s) rejected: {rejected[0].error}")
-    toks = sum(r.result.gen_tokens for r in done if r.result is not None)
-    return dt, toks
+    served = [r.result for r in done if r.result is not None]
+    toks = sum(r.gen_tokens for r in served)
+    ttfts = [r.ttft_s for r in served]
+    return dt, toks, ttfts
 
 
 def timed_best(sched, prompts, max_new):
     """Warmup pass, then best of two timed passes (this box is shared;
-    a single pass can eat a CPU-contention spike)."""
-    _run(sched, prompts, max_new)                      # warmup compile
+    a single pass can eat a CPU-contention spike).  The warmup pass's
+    TTFTs are returned too (as the 4th element): they INCLUDE compile
+    time, which is the cold-start story — the staged admission path
+    compiles one prefill executable per distinct suffix length right
+    there, the chunked path compiles once ever."""
+    _, _, cold = _run(sched, prompts, max_new)         # warmup compile
     a = _run(sched, prompts, max_new)
     b = _run(sched, prompts, max_new)
-    return min(a, b)
+    return min(a, b, key=lambda r: r[0]) + (cold,)
 
 
 def main():
@@ -105,6 +121,11 @@ def main():
                     help="also run the int8 paged pool (kv_quant) and "
                          "record fp-vs-int8 device_kv_bytes_in_use, "
                          "tokens/s and max resident blocks")
+    ap.add_argument("--check-chunked", action="store_true",
+                    help="fail (exit 1) unless every chunked config "
+                         "compiled at most one prefill executable per "
+                         "fixed chunk shape and every paged row carries "
+                         "TTFT data (CI gate)")
     ap.add_argument("--json-out", default="BENCH_continuous_batching.json")
     args = ap.parse_args()
     if args.smoke:
@@ -122,7 +143,7 @@ def main():
     serial_sched = FIFOScheduler(eng)
 
     rows = []
-    dt, toks = timed_best(serial_sched, prompts, args.max_new)
+    dt, toks, _, _ = timed_best(serial_sched, prompts, args.max_new)
     serial_tps = toks / dt
     rows.append({"config": "serial_fifo", "wall_s": dt, "gen_tokens": toks,
                  "tokens_per_s": serial_tps, "speedup": 1.0})
@@ -133,51 +154,96 @@ def main():
                              max_new_tokens=args.max_new, block_size=8,
                              enable_partial=True)
         beng.precache(CACHED)
-        dt, toks = timed_best(ContinuousBatchingScheduler(beng), prompts,
-                              args.max_new)
+        dt, toks, _, _ = timed_best(ContinuousBatchingScheduler(beng),
+                                    prompts, args.max_new)
         rows.append({"config": f"dense_pool_b{b}", "wall_s": dt,
                      "gen_tokens": toks, "tokens_per_s": toks / dt,
                      "speedup": (toks / dt) / serial_tps,
                      "device_kv_bytes": cache_bytes(beng.pool)})
 
-    paged_variants = [(False, "paged_pool")]
+    paged_variants = [(False, "paged")]
     if args.int8:
         paged_variants.append((True, "paged_int8"))
     for quant, label in paged_variants:
+        for mode in ("staged", "chunked"):
+            for b in args.batches:
+                peng = PagedEngine(cfg, params, max_batch=b,
+                                   capacity=args.capacity,
+                                   max_new_tokens=args.max_new,
+                                   block_size=8, enable_partial=True,
+                                   kv_quant=quant, prefill_mode=mode)
+                peng.precache(CACHED)
+                dt, toks, ttfts, cold = timed_best(
+                    ContinuousBatchingScheduler(peng), prompts,
+                    args.max_new)
+                blk_bytes = paged_block_bytes(cfg, peng.block, quant=quant)
+                rows.append({
+                    "config": f"{label}_{mode}_b{b}", "wall_s": dt,
+                    "gen_tokens": toks, "tokens_per_s": toks / dt,
+                    "speedup": (toks / dt) / serial_tps,
+                    # admission latency: submit -> first sampled token
+                    "ttft_mean_s": sum(ttfts) / max(len(ttfts), 1),
+                    "ttft_max_s": max(ttfts, default=0.0),
+                    # cold = warmup pass, compiles included: the
+                    # per-suffix-length recompile cost the chunked
+                    # route eliminates
+                    "ttft_cold_mean_s": sum(cold) / max(len(cold), 1),
+                    "ttft_cold_max_s": max(cold, default=0.0),
+                    # compiled prefill executables: per suffix length on
+                    # the staged path, exactly one on the chunked path
+                    "prefill_compiles": peng.prefill_compiles(),
+                    "prefill_chunk_shapes": len(peng.chunk_shapes),
+                    "prefill_chunks": peng.stats["prefill_chunks"],
+                    "staging_prefills": peng.stats["staging_prefills"],
+                    "spec_preallocs": peng.stats["spec_preallocs"],
+                    "layout_conversions":
+                        peng.stats["layout_conversions"],
+                    # device_kv_bytes is the STATIC allocation in both
+                    # pool rows (apples to apples with dense_pool_b*);
+                    # the peak/in-use numbers show what sharing and
+                    # on-demand allocation actually touched
+                    "device_kv_bytes": cache_bytes(peng.pool),
+                    "device_kv_bytes_peak":
+                        peng.allocator.stats["peak_live"] * blk_bytes,
+                    "device_kv_bytes_in_use":
+                        peng.device_kv_bytes_in_use(),
+                    "max_resident_blocks":
+                        peng.allocator.stats["peak_live"],
+                    "resident_hits": peng.stats["resident_hits"],
+                    "host_promotions": peng.stats["host_promotions"],
+                    "h2d_bytes": peng.stats["h2d_bytes"],
+                    "cow_copies": peng.stats["cow_copies"]})
+
+    by = {r["config"]: r for r in rows}
+    for quant, label in paged_variants:
+        # staged-vs-chunked admission summary per batch size: TTFT and
+        # compile counts are what the chunked route exists to improve
         for b in args.batches:
-            peng = PagedEngine(cfg, params, max_batch=b,
-                               capacity=args.capacity,
-                               max_new_tokens=args.max_new, block_size=8,
-                               enable_partial=True, kv_quant=quant)
-            peng.precache(CACHED)
-            dt, toks = timed_best(ContinuousBatchingScheduler(peng), prompts,
-                                  args.max_new)
-            blk_bytes = paged_block_bytes(cfg, peng.block, quant=quant)
-            rows.append({"config": f"{label}_b{b}", "wall_s": dt,
-                         "gen_tokens": toks, "tokens_per_s": toks / dt,
-                         "speedup": (toks / dt) / serial_tps,
-                         # device_kv_bytes is the STATIC allocation in both
-                         # pool rows (apples to apples with dense_pool_b*);
-                         # the peak/in-use numbers show what sharing and
-                         # on-demand allocation actually touched
-                         "device_kv_bytes": cache_bytes(peng.pool),
-                         "device_kv_bytes_peak":
-                             peng.allocator.stats["peak_live"] * blk_bytes,
-                         "device_kv_bytes_in_use":
-                             peng.device_kv_bytes_in_use(),
-                         "max_resident_blocks":
-                             peng.allocator.stats["peak_live"],
-                         "resident_hits": peng.stats["resident_hits"],
-                         "host_promotions": peng.stats["host_promotions"],
-                         "h2d_bytes": peng.stats["h2d_bytes"],
-                         "cow_copies": peng.stats["cow_copies"]})
+            s = by[f"{label}_staged_b{b}"]
+            c = by[f"{label}_chunked_b{b}"]
+            rows.append({
+                "config": f"chunked_vs_staged_{label}_b{b}",
+                "ttft_mean_staged_s": s["ttft_mean_s"],
+                "ttft_mean_chunked_s": c["ttft_mean_s"],
+                "ttft_speedup": s["ttft_mean_s"] / max(c["ttft_mean_s"],
+                                                       1e-9),
+                "ttft_cold_mean_staged_s": s["ttft_cold_mean_s"],
+                "ttft_cold_mean_chunked_s": c["ttft_cold_mean_s"],
+                "ttft_cold_speedup":
+                    s["ttft_cold_mean_s"] / max(c["ttft_cold_mean_s"],
+                                                1e-9),
+                "prefill_compiles_staged": s["prefill_compiles"],
+                "prefill_compiles_chunked": c["prefill_compiles"],
+                "tokens_per_s_staged": s["tokens_per_s"],
+                "tokens_per_s_chunked": c["tokens_per_s"],
+            })
 
     if args.int8:
-        # machine-readable fp-vs-int8 summary per batch size: the whole
-        # point of the int8 tier is more resident context per HBM byte
-        by = {r["config"]: r for r in rows}
+        # machine-readable fp-vs-int8 summary per batch size (over the
+        # default chunked admission route): the whole point of the int8
+        # tier is more resident context per HBM byte
         for b in args.batches:
-            fp, q8 = by[f"paged_pool_b{b}"], by[f"paged_int8_b{b}"]
+            fp, q8 = by[f"paged_chunked_b{b}"], by[f"paged_int8_chunked_b{b}"]
             rows.append({
                 "config": f"int8_vs_fp_b{b}",
                 "bytes_in_use_fp": fp["device_kv_bytes_in_use"],
@@ -192,14 +258,29 @@ def main():
             })
 
     timed = [r for r in rows if "wall_s" in r]
-    print(f"{'config':<16} {'wall_s':>8} {'gen_tok':>8} "
-          f"{'tok/s':>10} {'speedup':>8}")
+    print(f"{'config':<24} {'wall_s':>8} {'gen_tok':>8} "
+          f"{'tok/s':>10} {'speedup':>8} {'ttft_ms':>8} {'compiles':>8}")
     for r in timed:
-        print(f"{r['config']:<16} {r['wall_s']:>8.3f} {r['gen_tokens']:>8d} "
-              f"{r['tokens_per_s']:>10.1f} {r['speedup']:>7.2f}x")
+        ttft = (f"{1e3 * r['ttft_mean_s']:>8.1f}"
+                if "ttft_mean_s" in r else f"{'-':>8}")
+        comp = (f"{r['prefill_compiles']:>8d}"
+                if "prefill_compiles" in r else f"{'-':>8}")
+        print(f"{r['config']:<24} {r['wall_s']:>8.3f} "
+              f"{r['gen_tokens']:>8d} {r['tokens_per_s']:>10.1f} "
+              f"{r['speedup']:>7.2f}x {ttft} {comp}")
     best = max(r["speedup"] for r in timed[1:])
     print(f"\nbest batched speedup over serial: {best:.2f}x")
     for r in rows:
+        if r["config"].startswith("chunked_vs_staged"):
+            print(f"{r['config']}: warm ttft "
+                  f"{1e3 * r['ttft_mean_staged_s']:.1f}ms -> "
+                  f"{1e3 * r['ttft_mean_chunked_s']:.1f}ms "
+                  f"({r['ttft_speedup']:.2f}x), cold ttft "
+                  f"{1e3 * r['ttft_cold_mean_staged_s']:.1f}ms -> "
+                  f"{1e3 * r['ttft_cold_mean_chunked_s']:.1f}ms "
+                  f"({r['ttft_cold_speedup']:.2f}x), prefill compiles "
+                  f"{r['prefill_compiles_staged']} -> "
+                  f"{r['prefill_compiles_chunked']}")
         if r["config"].startswith("int8_vs_fp"):
             print(f"{r['config']}: {r['bytes_reduction']:.2f}x fewer device "
                   f"KV bytes in use ({r['bytes_in_use_fp']} -> "
@@ -216,6 +297,40 @@ def main():
     with open(args.json_out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"wrote {args.json_out}")
+
+    if args.check_chunked:
+        # CI gate: the chunked route must have compiled exactly ONE
+        # prefill executable per (chunk shape, quant mode) config, and
+        # every paged row must carry TTFT data
+        bad = []
+        chunked_rows = [r for r in timed if "_chunked_b" in r["config"]]
+        if not chunked_rows:
+            bad.append("no chunked config rows in the artifact")
+        for r in chunked_rows:
+            budget = r.get("prefill_chunk_shapes", 1)
+            compiles = r.get("prefill_compiles", 0)
+            if compiles < 0:
+                # _cache_size unavailable: an unknown count must not let
+                # a per-suffix-length recompile regression slip through
+                bad.append(f"{r['config']}: prefill compile count "
+                           f"unavailable (jit._cache_size missing)")
+            elif compiles > budget:
+                bad.append(f"{r['config']}: {compiles} prefill "
+                           f"executables (expected <= {budget}, one per "
+                           f"chunk shape)")
+        for r in timed:
+            if ("_staged_b" in r["config"] or "_chunked_b" in r["config"]) \
+                    and "ttft_mean_s" not in r:
+                bad.append(f"{r['config']}: missing ttft_mean_s")
+        if not any(r["config"].startswith("chunked_vs_staged")
+                   for r in rows):
+            bad.append("missing chunked_vs_staged summary rows")
+        if bad:
+            raise SystemExit("--check-chunked FAILED:\n  " +
+                             "\n  ".join(bad))
+        print("--check-chunked OK: at most one compiled prefill per "
+              "chunk shape, TTFT rows present")
+
     return rows
 
 

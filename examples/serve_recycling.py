@@ -44,6 +44,12 @@ def main():
                          "on the paged pool this is the fused-dequant tier "
                          "with the fp ring tail — ~2-4x more resident "
                          "blocks per HBM byte")
+    ap.add_argument("--staged-prefill", action="store_true",
+                    help="serve paged admissions through the legacy "
+                         "staging-cache round-trip instead of the default "
+                         "paged-native chunked prefill (reference "
+                         "baseline; compiles one prefill executable per "
+                         "distinct suffix length)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=12)
@@ -59,7 +65,9 @@ def main():
                              capacity=args.capacity,
                              max_new_tokens=args.max_new,
                              enable_partial=args.partial, block_size=16,
-                             kv_quant=args.int8)
+                             kv_quant=args.int8,
+                             prefill_mode=("staged" if args.staged_prefill
+                                           else "chunked"))
     elif args.continuous:
         engine = BatchedEngine(cfg, params, max_batch=args.batch,
                                capacity=args.capacity,
@@ -111,6 +119,12 @@ def main():
                   f"{engine.stats['h2d_bytes']/1e6:.2f} MB host->device, "
                   f"{engine.device_kv_bytes_in_use()/1e6:.2f} MB device KV "
                   f"in use")
+            print(f"admission ({engine.prefill_mode}): "
+                  f"{engine.stats['prefill_chunks']} chunk steps, "
+                  f"{engine.stats['staging_prefills']} staged prefills, "
+                  f"{engine.stats['spec_preallocs']} speculative block "
+                  f"reservations, {engine.prefill_compiles()} compiled "
+                  f"prefill executable(s)")
         print("NOTE: per-request latency below spans the whole shared batch "
               "(queue wait included); batching trades it for throughput — "
               "see benchmarks/continuous_batching.py for tokens/s")

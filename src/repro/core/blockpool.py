@@ -22,6 +22,15 @@ Invariants (property-tested in tests/test_paged_pool.py):
       non-sentinel block
   I3  a block is handed out at most once between free()s (no aliasing)
 
+A **reserved-but-unfilled** block (speculative pre-allocation: decode
+reserves the next table entry before the row's write position reaches it)
+is indistinguishable from any other refcount-1 holding at this layer —
+it is live, named by exactly one table, and returns through the same
+``unref`` when its row releases, so I1-I3 cover it with no extra state.
+What makes it "reserved" is purely that the owning row's fill has not
+reached its positions yet, and the implicit-position masking upstream
+guarantees nothing ever reads them.
+
 Copy-on-write lives one level up (serving/paged.py): a shared block is
 never written in place — divergence materializes a fresh block and the
 new holder's table points at the copy.  The allocator only guarantees the
@@ -66,6 +75,25 @@ class BlockAllocator:
         self.stats["peak_live"] = max(self.stats["peak_live"],
                                       self.num_live())
         return b
+
+    def alloc_many(self, n: int):
+        """``n`` fresh blocks with refcount 1, atomically: the free-list
+        check happens before anything is popped, so either all ``n`` are
+        handed out or none is — a multi-block reservation can never
+        strand a partial grab.  The batched analogue of calling ``alloc``
+        n times; callers that can evict fall back to their per-block
+        eviction loop when this raises."""
+        if len(self._free) < n:
+            raise BlockPoolExhausted(
+                f"need {n} blocks, {len(self._free)} free "
+                f"(pool={self.num_blocks}, live={self.num_live()})")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._refs[b] = 1
+        self.stats["allocs"] += n
+        self.stats["peak_live"] = max(self.stats["peak_live"],
+                                      self.num_live())
+        return out
 
     def ref(self, block: int) -> int:
         """Acquire one more reference to a live block."""

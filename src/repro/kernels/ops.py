@@ -13,6 +13,10 @@ from repro.kernels.decode_attention import (paged_decode_attention
                                             as _decode_paged)
 from repro.kernels.decode_attention import (paged_decode_attention_quant
                                             as _decode_paged_quant)
+from repro.kernels.prefill_attention import (paged_prefill_attention
+                                             as _prefill_paged)
+from repro.kernels.prefill_attention import (paged_prefill_attention_quant
+                                             as _prefill_paged_quant)
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
@@ -74,6 +78,31 @@ def paged_decode_attention_quant(q, k_pool, v_pool, k_scale, v_scale,
     return _decode_paged_quant(q, k_pool, v_pool, k_scale, v_scale,
                                k_tail, v_tail, block_tables, pos,
                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(q, k_chunk, v_chunk, k_pool, v_pool, table_row,
+                            c0, w_eff, *, interpret=True):
+    """Chunked-prefill attention: q / chunk K/V (1, C, H|Hkv, D) is one
+    fixed-size admission chunk; history (< w_eff) is gathered through the
+    scalar-prefetched block table, the chunk itself from the fp operands
+    (it has not been sealed to the pool yet); c0 / w_eff are traced
+    scalars, so ONE compiled executable serves every suffix length."""
+    return _prefill_paged(q, k_chunk, v_chunk, k_pool, v_pool, table_row,
+                          c0, w_eff, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention_quant(q, k_chunk, v_chunk, k_pool, v_pool,
+                                  k_scale, v_scale, k_tail_row, v_tail_row,
+                                  table_row, c0, w_eff, *, interpret=True):
+    """int8 chunked prefill with the dequant fused into the history table
+    gather; the last R history blocks come from the row's fp ring tail
+    (R*bs, Hkv, D) instead of the int8 pool, and the chunk's own K/V from
+    its fp operands."""
+    return _prefill_paged_quant(q, k_chunk, v_chunk, k_pool, v_pool,
+                                k_scale, v_scale, k_tail_row, v_tail_row,
+                                table_row, c0, w_eff, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

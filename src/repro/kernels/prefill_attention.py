@@ -1,0 +1,290 @@
+"""Paged-native chunked prefill attention (the admission hot path).
+
+The staged admission path ran the dense prefill over a full-capacity
+staging cache: gather the resident prefix out of the pool, prefill the
+suffix, scatter the result back into pool blocks — a device round-trip
+per admission, and one compiled executable per distinct suffix length.
+This kernel removes the round-trip: a fixed-size chunk of C query tokens
+attends its *history* directly against the request's pool blocks,
+gathered through the scalar-prefetched block table exactly like
+``paged_decode_attention``, and its *own* K/V from the chunk's fresh fp
+operands (flash-attention style) — sealing to the pool happens after,
+so in-chunk attention is always full precision.
+
+Structure: flash-style online softmax (same recurrence as
+``flash_attention``) with grid = (kv_heads, table_entries + chunk_tiles);
+the kv dimension is sequential so the (C*G, d) softmax state stays in
+VMEM.  Tiles ti < NBt are history: pool block ``table[ti]``, implicit
+positions ti*bs + j, valid iff < ``w_eff`` (the history/chunk boundary —
+normally the chunk start, or the promoted depth when a host promotion
+pre-uploaded a partial boundary block) and causally <= the query's
+position.  Tiles ti >= NBt are the chunk itself: fp operand slice at
+positions c0 + (ti - NBt)*bs + j, valid iff >= ``w_eff``.  Sentinel
+(block 0) table entries beyond the written region are harmless: their
+positions exceed ``w_eff``.
+
+Because C is FIXED (block-aligned ``prefill_chunk``), ONE compiled
+executable serves every admission regardless of suffix length — c0 and
+w_eff arrive as scalar-prefetch operands, never as shape.
+
+``paged_prefill_attention_quant`` is the int8-pool variant: the history
+gather fuses the per-vector dequant, and the last ``R`` history blocks
+(ending at the newest history block, derived from w_eff) are read from
+the row's fp ring tail instead — the same recency gate the int8 decode
+kernel applies, so chunked prefill and decode see one consistent view of
+where full precision lives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _accumulate(ti, ntiles, s, v, o_ref, m_scr, l_scr, acc_scr):
+    """One online-softmax step over a pre-masked score tile ``s``
+    (C*G, bs) against values ``v`` (bs, d), with the normalized write on
+    the last tile.  Shared by the fp and int8 kernels so the
+    normalization that must stay in lockstep for fp-vs-int8 token
+    equivalence lives in one place."""
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(ti == ntiles - 1)
+    def _write():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _tile_mask(ti, sc_ref, CG, bs, G, nbt):
+    """(kv positions, validity) for tile ``ti``: history tiles hold
+    implicit pool positions valid below w_eff; chunk tiles hold operand
+    positions valid at/after it.  Causality against the query rows
+    (query row r is token r // G at position c0 + r // G) applies to
+    both."""
+    c0, w_eff = sc_ref[0], sc_ref[1]
+    j = jax.lax.broadcasted_iota(jnp.int32, (CG, bs), 1)
+    qp = c0 + jax.lax.broadcasted_iota(jnp.int32, (CG, bs), 0) // G
+    is_hist = ti < nbt
+    kp = jnp.where(is_hist, ti * bs + j, c0 + (ti - nbt) * bs + j)
+    ok = (kp <= qp) & jnp.where(is_hist, kp < w_eff, kp >= w_eff)
+    return ok
+
+
+def _paged_prefill_kernel(tbl_ref, sc_ref, q_ref, k_ref, v_ref, kc_ref,
+                          vc_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
+                          bs, nbt, G, cb):
+    """One (kv_head, tile) program: for history tiles the BlockSpec index
+    map already resolved table entry ``ti`` to a pool block; for chunk
+    tiles it selected the matching slice of the chunk's fp K/V."""
+    ti = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (C*G, d)
+    is_hist = ti < nbt
+    k = jnp.where(is_hist, k_ref[0, 0], kc_ref[0, 0]).astype(jnp.float32)
+    v = jnp.where(is_hist, v_ref[0, 0], vc_ref[0, 0]).astype(jnp.float32)
+    s = q @ k.T * scale                               # (C*G, bs)
+    s = jnp.where(_tile_mask(ti, sc_ref, q.shape[0], bs, G, nbt),
+                  s, NEG_INF)
+    _accumulate(ti, nbt + cb, s, v, o_ref, m_scr, l_scr, acc_scr)
+
+
+def _chunk_layouts(q, k_chunk, v_chunk, bs):
+    """(1, C, H|Hkv, D) -> kernel layouts: q (Hkv, C*G, D) with query row
+    r = (token r // G, group r % G); chunk K/V (Hkv, C/bs, bs, D)."""
+    _, C, H, D = q.shape
+    Hkv = k_chunk.shape[2]
+    G = H // Hkv
+    qr = (q.reshape(C, Hkv, G, D).transpose(1, 0, 2, 3)
+          .reshape(Hkv, C * G, D))
+    kcr = (k_chunk.reshape(C // bs, bs, Hkv, D).transpose(2, 0, 1, 3))
+    vcr = (v_chunk.reshape(C // bs, bs, Hkv, D).transpose(2, 0, 1, 3))
+    return qr, kcr, vcr
+
+
+def paged_prefill_attention(q, k_chunk, v_chunk, k_pool, v_pool, table_row,
+                            c0, w_eff, *, scale=None, interpret=True):
+    """Chunked-prefill attention through a block table.
+
+    q / k_chunk / v_chunk (1, C, H|Hkv, D): one admission chunk's roped
+    projections at absolute positions [c0, c0 + C); pools
+    (NB, bs, Hkv, D) shared by all requests; table_row (NBt,) int32 — the
+    admitting request's block table (sentinel-0 padded); c0, w_eff scalar
+    int32.  History (< w_eff) is read through the table; the chunk itself
+    (>= w_eff) from the fp operands, so sealing K/V to the pool can
+    happen AFTER attention.  Chunk padding queries produce garbage the
+    caller discards.  Returns (1, C, H, D)."""
+    _, C, H, D = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    NBt = table_row.shape[0]
+    CB = C // bs
+    G = H // Hkv
+    scale = scale or D ** -0.5
+
+    qr, kcr, vcr = _chunk_layouts(q, k_chunk, v_chunk, bs)
+    kr = k_pool.transpose(2, 0, 1, 3)                 # (Hkv, NB, bs, D)
+    vr = v_pool.transpose(2, 0, 1, 3)
+    sc = jnp.stack([jnp.asarray(c0, jnp.int32),
+                    jnp.asarray(w_eff, jnp.int32)])
+
+    def hist_ix(h, ti, tbl, sc, n=NBt):
+        return (h, tbl[jnp.minimum(ti, n - 1)], 0, 0)
+
+    def chunk_ix(h, ti, tbl, sc, n=NBt, c=CB):
+        return (h, jnp.clip(ti - n, 0, c - 1), 0, 0)
+
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale, bs=bs,
+                               nbt=NBt, G=G, cb=CB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block table + [c0, w_eff]
+        grid=(Hkv, NBt + CB),
+        in_specs=[
+            pl.BlockSpec((1, C * G, D), lambda h, ti, tbl, sc: (h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), hist_ix),
+            pl.BlockSpec((1, 1, bs, D), hist_ix),
+            pl.BlockSpec((1, 1, bs, D), chunk_ix),
+            pl.BlockSpec((1, 1, bs, D), chunk_ix),
+        ],
+        out_specs=pl.BlockSpec((1, C * G, D),
+                               lambda h, ti, tbl, sc: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, C * G, D), q.dtype),
+        interpret=interpret,
+    )(table_row.astype(jnp.int32), sc, qr, kr, vr, kcr, vcr)
+    return (out.reshape(Hkv, C, G, D).transpose(1, 0, 2, 3)
+            .reshape(1, C, H, D))
+
+
+def _paged_prefill_kernel_quant(tbl_ref, sc_ref, q_ref, k_ref, v_ref,
+                                ks_ref, vs_ref, kt_ref, vt_ref, kc_ref,
+                                vc_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                                scale, bs, nbt, G, cb, rtail):
+    """int8 variant: history K/V tiles arrive as int8 pool blocks plus
+    their per-vector f32 scales (same table-lookup index map) with the
+    dequant fused into the gather; the last ``rtail`` HISTORY blocks
+    (ending at the newest history block hb, from w_eff) are read from the
+    row's fp ring tail instead — attention runs before the chunk seals,
+    so the ring still holds exactly those blocks.  Chunk tiles use the fp
+    operands like the fp kernel."""
+    ti = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (C*G, d)
+    k8 = k_ref[0, 0].astype(jnp.float32)              # (bs, d) int8 tile
+    v8 = v_ref[0, 0].astype(jnp.float32)
+    ks = ks_ref[0, 0].astype(jnp.float32)             # (bs,) f32 scales
+    vs = vs_ref[0, 0].astype(jnp.float32)
+    kt = kt_ref[0, 0].astype(jnp.float32)             # (bs, d) fp ring tile
+    vt = vt_ref[0, 0].astype(jnp.float32)
+    kc = kc_ref[0, 0].astype(jnp.float32)             # (bs, d) fp chunk tile
+    vc = vc_ref[0, 0].astype(jnp.float32)
+
+    hb = (sc_ref[1] - 1) // bs                        # newest history block
+    use_fp = (ti <= hb) & (ti > hb - rtail)           # scalar: ring block?
+    is_hist = ti < nbt
+    k = jnp.where(is_hist, jnp.where(use_fp, kt, k8 * ks[:, None]), kc)
+    v = jnp.where(is_hist, jnp.where(use_fp, vt, v8 * vs[:, None]), vc)
+    s = q @ k.T * scale
+    s = jnp.where(_tile_mask(ti, sc_ref, q.shape[0], bs, G, nbt),
+                  s, NEG_INF)
+    _accumulate(ti, nbt + cb, s, v, o_ref, m_scr, l_scr, acc_scr)
+
+
+def paged_prefill_attention_quant(q, k_chunk, v_chunk, k_pool, v_pool,
+                                  k_scale, v_scale, k_tail_row, v_tail_row,
+                                  table_row, c0, w_eff, *, scale=None,
+                                  interpret=True):
+    """Fused-dequant chunked prefill: q / chunk K/V (1, C, H|Hkv, D); int8
+    pools (NB, bs, Hkv, D) with f32 scales (NB, bs, Hkv); the admitting
+    row's fp ring tail (R*bs, Hkv, D); table_row (NBt,); c0, w_eff
+    scalars.  The table gather is unchanged from the fp kernel — only
+    history tile contents differ (int8 + scale, or the fp ring slot for
+    the last R history blocks).  Returns (1, C, H, D)."""
+    _, C, H, D = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    NBt = table_row.shape[0]
+    CB = C // bs
+    R = k_tail_row.shape[0] // bs
+    G = H // Hkv
+    scale = scale or D ** -0.5
+
+    qr, kcr, vcr = _chunk_layouts(q, k_chunk, v_chunk, bs)
+    kr = k_pool.transpose(2, 0, 1, 3)                 # (Hkv, NB, bs, D) int8
+    vr = v_pool.transpose(2, 0, 1, 3)
+    ksr = k_scale.transpose(2, 0, 1)                  # (Hkv, NB, bs) f32
+    vsr = v_scale.transpose(2, 0, 1)
+    ktr = (k_tail_row.reshape(R, bs, Hkv, D)          # (Hkv, R, bs, D)
+           .transpose(2, 0, 1, 3))
+    vtr = (v_tail_row.reshape(R, bs, Hkv, D)
+           .transpose(2, 0, 1, 3))
+    sc = jnp.stack([jnp.asarray(c0, jnp.int32),
+                    jnp.asarray(w_eff, jnp.int32)])
+
+    def hist_ix(h, ti, tbl, sc, n=NBt):
+        return (h, tbl[jnp.minimum(ti, n - 1)], 0, 0)
+
+    def hist_ix_s(h, ti, tbl, sc, n=NBt):
+        return (h, tbl[jnp.minimum(ti, n - 1)], 0)
+
+    def ring_ix(h, ti, tbl, sc, r=R):
+        return (h, ti % r, 0, 0)
+
+    def chunk_ix(h, ti, tbl, sc, n=NBt, c=CB):
+        return (h, jnp.clip(ti - n, 0, c - 1), 0, 0)
+
+    kernel = functools.partial(_paged_prefill_kernel_quant, scale=scale,
+                               bs=bs, nbt=NBt, G=G, cb=CB, rtail=R)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block table + [c0, w_eff]
+        grid=(Hkv, NBt + CB),
+        in_specs=[
+            pl.BlockSpec((1, C * G, D), lambda h, ti, tbl, sc: (h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), hist_ix),
+            pl.BlockSpec((1, 1, bs, D), hist_ix),
+            pl.BlockSpec((1, 1, bs), hist_ix_s),
+            pl.BlockSpec((1, 1, bs), hist_ix_s),
+            pl.BlockSpec((1, 1, bs, D), ring_ix),
+            pl.BlockSpec((1, 1, bs, D), ring_ix),
+            pl.BlockSpec((1, 1, bs, D), chunk_ix),
+            pl.BlockSpec((1, 1, bs, D), chunk_ix),
+        ],
+        out_specs=pl.BlockSpec((1, C * G, D),
+                               lambda h, ti, tbl, sc: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, C * G, D), q.dtype),
+        interpret=interpret,
+    )(table_row.astype(jnp.int32), sc, qr, kr, vr, ksr, vsr, ktr, vtr,
+      kcr, vcr)
+    return (out.reshape(Hkv, C, G, D).transpose(1, 0, 2, 3)
+            .reshape(1, C, H, D))

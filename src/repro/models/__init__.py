@@ -3,6 +3,7 @@ from repro.models.model import (
     init_params,
     train_loss,
     prefill,
+    prefill_paged,
     decode_step,
     embed_inputs,
 )
@@ -13,6 +14,7 @@ __all__ = [
     "init_params",
     "train_loss",
     "prefill",
+    "prefill_paged",
     "decode_step",
     "embed_inputs",
     "init_cache",

@@ -376,6 +376,115 @@ def paged_cache_write(cache, k_new, v_new, pos):
     }
 
 
+def paged_prefill_write(cache, k_new, v_new, row, table_row, start,
+                        w_floor, n_valid):
+    """Chunked-prefill scatter: write the chunk's C new roped K/V at
+    absolute positions [start, start + C) of pool row ``row``, through the
+    block table ``table_row`` (NBt,) — no staging cache exists.  The table
+    is an explicit operand rather than ``cache["block_tables"][row]``
+    because a mid-admission row's DEVICE table stays all-sentinel until
+    its final chunk: the batched decode step writes through every row's
+    device table (masked rows scribble block 0), so installing real block
+    ids early would let a stale decode position corrupt an admission in
+    progress.  ``start`` is block-aligned (the admission planner
+    guarantees it); positions i >= ``n_valid`` are chunk padding and route
+    to the sentinel block 0 (the designed scribble target), so a fixed
+    chunk shape serves every suffix length.  Positions < ``w_floor`` are
+    also dropped: a host promotion pre-uploads the entry's sub-block
+    remainder [start, depth) into the boundary block, and the chunk must
+    not overwrite those (exact, staged-identical) values with its own
+    recomputation — its queries there exist only to pad the shape.
+
+    int8 pools dual-write like decode: quantized codes + scales into the
+    pool block (each vector's one quantization), and the fp originals into
+    the row's ring tail — but only for the last R blocks the chunk
+    actually writes (older in-chunk blocks would be overwritten in the
+    ring anyway, and jnp scatter order for duplicate indices is
+    unspecified).  Invalid ring writes are routed out of bounds and
+    dropped (mode="drop") so chunk padding can never clobber a live ring
+    slot of an earlier block."""
+    bs = cache["k"].shape[1]
+    C = k_new.shape[1]
+    i = jnp.arange(C, dtype=jnp.int32)
+    p = start + i
+    valid = (i < n_valid) & (p >= w_floor)
+    blk = jnp.where(valid, table_row[p // bs], 0)
+    off = p % bs
+    if is_quant_cache(cache):
+        kq, ks = _quantize_kv(k_new[0])
+        vq, vs = _quantize_kv(v_new[0])
+        R = cache["k_tail"].shape[1] // bs
+        wb = (start + n_valid - 1) // bs     # newest block this chunk seals
+        ring_ok = valid & (p // bs > wb - R)
+        ring = jnp.where(ring_ok, (p // bs) % R * bs + off, R * bs)
+        return {
+            "k": cache["k"].at[blk, off].set(kq),
+            "v": cache["v"].at[blk, off].set(vq),
+            "k_scale": cache["k_scale"].at[blk, off].set(ks),
+            "v_scale": cache["v_scale"].at[blk, off].set(vs),
+            "k_tail": cache["k_tail"].at[row, ring].set(k_new[0],
+                                                        mode="drop"),
+            "v_tail": cache["v_tail"].at[row, ring].set(v_new[0],
+                                                        mode="drop"),
+            "block_tables": cache["block_tables"],
+        }
+    return {
+        "k": cache["k"].at[blk, off].set(k_new[0]),
+        "v": cache["v"].at[blk, off].set(v_new[0]),
+        "block_tables": cache["block_tables"],
+    }
+
+
+def attend_paged_prefill(q, k_chunk, v_chunk, cache, row, table_row, c0,
+                         w_eff):
+    """Reference chunked-prefill attention: the chunk's queries (1, C, H,
+    Dh) at absolute positions [c0, c0 + C) attend their HISTORY (pool
+    positions < ``w_eff``) through block table ``table_row`` and the
+    chunk's own K/V (positions >= ``w_eff``) from the fresh fp operands —
+    the chunk has not been sealed into the pool yet, so in-chunk
+    attention is always full precision, like the staged prefill it
+    replaces.  The table is explicit for the same mid-admission isolation
+    reason as ``paged_prefill_write``.  int8 pools dequantize the history
+    gather and read the last R HISTORY blocks (ending at the newest
+    history block hb) from the row's fp ring tail, mirroring the
+    decode-side recency gate — the ring still holds exactly those blocks
+    because sealing happens after attention."""
+    _, C, H, Dh = q.shape
+    tbl = table_row                              # (NBt,)
+    NBt = tbl.shape[0]
+    bs = cache["k"].shape[1]
+    if is_quant_cache(cache):
+        k = dequantize_vectors_jnp(cache["k"][tbl], cache["k_scale"][tbl],
+                                   q.dtype)
+        v = dequantize_vectors_jnp(cache["v"][tbl], cache["v_scale"][tbl],
+                                   q.dtype)
+        R = cache["k_tail"].shape[1] // bs
+        hb = (w_eff - 1) // bs                   # newest history block
+        ti = jnp.arange(NBt, dtype=jnp.int32)
+        recent = (ti <= hb) & (ti > hb - R)
+        sel = recent[:, None, None, None]
+        k = jnp.where(sel, cache["k_tail"][row].reshape(
+            R, bs, *k.shape[2:])[ti % R].astype(q.dtype), k)
+        v = jnp.where(sel, cache["v_tail"][row].reshape(
+            R, bs, *v.shape[2:])[ti % R].astype(q.dtype), v)
+    else:
+        k = cache["k"][tbl]                      # (NBt, bs, Hkv, Dh)
+        v = cache["v"][tbl]
+    k = k.reshape(1, NBt * bs, *k.shape[2:])
+    v = v.reshape(1, NBt * bs, *v.shape[2:])
+    # history slots are valid below w_eff; chunk operand slots at/after it
+    # (kv_pos -1 marks an invalid slot for _mask_bias)
+    hist_pos = jnp.arange(NBt * bs, dtype=jnp.int32)
+    hist_pos = jnp.where(hist_pos < w_eff, hist_pos, -1)
+    chunk_pos = c0 + jnp.arange(C, dtype=jnp.int32)
+    chunk_pos = jnp.where(chunk_pos >= w_eff, chunk_pos, -1)
+    k = jnp.concatenate([k, k_chunk.astype(k.dtype)], axis=1)
+    v = jnp.concatenate([v, v_chunk.astype(v.dtype)], axis=1)
+    kv_pos = jnp.concatenate([hist_pos, chunk_pos])
+    q_pos = c0 + jnp.arange(C, dtype=jnp.int32)
+    return attend_direct(q, k, v, q_pos, kv_pos, causal=True)
+
+
 def _paged_gather_dequant(cache, dtype):
     """int8 pool -> per-row dense K/V (B, NBt*bs, Hkv, Dh): gather through
     the tables with dequant fused, then overlay the row's fp ring tail on
@@ -472,15 +581,28 @@ def attn_prefill(cfg: ModelConfig, p, x, *, start_pos=0, cache=None,
     With ``cache`` given (recycled prefix!), new K/V are written into it and
     attention runs against the cache (prefix + new); otherwise attention is
     self-contained.  Returns (out, cache).
+
+    A *paged* cache takes the chunked-admission path: ``start_pos`` is the
+    5-tuple ``(row, table_row, chunk_start, w_floor, n_valid)`` (traced
+    scalars plus the admitting row's (NBt,) block table; ``w_floor`` is
+    the first position the chunk may write — above ``chunk_start`` when a
+    host promotion pre-uploaded the boundary block) and the chunk's K/V
+    are written straight into pool blocks — no staging cache, no
+    gather/scatter round-trip (see ``models.prefill_paged``).
     """
+    if cache is not None and is_paged_cache(cache):
+        if not (isinstance(start_pos, tuple) and len(start_pos) == 5):
+            raise TypeError(
+                "paged-cache prefill goes through models.prefill_paged, "
+                "which passes start_pos as (row, table_row, chunk_start, "
+                f"w_floor, n_valid); got {start_pos!r}")
+        row, table_row, c0, w_floor, n_valid = start_pos
+        return _attn_prefill_paged(cfg, p, x, cache, row, table_row, c0,
+                                   w_floor, n_valid, rt=rt)
     B, S, _ = x.shape
     positions = start_pos + jnp.arange(S, dtype=jnp.int32)
     q, k, v = project_qkv(cfg, p, x, positions)
     if cache is not None:
-        if is_paged_cache(cache):
-            raise NotImplementedError(
-                "prefill writes through a dense staging cache; the paged "
-                "engine scatters the result into pool blocks afterwards")
         cache = cache_write(cache, k, v, start_pos)
         if rt is not None and rt.use_pallas:
             out = _pallas_prefill(cfg, q, cache, positions, window, rt)
@@ -493,6 +615,31 @@ def attn_prefill(cfg: ModelConfig, p, x, *, start_pos=0, cache=None,
             fn = attend_chunked if S * S > 1 << 22 else attend_direct
             out = fn(q, k, v, positions, positions, causal=True, window=window)
     out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache
+
+
+def _attn_prefill_paged(cfg: ModelConfig, p, x, cache, row, table_row, c0,
+                        w_floor, n_valid, *, rt=None):
+    """One chunk of a paged-native prefill: x (1, C, d) at absolute
+    positions [c0, c0 + C) of pool row ``row`` (positions >= c0 + n_valid
+    are padding).  The chunk attends history through the block table and
+    itself from its fresh fp projections, THEN seals its K/V into the
+    pool — so in-chunk attention is exact even for int8 pools, and the fp
+    ring tail the history gate reads is still the pre-chunk state.  The
+    staging round-trip of the old admission path does not exist here."""
+    B, C, _ = x.shape
+    positions = c0 + jnp.arange(C, dtype=jnp.int32)
+    q, k, v = project_qkv(cfg, p, x, positions)
+    w_eff = jnp.maximum(w_floor, c0)
+    if rt is not None and rt.use_pallas:
+        out = _pallas_prefill_paged(cfg, q, k, v, cache, row, table_row,
+                                    c0, w_eff, rt)
+    else:
+        out = attend_paged_prefill(q, k, v, cache, row, table_row, c0,
+                                   w_eff)
+    cache = paged_prefill_write(cache, k, v, row, table_row, c0, w_floor,
+                                n_valid)
+    out = out.reshape(B, C, cfg.num_heads * cfg.head_dim)
     return out @ p["wo"], cache
 
 
@@ -620,6 +767,21 @@ def _pallas_decode_batched(cfg, q, cache, pos, window, rt):
     from repro.kernels import ops
     return ops.decode_attention_batched(
         q, cache["k"], cache["v"], cache["slot_pos"], pos, window=window,
+        interpret=rt.pallas_interpret)
+
+
+def _pallas_prefill_paged(cfg, q, k_chunk, v_chunk, cache, row, table_row,
+                          c0, w_eff, rt):
+    from repro.kernels import ops
+    if is_quant_cache(cache):
+        return ops.paged_prefill_attention_quant(
+            q, k_chunk, v_chunk, cache["k"], cache["v"],
+            cache["k_scale"], cache["v_scale"],
+            cache["k_tail"][row], cache["v_tail"][row],
+            table_row, c0, w_eff,
+            interpret=rt.pallas_interpret)
+    return ops.paged_prefill_attention(
+        q, k_chunk, v_chunk, cache["k"], cache["v"], table_row, c0, w_eff,
         interpret=rt.pallas_interpret)
 
 

@@ -104,6 +104,42 @@ def prefill(cfg: ModelConfig, params, tokens, cache, *, start_pos=0,
     return logits, cache
 
 
+def prefill_paged(cfg: ModelConfig, params, tokens, pool, row, table_row,
+                  start_pos, w_floor, n_valid, *, rt: Runtime = LOCAL):
+    """One chunk of a paged-native prefill (the chunked-admission path).
+
+    ``tokens`` (1, C) is a FIXED-size chunk of prompt tokens at absolute
+    positions [start_pos, start_pos + C) of pool row ``row``; positions
+    i >= ``n_valid`` are padding (their K/V route to the pool's sentinel
+    block and their logits are discarded).  K/V are written straight into
+    pool blocks through ``table_row`` (NBt,) — the admitting row's block
+    table, passed explicitly because the row's DEVICE table stays
+    all-sentinel until the admission completes (see
+    ``attention.paged_prefill_write``) — and attention runs over the same
+    table.  There is no dense staging cache, and because row / start_pos /
+    n_valid are traced scalars, ONE compiled executable covers every
+    admission regardless of prefix depth or suffix length.  Positions
+    below ``w_floor`` are query-only (their K/V were pre-uploaded — the
+    sub-block remainder of a host promotion); their writes are dropped.
+
+    Returns (logits of the LAST VALID token (1, V), updated pool)."""
+    x, _ = embed_inputs(cfg, params, tokens, start_pos=start_pos, rt=rt)
+    if rt.mesh is not None and rt.batch_axes:
+        x = rt.hint(x, rt.batch_axes, None, None)
+    row = jnp.asarray(row, jnp.int32)
+    table_row = jnp.asarray(table_row, jnp.int32)
+    start_pos = jnp.asarray(start_pos, jnp.int32)
+    w_floor = jnp.asarray(w_floor, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    x, pool, _ = apply_stack(cfg, params, x, mode="prefill", cache=pool,
+                             pos=(row, table_row, start_pos, w_floor,
+                                  n_valid),
+                             window=0, rt=rt)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = unembed(cfg, params, last, rt)[:, 0]
+    return logits, pool
+
+
 def decode_step(cfg: ModelConfig, params, token, cache, pos, *,
                 window: int = 0, rt: Runtime = LOCAL):
     """One decode step: token (B,1) at absolute position ``pos``.

@@ -48,6 +48,11 @@ class GenResult:
     cache_hit: bool = False
     mode: str = "baseline"
     prompt_similarity: float = 0.0
+    # admission latency: seconds from admission start to the FIRST sampled
+    # token (the paper's latency metric isolates prefill cost; this is its
+    # per-request serving analogue, what the chunked-admission path exists
+    # to shrink).  0.0 when the engine predates the measurement.
+    ttft_s: float = 0.0
 
 
 class Engine:
@@ -148,6 +153,8 @@ class Engine:
                                          cache, depth)
         out_ids = []
         tok = pick(logits, m)[:, None]
+        jax.block_until_ready(tok)
+        ttft = time.perf_counter() - t0
         pos = m
         for _ in range(max_new):
             out_ids.append(int(tok[0, 0]))
@@ -187,6 +194,7 @@ class Engine:
             cache_hit=hit,
             mode=mode if use_recycling else "baseline",
             prompt_similarity=sim,
+            ttft_s=ttft,
         )
 
     # ------------------------------------------------------------------
@@ -217,6 +225,7 @@ class _Slot:
     sim: float
     emitted: list = field(default_factory=list)
     t0: float = 0.0
+    t_first: float = 0.0         # when the first token was sampled (TTFT)
     temperature: float = 0.0     # 0 = greedy (the paper's do_sample=False)
     top_k: int = 0
 
@@ -412,6 +421,7 @@ class BatchedEngine(Engine):
         st = _Slot(prompt, ids, m, max_new, use_recycling, admit,
                    stop_at_eos, depth, hit, mode, sim,
                    emitted=[int(tok0[0])], t0=t0,
+                   t_first=time.perf_counter(),
                    temperature=temperature, top_k=top_k)
         if (st.stop_at_eos and st.emitted[0] == EOS) or max_new == 1:
             # finished at the first token: never occupies the pool
@@ -476,4 +486,5 @@ class BatchedEngine(Engine):
             cache_hit=st.hit,
             mode=st.mode if st.use_recycling else "baseline",
             prompt_similarity=st.sim,
+            ttft_s=max(st.t_first - st.t0, 0.0),
         )

@@ -16,16 +16,31 @@ Two cache tiers serve admissions:
        A warm-prefix admission composes its table from the resident chain
        with **zero host round-trip**: shared full blocks are referenced in
        place (refcount++), and only the divergent boundary block is
-       materialized fresh (copy-on-write through the prefill staging
-       buffer — a shared block is never written in place).
+       materialized fresh (copy-on-write by recomputation — a shared
+       block is never written in place, and the donor is never even
+       read).
   L2 — the existing ``Recycler``/``HostKVStore`` path: on an L1 miss the
        host entry is promoted back to device in block-granular chunks and
        indexed in L1 for the next admission.
 
+Admission itself is **paged-native chunked prefill** (PR 5, the
+default): the prompt's fresh region is processed as a sequence of
+fixed-size, block-aligned chunks, each writing K/V straight into freshly
+allocated pool blocks and attending history through the block table
+(``kernels.paged_prefill_attention``) — no staging cache, no
+gather/scatter round-trip — and ``decode_batch`` advances ONE chunk per
+pending admission per engine step, interleaved with the batched decode,
+so long prompts never stall the in-flight batch.  The original staged
+path (full-capacity staging cache + dense prefill + scatter) survives
+behind ``prefill_mode="staged"`` as the reference baseline.
+
 Static shapes still rule: the pool is one fixed ``[num_blocks, bs, ...]``
-allocation per layer, tables are fixed-width (sentinel-0 padded), and ONE
+allocation per layer, tables are fixed-width (sentinel-0 padded), ONE
 compiled decode executable (`decode_step` over the paged cache) advances
-every in-flight request per step regardless of occupancy or sharing.
+every in-flight request per step regardless of occupancy or sharing, and
+one compiled chunk-prefill executable per fixed chunk shape serves every
+admission regardless of suffix length (the staged path compiled one per
+DISTINCT length).
 
 ``kv_quant=True`` stores the L1 pool in **int8** (``repro.core.quant``
 scheme, shared with the host tier): ~2-4x more resident blocks per HBM
@@ -35,15 +50,18 @@ the most recent blocks, and int8-verbatim block movement between the
 tiers — see the ``PagedEngine`` docstring for the one-quantization
 invariant.
 
-Correctness contract (tests/test_paged_pool.py): paged decode is
-token-for-token identical to the dense slot pool — and therefore to serial
-``generate`` — for every admission mode (and the int8 pool to the fp
-pool); blocks shared between requests have refcount > 1 and are never
-written by either sharer.
+Correctness contract (tests/test_paged_pool.py,
+tests/test_chunked_prefill.py): paged decode is token-for-token identical
+to the dense slot pool — and therefore to serial ``generate`` — for every
+admission mode (and the int8 pool to the fp pool, and the chunked
+admission route to the staged one); blocks shared between requests have
+refcount > 1 and are never written by either sharer, including by any
+chunk step of a sharer's admission.
 """
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -59,7 +77,7 @@ from repro.core.quant import dequantize_vectors_jnp, quantize_vectors_jnp
 from repro.core.recycler import grow_capacity
 from repro.data.tokenizer import EOS
 from repro.models import (decode_step, init_cache, init_paged_pool,
-                          paged_block_bytes)
+                          paged_block_bytes, prefill_paged)
 from repro.serving import engine as engine_mod
 from repro.serving.engine import Engine, GenResult, _Slot
 from repro.serving.sampling import sample_batched, sample_logits
@@ -201,6 +219,99 @@ def _fill_tail(pool, stage, row, m):
     return out
 
 
+def _set_table_entries(pool, rows, idxs, blks):
+    """Batched block-table update: entry (rows[j], idxs[j]) <- blks[j] in
+    every layer, ONE dispatch for however many rows crossed a block
+    boundary (or had one speculatively reserved) this step.  Padding
+    entries carry idx == table width: out of bounds, dropped — so one
+    fixed-width executable serves every update count."""
+    out = {}
+    for seg, c in pool.items():
+        out[seg] = {**c, "block_tables":
+                    c["block_tables"].at[:, rows, idxs].set(blks,
+                                                            mode="drop")}
+    return out
+
+
+def _upload_fp_block(pool, blkdata, dst):
+    """L2 -> L1 promotion of ONE block of a full-precision host entry:
+    ``blkdata[seg]`` holds (L, bs, H, D) fp K/V for the block's positions.
+    int8 pools quantize here — for entries that carried no sealed codes
+    (fp entries, residual tails, converted legacy layouts) this is the
+    vectors' first and only quantization.  Fixed shapes: one compiled
+    executable regardless of how many blocks a promotion moves."""
+    out = {}
+    for seg, c in pool.items():
+        upd = {}
+        for name in ("k", "v"):
+            vals = blkdata[seg][name]
+            if name + "_scale" in c:
+                q, s = quantize_vectors_jnp(vals)
+                upd[name] = c[name].at[:, dst].set(q)
+                upd[name + "_scale"] = c[name + "_scale"].at[:, dst].set(s)
+            else:
+                upd[name] = c[name].at[:, dst].set(vals)
+        out[seg] = {**c, **upd}
+    return out
+
+
+def _upload_q8_block(pool, entblk, dst):
+    """Verbatim int8 promotion of ONE sealed host-entry block: codes +
+    scales land bit-exactly in pool block ``dst`` (the one-quantization
+    invariant), with the same fixed per-block shape as the fp upload."""
+    out = {}
+    for seg, c in pool.items():
+        upd = {name: c[name].at[:, dst].set(entblk[seg][name])
+               for name in entblk[seg]}
+        out[seg] = {**c, **upd}
+    return out
+
+
+def _set_row_tail(pool, row, tails):
+    """Install a precomputed fp ring tail for row ``row`` (host-promotion
+    seeding: the entry's fp residual provides exact values for the blocks
+    preceding the first chunk)."""
+    out = {}
+    for seg, c in pool.items():
+        upd = {n + "_tail": c[n + "_tail"].at[:, row].set(tails[seg][n])
+               for n in ("k", "v")}
+        out[seg] = {**c, **upd}
+    return out
+
+
+def _seed_tail_from_pool(pool, row, table_row, aligned):
+    """Seed row ``row``'s fp ring tail for a RESIDENT-prefix chunked
+    admission: ring slot r receives the dequantized pool content of the
+    unique block ti in the window (aligned/bs - R, aligned/bs) with
+    ti % R == r, so the first chunk's queries read their recent history at
+    ring (not int8) fidelity — the same dequant values the staged path's
+    staging gather would have produced.  Slots whose ti falls before the
+    prompt are zeroed; the recency gates never select them.  The table is
+    an explicit operand: the row's device table is still all-sentinel
+    mid-admission."""
+    out = {}
+    for seg, c in pool.items():
+        bs = c["k"].shape[2]                   # (L, NB, bs, H, D)
+        R = c["k_tail"].shape[2] // bs
+        ab = aligned // bs
+        r = jnp.arange(R, dtype=jnp.int32)
+        ti = (ab - 1) - ((ab - 1 - r) % R)     # block held by ring slot r
+        valid = ti >= 0
+        tbl = table_row
+        blk = jnp.where(valid, tbl[jnp.clip(ti, 0, tbl.shape[0] - 1)], 0)
+        upd = {}
+        for name in ("k", "v"):
+            a = c[name][:, blk]                # (L, R, bs, H, D)
+            if name + "_scale" in c:
+                a = dequantize_vectors_jnp(a, c[name + "_scale"][:, blk],
+                                           c[name + "_tail"].dtype)
+            a = a * valid[None, :, None, None, None]
+            upd[name + "_tail"] = c[name + "_tail"].at[:, row].set(
+                a.reshape(a.shape[0], -1, *a.shape[3:]))
+        out[seg] = {**c, **upd}
+    return out
+
+
 def _set_row(pool, tokens, pos, row, table_row, tok0, m):
     out = {}
     for seg, c in pool.items():
@@ -209,20 +320,26 @@ def _set_row(pool, tokens, pos, row, table_row, tok0, m):
     return out, tokens.at[row].set(tok0), pos.at[row].set(m)
 
 
-def _set_table_entry(pool, row, idx, blk):
-    out = {}
-    for seg, c in pool.items():
-        out[seg] = {**c,
-                    "block_tables": c["block_tables"].at[:, row, idx].set(blk)}
-    return out
-
-
 def _clear_row(pool, row):
     out = {}
     for seg, c in pool.items():
         out[seg] = {**c, "block_tables":
                     c["block_tables"].at[:, row].set(SENTINEL)}
     return out
+
+
+@dataclass
+class _PendingAdmission:
+    """A chunked admission in flight: the row is occupied but not yet
+    decoding.  One chunk step runs per engine step, interleaved with the
+    batched decode dispatch, so a long prompt never stalls the batch.
+    The tier lookup is deferred to the FIRST chunk step (``started``),
+    which lets an admission share blocks that a neighbor admitted in the
+    same scheduler step has already sealed and registered."""
+    st: _Slot
+    next_c0: int = 0              # next chunk's (block-aligned) start
+    w_floor: int = 0              # first pool position the chunks may write
+    started: bool = False         # tier lookup + prefix setup done?
 
 
 class PagedEngine(Engine):
@@ -261,7 +378,9 @@ class PagedEngine(Engine):
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  capacity: int = 256, num_blocks: Optional[int] = None,
-                 fp_tail_blocks: int = 2, **kw):
+                 fp_tail_blocks: int = 2, prefill_mode: str = "chunked",
+                 prefill_chunk: Optional[int] = None,
+                 prealloc_watermark: int = 1, **kw):
         if kw.get("kv_quant"):
             # the int8 tier compresses its host tier by default, with a
             # residual deep enough that a promoted prefix can fill the
@@ -290,9 +409,35 @@ class PagedEngine(Engine):
                                     self.nbt, dtype=jnp.dtype(cfg.dtype),
                                     quant=self.kv_quant,
                                     fp_tail_blocks=fp_tail_blocks)
+        if prefill_mode not in ("chunked", "staged"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        self.prefill_mode = prefill_mode
+        if prefill_chunk is None:
+            # default: 8 blocks per chunk.  Big enough that typical
+            # admissions seal in one or two steps (and — for int8 pools —
+            # that the fresh suffix usually lands in ONE chunk, whose
+            # in-chunk attention is exact; history older than the fp ring
+            # is read at int8 fidelity, see ROADMAP known limits), small
+            # enough that a long prompt still yields the decode loop
+            # between chunks.
+            prefill_chunk = min(8 * bs, capacity)
+        if prefill_chunk % bs or prefill_chunk <= 0:
+            raise ValueError(
+                f"prefill_chunk must be a positive multiple of the block "
+                f"size {bs}, got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
+        # the FIXED ladder of chunk shapes: a step uses the smallest shape
+        # covering its remaining suffix, so a 10-token warm-hit tail costs
+        # a 2-block dispatch, not a full-width one.  The compile budget is
+        # one executable per (shape, quant mode) — still independent of
+        # how many distinct suffix lengths arrive.
+        self.chunk_shapes = sorted({s for s in (bs, 2 * bs, prefill_chunk)
+                                    if s <= prefill_chunk})
+        self.prealloc_watermark = prealloc_watermark
         self._tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self._pos = jnp.zeros((max_batch,), jnp.int32)
         self._slots: List[Optional[_Slot]] = [None] * max_batch
+        self._pending: Dict[int, _PendingAdmission] = {}
         self._tables = np.zeros((max_batch, self.nbt), np.int32)  # host mirror
         self._row_blocks: List[List[int]] = [[] for _ in range(max_batch)]
         self._committed: List[int] = [0] * max_batch  # future allocs owed
@@ -309,17 +454,29 @@ class PagedEngine(Engine):
                                   donate_argnums=(0,))
         self._tail_fn = jax.jit(_fill_tail, donate_argnums=(0,))
         self._setrow_fn = jax.jit(_set_row, donate_argnums=(0, 1, 2))
-        self._setent_fn = jax.jit(_set_table_entry, donate_argnums=(0,))
         self._clear_fn = jax.jit(_clear_row, donate_argnums=(0,))
         self._pstep_fn = jax.jit(self._paged_step, donate_argnums=(1, 2, 3))
         self._pstep_sampled_fn = jax.jit(self._paged_step_sampled,
                                          donate_argnums=(1, 2, 3),
                                          static_argnums=(7,))
+        # chunked-admission executables: ONE compiled prefill shape
+        # (prefill_chunk is fixed; row / start / valid are traced scalars)
+        self._chunk_fn = jax.jit(self._chunk_prefill, donate_argnums=(2,))
+        self._setents_batch_fn = jax.jit(_set_table_entries,
+                                         donate_argnums=(0,))
+        self._upload_blk_fn = jax.jit(_upload_fp_block, donate_argnums=(0,))
+        self._upload_q8_blk_fn = jax.jit(_upload_q8_block,
+                                         donate_argnums=(0,))
+        self._settail_fn = jax.jit(_set_row_tail, donate_argnums=(0,))
+        self._seedtail_fn = jax.jit(_seed_tail_from_pool,
+                                    donate_argnums=(0,))
         self.stats.update({
             "batched_decode_steps": 0, "admissions": 0, "sampled_steps": 0,
             "resident_hits": 0, "host_promotions": 0, "cow_copies": 0,
             "h2d_copies": 0, "h2d_bytes": 0, "trie_evictions": 0,
-            "layout_skips": 0, "q8_block_promotions": 0,
+            "layout_conversions": 0,
+            "q8_block_promotions": 0, "prefill_chunks": 0,
+            "staging_prefills": 0, "spec_preallocs": 0,
         })
 
     # ------------------------------------------------------------------
@@ -422,12 +579,96 @@ class PagedEngine(Engine):
                              top_k_cap=topk_cap)
         return nxt, nxt[:, None], pool, pos + 1
 
+    def _chunk_prefill(self, params, tokens, pool, row, table_row, c0,
+                       w_floor, n_valid):
+        return prefill_paged(self.cfg, params, tokens, pool, row,
+                             table_row, c0, w_floor, n_valid, rt=self.rt)
+
+    def prefill_compiles(self) -> int:
+        """How many prefill executables the admission path has compiled.
+        The chunked path's whole point is that this is bounded by
+        ``len(self.chunk_shapes)`` (one per fixed chunk shape) —
+        independent of how many distinct suffix lengths were admitted —
+        where the staged path compiles one per (suffix length, capacity
+        bucket)."""
+        fn = (self._chunk_fn if self.prefill_mode == "chunked"
+              else self._prefill_fn)
+        try:
+            return fn._cache_size()
+        except AttributeError:  # pragma: no cover - older jax
+            return -1
+
+    # ------------------------------------------------------------------
+    def _convert_dense_quant(self, cache):
+        """A host entry admitted by the dense ``kv_quant`` engines carries
+        native int8 K/V + per-vector scale leaves the staged/chunked
+        admission layouts can't consume directly.  Dequantize it to the
+        plain fp staging layout (value-preserving to within half a quant
+        step) so the entry still promotes instead of being skipped — the
+        honest fix for the old ``layout_skips`` gap."""
+        dt = jnp.dtype(self.cfg.dtype)
+        out = {}
+        for seg, c in cache.items():
+            if isinstance(c, dict) and "k_scale" in c:
+                sub = {"slot_pos": c["slot_pos"]}
+                for name in ("k", "v"):
+                    q = np.asarray(c[name], np.float32)
+                    s = np.asarray(c[name + "_scale"], np.float32)
+                    sub[name] = (q * s[..., None]).astype(dt)
+                out[seg] = sub
+            else:
+                out[seg] = c
+        return out
+
+    def _lookup_tiers(self, prompt: str, ids, m: int):
+        """Serve an admission from the cache tiers: L1 (device-resident
+        block trie) preferred, L2 (host store) behind it.  Returns
+        (depth, hit, mode, sim, chain, res, host_cache) where host_cache
+        is the promotable staging-layout view of the L2 entry (converted
+        from the dense kv_quant layout when necessary)."""
+        d1, chain = self.trie.lookup(ids)
+        d1 = min(d1, m - 1)
+        d2, res = 0, None
+        sim = 0.0
+        if d1 < m - 1:
+            # L1 can still be beaten — consult the host (L2) tier.  At
+            # maximal resident depth the lookup is skipped: no host hit
+            # (d2 <= m-1) could win, and Recycler.lookup would materialize
+            # the whole host cache just to be discarded.
+            res = self.recycler.lookup(prompt, ids)
+            if res.hit:
+                d2 = res.reuse_depth
+            sim = res.similarity
+        # prefer the resident tier unless the host hit is deeper by MORE
+        # than one block: re-prefilling a partial-block tail is far
+        # cheaper than a host→device copy of the whole prefix
+        if d1 > 0 and d1 >= d2 - self.block:
+            # a resident hit is served by the trie, not retrieval — there
+            # is no honest similarity to report
+            self.stats["resident_hits"] += 1
+            return d1, True, "resident_block", float("nan"), chain, res, None
+        if d2 > 0:
+            # lazy layout conversion — only once the host tier actually
+            # WON the comparison, so a resident hit never pays (or counts)
+            # a conversion it would discard
+            host_cache = res.cache
+            if not self._host_layout_ok(host_cache):
+                host_cache = self._convert_dense_quant(host_cache)
+                self.stats["layout_conversions"] += 1
+            self.stats["host_promotions"] += 1
+            return d2, True, res.mode, sim, [], res, host_cache
+        return 0, False, "miss", sim, [], res, None
+
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self._slots) if s is None]
+        return [i for i, s in enumerate(self._slots)
+                if s is None and i not in self._pending]
 
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is not None]
+
+    def pending_admissions(self) -> List[int]:
+        return sorted(self._pending)
 
     # ------------------------------------------------------------------
     # block bookkeeping
@@ -471,11 +712,21 @@ class PagedEngine(Engine):
                    use_recycling: bool = True, admit: bool = False,
                    stop_at_eos: bool = True, temperature: float = 0.0,
                    top_k: int = 0) -> Optional[GenResult]:
-        """Admit ``prompt`` into pool row ``slot``: L1 block-table reuse
-        when the prefix is device-resident, else L2 host promotion, else a
-        cold prefill — all through one staged dense prefill whose result
-        is scattered into (copy-on-write) private blocks."""
-        if self._slots[slot] is not None:
+        """Admit ``prompt`` into pool row ``slot``.
+
+        ``prefill_mode="chunked"`` (default): the admission is queued as a
+        sequence of fixed-size chunk steps that ``decode_batch`` advances
+        one per engine step, interleaved with the batched decode dispatch.
+        Each chunk writes its K/V straight into freshly allocated pool
+        blocks and attends through the block table — the staging cache,
+        the resident-prefix gather and the post-prefill scatter of the
+        staged path do not exist on this route, and one compiled prefill
+        executable PER FIXED CHUNK SHAPE serves every suffix length.
+
+        ``prefill_mode="staged"`` keeps the original path (one dense
+        prefill over a full-capacity staging cache, gathered from /
+        scattered back to the pool) as the reference baseline."""
+        if self._slots[slot] is not None or slot in self._pending:
             raise ValueError(f"slot {slot} is occupied")
         max_new = max_new_tokens or self.max_new
         t0 = time.perf_counter()
@@ -484,49 +735,33 @@ class PagedEngine(Engine):
         if m + max_new > self.capacity:
             raise ValueError(f"request needs {m + max_new} positions; pool "
                              f"capacity is {self.capacity}")
+        if self.prefill_mode == "chunked":
+            return self._admit_chunked(slot, prompt, ids, m, max_new,
+                                       use_recycling, admit, stop_at_eos,
+                                       temperature, top_k, t0)
+        return self._admit_staged(slot, prompt, ids, m, max_new,
+                                  use_recycling, admit, stop_at_eos,
+                                  temperature, top_k, t0)
+
+    def _admit_staged(self, slot: int, prompt: str, ids, m: int,
+                      max_new: int, use_recycling: bool, admit: bool,
+                      stop_at_eos: bool, temperature: float, top_k: int,
+                      t0: float) -> Optional[GenResult]:
+        """The PR-2 admission path: L1 block-table reuse when the prefix
+        is device-resident, else L2 host promotion, else a cold prefill —
+        all through one staged dense prefill whose result is scattered
+        into (copy-on-write) private blocks.  Kept as the equivalence
+        reference for the chunked path."""
         bs = self.block
         nb_prompt = _ceil_div(m, bs)
         nb_total = _ceil_div(m + max_new, bs)
 
         depth, hit, mode, sim = 0, False, "baseline", 0.0
         chain: List[Tuple[int, int]] = []
-        res = None
+        res, host_cache = None, None
         if use_recycling:
-            d1, chain = self.trie.lookup(ids)
-            d1 = min(d1, m - 1)
-            d2 = 0
-            if d1 < m - 1:
-                # L1 can still be beaten — consult the host (L2) tier.
-                # At maximal resident depth the lookup is skipped: no host
-                # hit (d2 <= m-1) could win, and Recycler.lookup would
-                # materialize the whole host cache just to be discarded.
-                res = self.recycler.lookup(prompt, ids)
-                if res.hit and self._host_layout_ok(res.cache):
-                    d2 = res.reuse_depth
-                elif res.hit:
-                    # entry admitted by an engine with the other pool
-                    # layout (fp vs int8) — can't promote it; honest miss
-                    self.stats["layout_skips"] += 1
-                    d2 = 0
-                else:
-                    d2 = 0
-                sim = res.similarity
-            # prefer the resident tier unless the host hit is deeper by
-            # MORE than one block: re-prefilling a partial-block tail is
-            # far cheaper than a host→device copy of the whole prefix
-            if d1 > 0 and d1 >= d2 - bs:
-                depth, hit, mode = d1, True, "resident_block"
-                # a resident hit is served by the trie, not retrieval —
-                # there is no honest similarity to report
-                sim = float("nan")
-                self.stats["resident_hits"] += 1
-            elif d2 > 0:
-                depth, hit, mode = d2, True, res.mode
-                self.stats["host_promotions"] += 1
-            else:
-                mode = "miss"
-        if mode != "resident_block":
-            chain = []
+            depth, hit, mode, sim, chain, res, host_cache = \
+                self._lookup_tiers(prompt, ids, m)
 
         nb_shared = depth // bs if chain else 0
         start = nb_shared * bs               # first position written fresh
@@ -562,12 +797,13 @@ class PagedEngine(Engine):
                                    depth, cap)
         elif hit:
             self.stats["h2d_copies"] += 1
-            self.stats["h2d_bytes"] += tree_bytes(res.cache)
-            stage = jax.tree.map(jnp.asarray, grow_capacity(res.cache, cap))
+            self.stats["h2d_bytes"] += tree_bytes(host_cache)
+            stage = jax.tree.map(jnp.asarray, grow_capacity(host_cache, cap))
         else:
             stage = self._make_cache(cap)
         suffix = jnp.asarray(ids[depth:])[None]
         logits, stage = self._prefill_fn(self.params, suffix, stage, depth)
+        self.stats["staging_prefills"] += 1
 
         # ---- scatter the fresh region [start, m) into private blocks --
         # A quantized host entry's full int8 blocks are promoted verbatim
@@ -615,6 +851,7 @@ class PagedEngine(Engine):
         st = _Slot(prompt, ids, m, max_new, use_recycling, admit,
                    stop_at_eos, depth, hit, mode, sim,
                    emitted=[int(tok0[0])], t0=t0,
+                   t_first=time.perf_counter(),
                    temperature=temperature, top_k=top_k)
         if (st.stop_at_eos and st.emitted[0] == EOS) or max_new == 1:
             # finished at its first token: the prompt prefix stays warm in
@@ -638,24 +875,333 @@ class PagedEngine(Engine):
         return None
 
     # ------------------------------------------------------------------
+    # chunked admission (the paged-native default)
+    # ------------------------------------------------------------------
+    def _admit_chunked(self, slot: int, prompt: str, ids, m: int,
+                      max_new: int, use_recycling: bool, admit: bool,
+                      stop_at_eos: bool, temperature: float, top_k: int,
+                      t0: float) -> None:
+        """Queue ``prompt`` as a pending chunked admission on row
+        ``slot``.  Only the admission *guarantee* runs here (can the pool
+        ever provide this request's blocks without starving in-flight
+        reservations? — conservatively assuming zero reuse, since the
+        tier lookup is deferred to the first chunk step); all device work
+        happens chunk-by-chunk inside ``decode_batch``."""
+        nb_total = _ceil_div(m + max_new, self.block)
+        owed = sum(self._committed)
+        avail = self.allocator.num_free() + self._evictable()
+        if avail < nb_total + owed:
+            raise ValueError(
+                f"paged pool exhausted: request needs up to {nb_total} "
+                f"blocks, {avail - owed} obtainable "
+                f"(free={self.allocator.num_free()}, "
+                f"in-flight reservations={owed})")
+        self._committed[slot] = nb_total
+        self._tables[slot] = SENTINEL
+        self._row_blocks[slot] = []
+        st = _Slot(prompt, ids, m, max_new, use_recycling, admit,
+                   stop_at_eos, 0, False, "baseline", 0.0, emitted=[],
+                   t0=t0, temperature=temperature, top_k=top_k)
+        self._pending[slot] = _PendingAdmission(st=st)
+        return None
+
+    def _begin_admission(self, slot: int, adm: _PendingAdmission) -> None:
+        """First chunk step of a pending admission: tier lookup, shared-
+        prefix composition (refcount++, zero copies), host promotion
+        (block-granular direct upload — no staging cache), and fp ring
+        seeding for int8 pools.  Running this lazily — at the first chunk,
+        not at admit time — lets the lookup see blocks that admissions
+        queued in the same scheduler step have already sealed."""
+        st = adm.st
+        bs = self.block
+        ids, m = st.ids, st.m
+        depth, hit, mode, sim = 0, False, "baseline", 0.0
+        chain: List[Tuple[int, int]] = []
+        res, host_cache = None, None
+        if st.use_recycling:
+            depth, hit, mode, sim, chain, res, host_cache = \
+                self._lookup_tiers(st.prompt, ids, m)
+        st.depth, st.hit, st.mode, st.sim = depth, hit, mode, sim
+        aligned = (depth // bs) * bs
+
+        # NB: only the HOST table mirror is updated during admission —
+        # the device table row stays all-sentinel until the final chunk
+        # installs it, so the batched decode (which writes through every
+        # row's device table) can never scribble into a half-admitted
+        # row's blocks at a stale position.  Chunk steps receive the host
+        # mirror as an explicit operand instead.
+        if mode == "resident_block":
+            shared = [b for b, _ in chain[:aligned // bs]]
+            for i, b in enumerate(shared):
+                self.allocator.ref(b)
+                self._tables[slot][i] = b
+            self._row_blocks[slot] = list(shared)
+            self._committed[slot] -= len(shared)
+            if depth % bs:
+                # divergent partial boundary block: the first chunk
+                # REWRITES [aligned, depth) into a private block from the
+                # prompt ids — the shared original is never gathered,
+                # never mutated, and costs no staging pass (CoW by
+                # recomputation)
+                self.stats["cow_copies"] += 1
+        elif hit and depth:
+            # L2 promotion without the staging round-trip: the entry's
+            # [0, depth) moves block-by-block into fresh private blocks —
+            # sealed int8 blocks verbatim, everything else (fp entries,
+            # residual tails, converted legacy layouts, the sub-block
+            # remainder of the boundary block) through the fp upload that
+            # quantizes exactly once.  The chunks then write only
+            # [depth, m) (``w_floor``): uploaded positions keep the
+            # staged-identical entry values instead of a recomputation.
+            nb_up = _ceil_div(depth, bs)
+            up = 0
+            if self.kv_quant and res is not None and res.entry is not None:
+                up = min(self._q8_blocks(res.entry.cache, depth), nb_up)
+            try:
+                fresh = self.allocator.alloc_many(nb_up)
+            except BlockPoolExhausted:
+                # free list alone can't cover the batch — fall back to
+                # the per-block path, which evicts cold L1 chains
+                fresh = [self._alloc_block() for _ in range(nb_up)]
+            for j, b in enumerate(fresh):
+                self._tables[slot][j] = b
+            self._row_blocks[slot] = list(fresh)
+            self._committed[slot] -= len(fresh)
+            self.stats["h2d_copies"] += 1
+            moved = 0
+            for j in range(up):
+                ent = self._q8_block(res.entry.cache, j)
+                moved += sum(int(a.nbytes)
+                             for s in ent.values() for a in s.values())
+                self.pool = self._upload_q8_blk_fn(self.pool, ent,
+                                                   jnp.int32(fresh[j]))
+            self.stats["q8_block_promotions"] += up
+            for j in range(up, nb_up):
+                blk = self._host_block(host_cache, j)
+                moved += sum(int(a.nbytes)
+                             for s in blk.values() for a in s.values())
+                self.pool = self._upload_blk_fn(self.pool, blk,
+                                                jnp.int32(fresh[j]))
+            self.stats["h2d_bytes"] += moved
+            adm.w_floor = depth
+
+        # int8 pools: the first chunk's queries read their last R blocks
+        # of history from the row's fp ring tail; seed it like the staged
+        # path's _fill_tail would have — exact fp from the entry's
+        # residual on a host promotion (covering the uploaded partial
+        # boundary block), dequantized pool content on a resident hit
+        if self.kv_quant and mode == "resident_block" and aligned:
+            self.pool = self._seedtail_fn(
+                self.pool, jnp.int32(slot),
+                jnp.asarray(self._tables[slot]), jnp.int32(aligned))
+        elif self.kv_quant and hit and depth:
+            self.pool = self._settail_fn(
+                self.pool, jnp.int32(slot),
+                self._host_ring_window(host_cache, depth))
+
+        adm.next_c0 = aligned
+        adm.started = True
+
+    def _admission_chunk(self, slot: int) -> None:
+        """Advance one pending admission by ONE chunk: allocate the
+        chunk's blocks (batched table update), run the single compiled
+        chunk-prefill executable, extend the L1 registration frontier,
+        and finish the admission when the chunk reaches the prompt end."""
+        adm = self._pending[slot]
+        st = adm.st
+        bs = self.block
+        if not adm.started:
+            self._begin_admission(slot, adm)
+        c0 = adm.next_c0
+        remaining = st.m - c0
+        C = next((s for s in self.chunk_shapes if s >= remaining),
+                 self.prefill_chunk)
+        n_valid = min(C, remaining)
+        for idx in range(c0 // bs, (c0 + n_valid - 1) // bs + 1):
+            if self._tables[slot][idx] == SENTINEL:
+                b = self._alloc_block()
+                self._tables[slot][idx] = b
+                self._row_blocks[slot].append(b)
+                self._committed[slot] -= 1
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n_valid] = st.ids[c0:c0 + n_valid]
+        logits, self.pool = self._chunk_fn(
+            self.params, jnp.asarray(toks), self.pool, jnp.int32(slot),
+            jnp.asarray(self._tables[slot]), jnp.int32(c0),
+            jnp.int32(adm.w_floor), jnp.int32(n_valid))
+        self.stats["prefill_chunks"] += 1
+        # progressive L1 registration: blocks this chunk sealed become
+        # shareable immediately — a neighbor admitted this same step can
+        # compose its table from them at ITS first chunk
+        for b in self.trie.register(st.ids, c0 + n_valid,
+                                    self._row_blocks[slot]):
+            self.allocator.ref(b)
+        adm.next_c0 = c0 + n_valid
+        if adm.next_c0 >= st.m:
+            self._finish_admission(slot, logits)
+
+    def _finish_admission(self, slot: int, logits) -> None:
+        """Final chunk done: sample the first token, install the row's
+        DEVICE block table (the first moment decode may write through it),
+        arm the row for the batched decode loop, and account the
+        admission."""
+        adm = self._pending.pop(slot)
+        st = adm.st
+        if st.temperature > 0.0:
+            self._step_rng, sub = jax.random.split(self._step_rng)
+            tok0 = sample_logits(logits, sub, temperature=st.temperature,
+                                 top_k=st.top_k)
+        else:
+            tok0 = engine_mod.greedy(logits)
+        st.emitted = [int(tok0[0])]
+        st.t_first = time.perf_counter()
+        self.stats["requests"] += 1
+        self.stats["hits"] += int(st.hit)
+        self.stats["tokens_reused"] += st.depth
+        self.stats["tokens_prefilled"] += st.m - st.depth
+        self.stats["admissions"] += 1
+        self._temp[slot] = st.temperature
+        self._topk[slot] = st.top_k
+        self.pool, self._tokens, self._pos = self._setrow_fn(
+            self.pool, self._tokens, self._pos, slot,
+            jnp.asarray(self._tables[slot]), tok0, jnp.int32(st.m))
+        self._slots[slot] = st
+
+    # ------------------------------------------------------------------
+    def _apply_table_updates(self,
+                             updates: List[Tuple[int, int, int]]) -> None:
+        """Apply (row, entry, block) table updates in ONE fixed-width
+        dispatch; padding entries point past the table and are dropped."""
+        W = self.nbt + 2 * self.max_batch
+        assert len(updates) <= W, (len(updates), W)
+        rows = np.zeros((W,), np.int32)
+        idxs = np.full((W,), self.nbt, np.int32)
+        blks = np.zeros((W,), np.int32)
+        for j, (r, i, b) in enumerate(updates):
+            rows[j], idxs[j], blks[j] = r, i, b
+        self.pool = self._setents_batch_fn(
+            self.pool, jnp.asarray(rows), jnp.asarray(idxs),
+            jnp.asarray(blks))
+
+    def _host_block(self, cache, j: int):
+        """Block ``j`` of a promotable host entry (staging layout), as the
+        per-block fp upload payload {seg: {k, v: (L, bs, H, D)}} —
+        zero-padded when the entry's capacity axis ends mid-block (the
+        pad positions sit beyond the promoted depth and are never
+        attended)."""
+        bs = self.block
+        dt = jnp.dtype(self.cfg.dtype)
+        out = {}
+        for seg, c in cache.items():
+            sub = {}
+            for name in ("k", "v"):
+                a = np.asarray(c[name][:, 0, j * bs:(j + 1) * bs])
+                if a.shape[1] < bs:
+                    pad = [(0, 0)] * a.ndim
+                    pad[1] = (0, bs - a.shape[1])
+                    a = np.pad(a, pad)
+                sub[name] = jnp.asarray(a.astype(dt))
+            out[seg] = sub
+        return out
+
+    def _q8_block(self, raw, j: int):
+        """Block ``j`` of a quantized host entry's sealed int8 region, in
+        the verbatim per-block upload layout (codes + scales, keepdim
+        dropped).  Pure slicing — no arithmetic touches the stored bits."""
+        bs = self.block
+        ent = {}
+        for seg, c in raw.items():
+            sub = {}
+            for name in ("k", "v"):
+                leaf = c[name]
+                ax = int(np.asarray(leaf["ax"]))
+                sl = [slice(None)] * leaf[kvq._QKEY].ndim
+                sl[ax] = slice(j * bs, (j + 1) * bs)
+                sub[name] = jnp.asarray(leaf[kvq._QKEY][tuple(sl)][:, 0])
+                sub[name + "_scale"] = jnp.asarray(
+                    np.asarray(leaf["scale"])[tuple(sl)][:, 0, ..., 0])
+            ent[seg] = sub
+        return ent
+
+    def _host_ring_window(self, cache, depth: int):
+        """fp ring-tail payload for a host promotion: ring slot r holds
+        the entry's (exact, residual-covered) values of the unique block
+        ti in the last-R-blocks window of the promoted region [0, depth)
+        with ti % R == r — computed host-side so only R blocks cross to
+        the device.  Positions >= depth are zeroed; the chunk's own
+        dual-writes fill them as the fresh suffix seals."""
+        bs = self.block
+        R = self.fp_tail_blocks
+        lb = (depth - 1) // bs                 # last promoted block
+        dt = jnp.dtype(self.cfg.dtype)
+        r = np.arange(R)
+        ti = lb - ((lb - r) % R)
+        posm = ti[:, None] * bs + np.arange(bs)[None]          # (R, bs)
+        out = {}
+        for seg, c in cache.items():
+            cap = np.asarray(c["k"]).shape[2]
+            valid = ((posm >= 0) & (posm < min(depth, cap))).reshape(-1)
+            idx = np.clip(posm, 0, cap - 1).reshape(-1)
+            sub = {}
+            for name in ("k", "v"):
+                a = np.asarray(c[name])[:, 0, idx].astype(np.float32)
+                a = a * valid[None, :, None, None]
+                sub[name] = jnp.asarray(a.astype(dt))
+            out[seg] = sub
+        return out
+
+    # ------------------------------------------------------------------
     def decode_batch(self) -> List[Tuple[int, GenResult]]:
-        """One masked decode step over the paged pool (single dispatch).
-        Before stepping, rows whose next write position crosses into an
-        unallocated table entry get a fresh private block (allocation is
-        on demand — device bytes track actual lengths, not capacity)."""
+        """One engine step: advance every pending chunked admission by ONE
+        chunk, then one masked decode step over the paged pool (single
+        dispatch) for the armed rows — a long admission never stalls the
+        in-flight batch, it shares the step cadence with it.
+
+        Before decoding, rows whose next write position crosses into an
+        unallocated table entry get a fresh private block (on demand —
+        device bytes track actual lengths, not capacity), and rows within
+        ``prealloc_watermark`` positions of their block boundary have the
+        NEXT block speculatively reserved, so table updates arrive in one
+        batched dispatch instead of firing per row per boundary."""
+        for slot in sorted(self._pending):
+            self._admission_chunk(slot)
+        done: List[Tuple[int, GenResult]] = []
+        for i in self.active_slots():
+            st = self._slots[i]
+            # a row whose admission just completed may already be done
+            # (EOS at its first token, or a 1-token budget)
+            if len(st.emitted) == 1 and (
+                    (st.stop_at_eos and st.emitted[0] == EOS)
+                    or st.max_new == 1):
+                done.append((i, self._result(st, row=i)))
+                self._release_row(i)
         active = self.active_slots()
         if not active:
-            return []
+            return done
+        bs = self.block
+        updates: List[Tuple[int, int, int]] = []
         for i in active:
             st = self._slots[i]
             p = st.m + len(st.emitted) - 1   # position this step writes
-            idx = p // self.block
+            idx = p // bs
             if self._tables[i, idx] == SENTINEL:
                 b = self._alloc_block()
                 self._tables[i, idx] = b
                 self._row_blocks[i].append(b)
                 self._committed[i] -= 1
-                self.pool = self._setent_fn(self.pool, i, idx, jnp.int32(b))
+                updates.append((i, idx, b))
+            if (self.prealloc_watermark and idx + 1 < self.nbt
+                    and p % bs >= bs - self.prealloc_watermark
+                    and (idx + 1) * bs < st.m + st.max_new
+                    and self._tables[i, idx + 1] == SENTINEL):
+                b = self._alloc_block()
+                self._tables[i, idx + 1] = b
+                self._row_blocks[i].append(b)
+                self._committed[i] -= 1
+                updates.append((i, idx + 1, b))
+                self.stats["spec_preallocs"] += 1
+        if updates:
+            self._apply_table_updates(updates)
 
         if np.any(self._temp > 0.0):
             self._step_rng, sub = jax.random.split(self._step_rng)
@@ -669,7 +1215,6 @@ class PagedEngine(Engine):
                 self.params, self._tokens, self.pool, self._pos)
         toks = np.asarray(nxt)
         self.stats["batched_decode_steps"] += 1
-        done: List[Tuple[int, GenResult]] = []
         for i in active:
             st = self._slots[i]
             st.emitted.append(int(toks[i]))
@@ -723,6 +1268,7 @@ class PagedEngine(Engine):
             cache_hit=st.hit,
             mode=st.mode if st.use_recycling else "baseline",
             prompt_similarity=st.sim,
+            ttft_s=max(st.t_first - st.t0, 0.0),
         )
 
     # ------------------------------------------------------------------

@@ -12,9 +12,15 @@ against.
 both behind the same ``free_slots``/``admit_slot``/``decode_batch``
 surface: it owns the admission policy (FIFO order, admit-before-decode),
 the slot allocator (free list over pool rows), and the in-flight set.  Every
-``step()`` first fills free slots from the queue head — each admission is a
-single-row prefill, recycled prefixes included — then advances ALL in-flight
-requests one token with a single jitted masked decode over the pool.  Rows
+``step()`` first fills free slots from the queue head, then advances ALL
+in-flight requests with one ``decode_batch`` call.  What an admission costs
+inside that call is the ENGINE's choice: the dense pool (and the paged pool
+in ``prefill_mode="staged"``) runs the whole single-row prefill inside
+``admit_slot``; the paged pool's chunked default instead queues the
+admission and ``decode_batch`` advances it ONE fixed-size chunk per step,
+interleaved with the batched decode dispatch — a long prompt admits over
+several steps while the resident batch keeps emitting tokens, and its slot
+counts as in-flight the whole time (``admit_slot`` returned None).  Rows
 that hit EOS or their token budget are freed at the step boundary and the
 next ``step()`` refills them mid-flight: the batch never drains to refill,
 which is what "continuous" means and where the throughput over the serial
@@ -155,7 +161,8 @@ class ContinuousBatchingScheduler:
                 self._free.append(slot)      # don't leak the slot
                 raise
             self.stats["admissions"] += 1
-            budget -= 1                      # a prefill happened either way
+            budget -= 1    # admission work happened either way (a staged
+            #                prefill ran, or chunk steps were queued)
             if res is not None:                       # finished at token 0
                 req.result = res
                 self.completed.append(req)

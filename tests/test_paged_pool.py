@@ -481,24 +481,31 @@ def test_int8_promotes_legacy_quantized_entries_via_fallback(stack):
     assert eng.stats["q8_block_promotions"] == 0     # fallback path
 
 
-def test_int8_paged_rejects_dense_quant_host_entries(stack):
+def test_paged_converts_dense_quant_host_entries(stack):
     """A host entry in the dense kv_quant layout (native k_scale leaves)
-    can't be staged by the paged prefill — the engine must miss honestly
-    instead of corrupting the pool."""
+    can't be consumed by the paged admission layouts directly — instead
+    of the old honest-miss skip, it is CONVERTED (dequant -> staging
+    layout, value-preserving to within half a quant step) on promotion
+    and serves the hit; the conversion counter records the event for the
+    bench."""
     cfg, params = stack
     from repro.serving import BatchedEngine
     donor = BatchedEngine(cfg, params, max_batch=2, capacity=128,
                           max_new_tokens=4, block_size=8, kv_quant=True)
     donor.precache(CACHED[:1])
-    pag = PagedEngine(cfg, params, max_batch=2, capacity=128,
-                      max_new_tokens=4, block_size=8,
-                      recycler=donor.recycler)
-    sched = ContinuousBatchingScheduler(pag)
-    r = sched.submit(CACHED[0] + " and tomorrow")
-    sched.run()
-    assert r.result.mode == "miss"
-    assert pag.stats["layout_skips"] == 1
-    pag.check_invariants()
+    for pm in ("chunked", "staged"):
+        pag = PagedEngine(cfg, params, max_batch=2, capacity=128,
+                          max_new_tokens=4, block_size=8,
+                          recycler=donor.recycler, prefill_mode=pm)
+        sched = ContinuousBatchingScheduler(pag)
+        r = sched.submit(CACHED[0] + " and tomorrow")
+        sched.run()
+        assert r.result.mode == "exact_prefix", pm
+        assert r.result.reuse_depth > 0
+        assert pag.stats["layout_conversions"] == 1, pm
+        assert pag.stats["host_promotions"] == 1
+        assert r.result.gen_tokens > 0
+        pag.check_invariants()
 
 
 def test_paged_quant_kernel_matches_reference():
