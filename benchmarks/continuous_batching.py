@@ -31,11 +31,22 @@ serving TTFT) and ``prefill_compiles`` (compiled prefill executables —
 per distinct suffix length on the staged path, exactly 1 on the chunked
 path), summarized per batch size in ``chunked_vs_staged_b*`` rows.
 
+With ``--semantic``, a prefix-free workload (every prompt shares 8
+interior blocks with one donor but no prefix) runs with semantic
+block-donor grafting off and on: ``semantic_off_b*`` / ``semantic_on_b*``
+rows record hit rate, reuse depth, graft/refusal counts and gate
+divergence, ``semantic_vs_exact_b*`` summarizes reuse-where-prefix-sees-
+zero plus output fidelity (embedding cosine, on vs off), and
+``semantic_preservation`` proves the standard workload's prefix-path
+requests keep their mode and text under semantic mode.
+
 Besides the table, the run writes ``BENCH_continuous_batching.json`` (or
 ``--json-out PATH``) so CI can track the perf trajectory machine-readably.
 ``--check-chunked`` (CI smoke) fails the run if any chunked config
 compiled more than one prefill executable per chunk shape or if the
-TTFT rows are missing from the artifact.
+TTFT rows are missing from the artifact; ``--check-semantic`` fails it
+unless the semantic rows show grafted reuse depth > 0 where the prefix
+paths report 0, with the prefix paths byte-preserved.
 """
 from __future__ import annotations
 
@@ -46,6 +57,7 @@ import time
 import jax
 
 from repro.configs import get_config
+from repro.core import HashEmbedder
 from repro.models import init_params, paged_block_bytes
 from repro.models.cache import cache_bytes
 from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
@@ -56,6 +68,13 @@ CACHED = [
     "what is the capital of france and why",
     "explain machine learning in simple terms please",
 ]
+
+# 64 shared characters = 8 aligned byte-token blocks at block_size 8; a
+# 7-char head (+BOS) fills exactly one differing block, so every query
+# shares 8 interior blocks with the donor while sharing NO prefix — the
+# workload where both prefix paths report zero reuse
+SEM_MID = "the quick brown fox jumps over the lazy dog again and again!!!!"
+SEM_DONOR = "aaaaaaa" + SEM_MID
 
 
 def workload(n_requests: int):
@@ -71,6 +90,11 @@ def workload(n_requests: int):
         else:
             reqs.append(f"cold unseen prompt number {i} with no overlap")
     return reqs
+
+
+def semantic_workload(n_requests: int):
+    """Prefix-free queries sharing the donor's middle blocks."""
+    return [f"q{i:06d}" + SEM_MID for i in range(n_requests)]
 
 
 def _run(sched, prompts, max_new):
@@ -121,6 +145,25 @@ def main():
                     help="also run the int8 paged pool (kv_quant) and "
                          "record fp-vs-int8 device_kv_bytes_in_use, "
                          "tokens/s and max resident blocks")
+    ap.add_argument("--semantic", action="store_true",
+                    help="also run the semantic block-donor workload "
+                         "(prefix-free prompts sharing interior blocks "
+                         "with one donor) with grafting off and on, and "
+                         "record hit rate / reuse depth / graft counts / "
+                         "gate divergence / output fidelity rows")
+    ap.add_argument("--check-semantic", action="store_true",
+                    help="fail (exit 1) unless the semantic-on rows show "
+                         "grafts with reuse depth > 0 where the prefix "
+                         "paths report 0, output fidelity clears "
+                         "--fidelity-min, and semantic mode preserved "
+                         "every prefix-path request's mode and text "
+                         "(CI gate; implies --semantic)")
+    ap.add_argument("--fidelity-min", type=float, default=-1.0,
+                    help="minimum mean embedding cosine between "
+                         "semantic-on and semantic-off outputs for "
+                         "--check-semantic (default -1.0 = record only; "
+                         "raise it when running trained weights, where "
+                         "boundary recompute should keep outputs close)")
     ap.add_argument("--check-chunked", action="store_true",
                     help="fail (exit 1) unless every chunked config "
                          "compiled at most one prefill executable per "
@@ -257,6 +300,116 @@ def main():
                 "max_resident_blocks_int8": q8["max_resident_blocks"],
             })
 
+    if args.check_semantic:
+        args.semantic = True
+    if args.semantic:
+        # Semantic block-donor recycling (grafting rides the chunked
+        # admission only).  graft_max_div is wide open here: with random
+        # init (this benchmark never loads trained weights) the boundary
+        # recompute always diverges numerically from the donor, and the
+        # point of these rows is the reuse/fidelity ACCOUNTING — the
+        # gate's recorded divergences, not its policy.
+        sem_prompts = semantic_workload(args.requests)
+        emb = HashEmbedder()
+        texts = {}
+        for sem in (False, True):
+            label = "on" if sem else "off"
+            for b in args.batches:
+                peng = PagedEngine(cfg, params, max_batch=b,
+                                   capacity=args.capacity,
+                                   max_new_tokens=args.max_new,
+                                   block_size=8, enable_partial=True,
+                                   prefill_mode="chunked", semantic=sem,
+                                   graft_max_div=1e9)
+                sched = ContinuousBatchingScheduler(peng)
+                sched.submit(SEM_DONOR, admit=True,
+                             max_new_tokens=args.max_new)
+                sched.run()
+                sched.completed = []
+                for p in sem_prompts:
+                    sched.submit(p, max_new_tokens=args.max_new)
+                t0 = time.perf_counter()
+                done = sched.run()
+                dt = time.perf_counter() - t0
+                peng.check_invariants()
+                served = {r.prompt: r.result for r in done
+                          if r.result is not None}
+                texts[(sem, b)] = {p: served[p].text for p in sem_prompts
+                                   if p in served}
+                depths = [served[p].reuse_depth for p in sem_prompts
+                          if p in served]
+                toks = sum(r.gen_tokens for r in served.values())
+                divs = peng.semantic_gate_divs
+                rows.append({
+                    "config": f"semantic_{label}_b{b}", "wall_s": dt,
+                    "gen_tokens": toks, "tokens_per_s": toks / dt,
+                    "speedup": (toks / dt) / serial_tps,
+                    "hit_rate": (sum(served[p].cache_hit
+                                     for p in served) / max(len(served),
+                                                            1)),
+                    "reuse_depth_mean": (sum(depths)
+                                         / max(len(depths), 1)),
+                    "reuse_depth_max": max(depths, default=0),
+                    "semantic_grafts": peng.stats["semantic_grafts"],
+                    "semantic_refusals":
+                        peng.stats["semantic_refusals"],
+                    "semantic_resident_grafts":
+                        peng.stats["semantic_resident_grafts"],
+                    "semantic_host_grafts":
+                        peng.stats["semantic_host_grafts"],
+                    "tokens_grafted": peng.stats["tokens_grafted"],
+                    "gate_div_mean": (sum(divs) / max(len(divs), 1)),
+                    "gate_div_max": max(divs, default=0.0)})
+        by = {r["config"]: r for r in rows}
+        for b in args.batches:
+            off, on = by[f"semantic_off_b{b}"], by[f"semantic_on_b{b}"]
+            # fidelity: mean embedding cosine of per-request outputs, on
+            # vs off — 1.0 means grafting changed nothing the embedder
+            # can see (only meaningful with trained weights)
+            cos = [float(emb.encode(texts[(True, b)][p])
+                         @ emb.encode(texts[(False, b)][p]))
+                   for p in sem_prompts
+                   if p in texts[(True, b)] and p in texts[(False, b)]]
+            rows.append({
+                "config": f"semantic_vs_exact_b{b}",
+                "reuse_depth_mean_off": off["reuse_depth_mean"],
+                "reuse_depth_mean_on": on["reuse_depth_mean"],
+                "hit_rate_off": off["hit_rate"],
+                "hit_rate_on": on["hit_rate"],
+                "semantic_grafts": on["semantic_grafts"],
+                "tokens_grafted": on["tokens_grafted"],
+                "gate_div_mean": on["gate_div_mean"],
+                "fidelity": sum(cos) / max(len(cos), 1)})
+        # prefix-path preservation: on the STANDARD workload semantic
+        # mode must not change any request's mode or text (grafting only
+        # ever fires on a prefix miss)
+        pres_results = []
+        for sem in (False, True):
+            peng = PagedEngine(cfg, params, max_batch=args.batches[-1],
+                               capacity=args.capacity,
+                               max_new_tokens=args.max_new, block_size=8,
+                               enable_partial=True,
+                               prefill_mode="chunked", semantic=sem)
+            peng.precache(CACHED)
+            sched = ContinuousBatchingScheduler(peng)
+            for p in prompts:
+                sched.submit(p, max_new_tokens=args.max_new)
+            done = sched.run()
+            pres_results.append({r.prompt: r.result for r in done
+                                 if r.result is not None})
+        off_r, on_r = pres_results
+        mismatches = [p for p in prompts
+                      if p in off_r and off_r[p].cache_hit
+                      and (p not in on_r
+                           or on_r[p].mode != off_r[p].mode
+                           or on_r[p].text != off_r[p].text)]
+        rows.append({"config": "semantic_preservation",
+                     "prefix_hits_checked":
+                         sum(1 for p in prompts
+                             if p in off_r and off_r[p].cache_hit),
+                     "mismatches": len(mismatches),
+                     "preserved": not mismatches})
+
     timed = [r for r in rows if "wall_s" in r]
     print(f"{'config':<24} {'wall_s':>8} {'gen_tok':>8} "
           f"{'tok/s':>10} {'speedup':>8} {'ttft_ms':>8} {'compiles':>8}")
@@ -285,6 +438,18 @@ def main():
             print(f"{r['config']}: {r['bytes_reduction']:.2f}x fewer device "
                   f"KV bytes in use ({r['bytes_in_use_fp']} -> "
                   f"{r['bytes_in_use_int8']})")
+        if r["config"].startswith("semantic_vs_exact"):
+            print(f"{r['config']}: reuse depth "
+                  f"{r['reuse_depth_mean_off']:.1f} -> "
+                  f"{r['reuse_depth_mean_on']:.1f} "
+                  f"({r['semantic_grafts']} grafts, "
+                  f"{r['tokens_grafted']} tokens), gate div "
+                  f"{r['gate_div_mean']:.3f}, fidelity "
+                  f"{r['fidelity']:.3f}")
+        if r["config"] == "semantic_preservation":
+            print(f"semantic_preservation: "
+                  f"{r['prefix_hits_checked']} prefix-path hits, "
+                  f"{r['mismatches']} mismatches under semantic mode")
 
     record = {
         "benchmark": "continuous_batching",
@@ -330,6 +495,47 @@ def main():
                              "\n  ".join(bad))
         print("--check-chunked OK: at most one compiled prefill per "
               "chunk shape, TTFT rows present")
+
+    if args.check_semantic:
+        # CI gate for the tentpole claim: the semantic workload shows
+        # reuse where the prefix paths see none, fidelity is recorded
+        # (and clears --fidelity-min), and the prefix paths are
+        # byte-preserved under semantic mode
+        bad = []
+        on_rows = [r for r in rows
+                   if r["config"].startswith("semantic_on_b")]
+        off_rows = [r for r in rows
+                    if r["config"].startswith("semantic_off_b")]
+        if not on_rows:
+            bad.append("no semantic_on rows in the artifact")
+        for r in off_rows:
+            if r["reuse_depth_max"] != 0:
+                bad.append(f"{r['config']}: prefix paths reported reuse "
+                           f"{r['reuse_depth_max']} on the prefix-free "
+                           f"workload")
+        for r in on_rows:
+            if r["semantic_grafts"] <= 0:
+                bad.append(f"{r['config']}: no grafts on the semantic "
+                           f"workload")
+            if r["reuse_depth_mean"] <= 0:
+                bad.append(f"{r['config']}: zero reuse depth despite "
+                           f"semantic mode")
+        for r in rows:
+            if r["config"].startswith("semantic_vs_exact") \
+                    and r["fidelity"] < args.fidelity_min:
+                bad.append(f"{r['config']}: fidelity {r['fidelity']:.3f}"
+                           f" < {args.fidelity_min}")
+        pres = [r for r in rows if r["config"] == "semantic_preservation"]
+        if not pres:
+            bad.append("missing semantic_preservation row")
+        elif not pres[0]["preserved"]:
+            bad.append(f"semantic mode changed {pres[0]['mismatches']} "
+                       f"prefix-path request(s)")
+        if bad:
+            raise SystemExit("--check-semantic FAILED:\n  " +
+                             "\n  ".join(bad))
+        print("--check-semantic OK: grafted reuse where prefix paths "
+              "report zero, prefix paths preserved")
 
     return rows
 

@@ -14,8 +14,9 @@ from repro.core.blockpool import BlockAllocator, BlockPoolExhausted, SENTINEL
 from repro.core.embedder import HashEmbedder
 from repro.core.index import EmbeddingIndex
 from repro.core.kvstore import HostKVStore, CacheEntry
+from repro.core.lsh import BlockLSH
 from repro.core.quant import (dequantize_tree, is_quantized, quantize_tree)
-from repro.core.recycler import Recycler, RecycleResult
+from repro.core.recycler import GraftPlan, Recycler, RecycleResult
 from repro.core.radix import BlockTrie, RadixPrefixCache
 from repro.core.metrics import RunMetrics, summarize_runs
 
@@ -28,6 +29,8 @@ __all__ = [
     "EmbeddingIndex",
     "HostKVStore",
     "CacheEntry",
+    "BlockLSH",
+    "GraftPlan",
     "Recycler",
     "RecycleResult",
     "RadixPrefixCache",

@@ -24,6 +24,18 @@ import numpy as np
 _WORD_RE = re.compile(r"[a-z0-9']+")
 
 
+def _kind_seed(kind: str) -> int:
+    """Stable per-feature-kind hash salt.  MUST NOT use builtin ``hash``:
+    str hashing is salted per process (PYTHONHASHSEED), which silently made
+    embeddings process-dependent — similarities against a reloaded store
+    were garbage.  blake2b is the same digest everywhere, forever."""
+    return int.from_bytes(
+        hashlib.blake2b(kind.encode(), digest_size=2).digest(), "little")
+
+
+_KIND_SEEDS = {k: _kind_seed(k) for k in ("w", "b", "c", "r")}
+
+
 def _bucket(token: str, seed: int, dim: int) -> tuple[int, float]:
     h = hashlib.blake2b(f"{seed}:{token}".encode(), digest_size=8).digest()
     v = int.from_bytes(h, "little")
@@ -57,8 +69,10 @@ class HashEmbedder:
 
     def encode(self, text: str) -> np.ndarray:
         v = np.zeros((self.dim,), np.float32)
-        for seed, (kind, tok) in enumerate(self._features(text)):
-            idx, sign = _bucket(tok, hash(kind) & 0xFFFF, self.dim)
+        for kind, tok in self._features(text):
+            idx, sign = _bucket(tok,
+                                _KIND_SEEDS.get(kind) or _kind_seed(kind),
+                                self.dim)
             v[idx] += sign
         norm = float(np.linalg.norm(v))
         return v / norm if norm > 0 else v

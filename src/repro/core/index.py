@@ -4,10 +4,21 @@ Paper §2.5: ``i* = argmax_i <e_i, e_t>`` over L2-normalized embeddings
 (dot product == cosine).  The paper uses faiss-cpu; at our scale a blocked
 numpy matmul is exact and dependency-free, and supports incremental add /
 remove (needed by cache eviction).
+
+Invariants (property-tested in tests/test_property.py):
+
+  * one row per entry_id — ``add`` of an existing id REPLACES its vector
+    (it used to append a duplicate row: ``remove`` then deleted only the
+    first and ``similarity`` read the first, so stale vectors served
+    retrieval forever);
+  * ``_row[id]`` is the exact row of ``_vecs`` holding id's vector (an
+    id→row map instead of the old O(n) ``list.index`` scan on every
+    remove/similarity);
+  * ``len(index) == len(_row) == _vecs.shape[0]``.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -17,21 +28,42 @@ class EmbeddingIndex:
         self.dim = dim
         self._vecs = np.zeros((0, dim), np.float32)
         self._ids: List[int] = []
+        self._row: Dict[int, int] = {}
 
     def __len__(self) -> int:
         return len(self._ids)
 
+    def __contains__(self, entry_id: int) -> bool:
+        return entry_id in self._row
+
+    def ids(self) -> List[int]:
+        return list(self._ids)
+
     def add(self, entry_id: int, vec: np.ndarray) -> None:
+        """Index (or re-index) ``entry_id``.  A duplicate id replaces the
+        existing row in place — the index never holds stale vectors."""
         assert vec.shape == (self.dim,)
-        self._vecs = np.concatenate([self._vecs, vec[None]], axis=0)
+        i = self._row.get(entry_id)
+        if i is not None:
+            self._vecs[i] = vec.astype(np.float32)
+            return
+        self._row[entry_id] = len(self._ids)
         self._ids.append(entry_id)
+        self._vecs = np.concatenate(
+            [self._vecs, vec.astype(np.float32)[None]], axis=0)
 
     def remove(self, entry_id: int) -> None:
-        if entry_id not in self._ids:
+        i = self._row.pop(entry_id, None)
+        if i is None:
             return
-        i = self._ids.index(entry_id)
-        self._vecs = np.delete(self._vecs, i, axis=0)
-        del self._ids[i]
+        last = len(self._ids) - 1
+        if i != last:
+            # swap-with-last: O(1) array surgery instead of an O(n) delete
+            self._vecs[i] = self._vecs[last]
+            self._ids[i] = self._ids[last]
+            self._row[self._ids[i]] = i
+        self._vecs = self._vecs[:last]
+        del self._ids[last]
 
     def search(self, vec: np.ndarray, k: int = 1
                ) -> List[Tuple[int, float]]:
@@ -49,7 +81,7 @@ class EmbeddingIndex:
         (nan when the entry is not indexed).  Lets callers report the
         similarity of the entry actually serving a hit, rather than the
         best similarity seen during retrieval."""
-        if entry_id not in self._ids:
+        i = self._row.get(entry_id)
+        if i is None:
             return float("nan")
-        i = self._ids.index(entry_id)
         return float(self._vecs[i] @ vec.astype(np.float32))

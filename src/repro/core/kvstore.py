@@ -33,7 +33,7 @@ import json
 import os
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -96,7 +96,17 @@ class CacheEntry:
 
 
 class HostKVStore:
-    """LRU-ordered entry store with a byte budget."""
+    """LRU-ordered entry store with a byte budget.
+
+    The budget is enforced at EVERY ``put`` (it used to be enforced only
+    by ``Recycler.admit`` calling ``evict_to_budget`` afterwards, so
+    direct store users could exceed ``max_bytes`` indefinitely).  Callers
+    that mirror the store's contents elsewhere (the recycler's embedding
+    index / radix / LSH) register ``on_evict`` so entries evicted inside
+    ``put`` never go stale in the mirrors.  Invariant (property-tested):
+    ``total_bytes == sum(e.nbytes for e in entries)`` after any mix of
+    put / get / remove / evict_to_budget.
+    """
 
     def __init__(self, max_bytes: Optional[int] = None):
         self.max_bytes = max_bytes
@@ -106,6 +116,10 @@ class HostKVStore:
         self.evictions = 0
         self._clock = 0                        # touching-get counter
         self.stats = {"peeks": 0, "hits": 0}   # L2-tier traffic
+        # called with each evicted entry_id (budget eviction only, not
+        # explicit remove()); lets index mirrors stay consistent even when
+        # eviction fires inside put()
+        self.on_evict: Optional[Callable[[int], None]] = None
 
     def __len__(self):
         return len(self._entries)
@@ -116,6 +130,11 @@ class HostKVStore:
     def ids(self) -> List[int]:
         return list(self._entries.keys())
 
+    def entries(self) -> List[CacheEntry]:
+        """Current entries in LRU order (coldest first), without touching
+        recency or peek stats — for rebuilding retrieval mirrors."""
+        return list(self._entries.values())
+
     def put(self, text: str, token_ids, cache, length: int,
             capacity: Optional[int] = None) -> CacheEntry:
         token_ids = np.asarray(token_ids, np.int32)
@@ -124,6 +143,11 @@ class HostKVStore:
         self._next_id += 1
         self._entries[entry.entry_id] = entry
         self.total_bytes += entry.nbytes
+        # enforce the byte budget HERE, not just in Recycler.admit — the
+        # new entry is MRU, so it is evicted only if it alone exceeds the
+        # whole budget (in which case the store honestly refuses to hold
+        # it rather than blowing the budget)
+        self.evict_to_budget()
         return entry
 
     def get(self, entry_id: int, *, touch: bool = True) -> CacheEntry:
@@ -157,6 +181,8 @@ class HostKVStore:
             self.total_bytes -= e.nbytes
             self.evictions += 1
             evicted.append(eid)
+            if self.on_evict is not None:
+                self.on_evict(eid)
         return evicted
 
     # ---- disk ----------------------------------------------------------

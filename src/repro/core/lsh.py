@@ -1,0 +1,155 @@
+"""Token-block LSH: position-aligned donor-block search (beyond paper).
+
+The paper's reuse rule is an *exact full-prefix* test; SemShareKV
+(arXiv 2509.24832) shows token-level LSH can surface reusable KV runs in
+semantically similar prompts that share no prefix.  This module is the
+retrieval half of that idea, adapted to the repo's block granularity:
+
+Every cached prompt's token ids are cut into fixed-size blocks; each
+FULL block gets a minhash signature over its token shingles, banded
+LSH-style so near-identical blocks (most shingles shared) collide in at
+least one band with high probability while unrelated blocks almost never
+do.  The index is **position-aligned**: block ``b`` of a query can only
+match block ``b`` of a donor, because a KV block is only a plausible
+stand-in at the absolute positions it was computed for (the models bake
+position into K/V at embed time; we do not re-rotate like SemShareKV's
+RoPE realignment — see ROADMAP known limits).
+
+Collisions are candidates, never verdicts: the recycler re-verifies
+every candidate block against the donor's actual token ids
+(``match_mask``), and the engine's boundary-divergence fidelity gate has
+the final say.  Identical blocks always collide (minhash of an equal
+shingle set is equal), so exact matches are never missed.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Sequence, Set, Tuple
+
+import numpy as np
+
+
+def _h64(data: bytes, seed: int) -> int:
+    return int.from_bytes(
+        hashlib.blake2b(data, digest_size=8,
+                        salt=seed.to_bytes(8, "little")).digest(), "little")
+
+
+def _shingles(tokens: Sequence[int], n: int) -> List[bytes]:
+    toks = [int(t) for t in tokens]
+    if len(toks) < n:
+        return [np.asarray(toks, np.int64).tobytes()]
+    return [np.asarray(toks[i:i + n], np.int64).tobytes()
+            for i in range(len(toks) - n + 1)]
+
+
+class BlockLSH:
+    """Banded-minhash index of token blocks, keyed by (block index, band).
+
+    ``n_hashes`` minhash values per block, grouped into ``n_bands`` bands;
+    two blocks sharing a fraction ``s`` of their shingles collide in at
+    least one band with probability ``1 - (1 - s^r)^b`` (r rows per
+    band).  With the defaults (8 hashes, 4 bands of 2) an 80%-overlapping
+    block is found ~98% of the time while a 20% one fires <15% of the
+    time — and the recycler verifies candidates anyway.
+    """
+
+    def __init__(self, block_size: int, *, n_hashes: int = 8,
+                 n_bands: int = 4, shingle: int = 2):
+        assert block_size >= 1 and n_hashes % n_bands == 0
+        self.block = block_size
+        self.n_hashes = n_hashes
+        self.n_bands = n_bands
+        self.rows = n_hashes // n_bands
+        self.shingle = shingle
+        # (block_idx, band, band_key) -> entry ids whose block collides
+        self._buckets: Dict[Tuple[int, int, int], Set[int]] = {}
+        # entry id -> per-block band keys (for removal)
+        self._entry_sigs: Dict[int, List[Tuple[int, ...]]] = {}
+
+    def __len__(self) -> int:
+        return len(self._entry_sigs)
+
+    def __contains__(self, entry_id: int) -> bool:
+        return entry_id in self._entry_sigs
+
+    # ------------------------------------------------------------------
+    def block_signature(self, tokens: Sequence[int]) -> Tuple[int, ...]:
+        """Band keys of ONE full block (``n_bands``-tuple)."""
+        sh = _shingles(tokens, self.shingle)
+        mins = [min(_h64(s, seed) for s in sh)
+                for seed in range(self.n_hashes)]
+        keys = []
+        for b in range(self.n_bands):
+            band = mins[b * self.rows:(b + 1) * self.rows]
+            keys.append(_h64(np.asarray(band, np.uint64).tobytes(),
+                             self.n_hashes + b))
+        return tuple(keys)
+
+    def signatures(self, token_ids, length=None) -> List[Tuple[int, ...]]:
+        """Per-FULL-block band keys of ``token_ids[:length]`` (a partial
+        tail block gets no signature — it is never graftable)."""
+        n = len(token_ids) if length is None else min(length, len(token_ids))
+        bs = self.block
+        return [self.block_signature(token_ids[b0:b0 + bs])
+                for b0 in range(0, (n // bs) * bs, bs)]
+
+    # ------------------------------------------------------------------
+    def add(self, entry_id: int, token_ids, length=None) -> None:
+        """Index every full block of an admitted entry.  Re-adding an
+        existing id replaces its signatures (no stale buckets)."""
+        if entry_id in self._entry_sigs:
+            self.remove(entry_id)
+        sigs = self.signatures(token_ids, length)
+        self._entry_sigs[entry_id] = sigs
+        for bi, keys in enumerate(sigs):
+            for band, key in enumerate(keys):
+                self._buckets.setdefault((bi, band, key),
+                                         set()).add(entry_id)
+
+    def remove(self, entry_id: int) -> None:
+        sigs = self._entry_sigs.pop(entry_id, None)
+        if sigs is None:
+            return
+        for bi, keys in enumerate(sigs):
+            for band, key in enumerate(keys):
+                bucket = self._buckets.get((bi, band, key))
+                if bucket is not None:
+                    bucket.discard(entry_id)
+                    if not bucket:
+                        del self._buckets[(bi, band, key)]
+
+    # ------------------------------------------------------------------
+    def candidates(self, token_ids, length=None
+                   ) -> Dict[int, Set[int]]:
+        """entry_id -> block indices where the query's block collides
+        with the entry's SAME-POSITION block in >= 1 band.  Candidates
+        only — the caller verifies against actual token ids."""
+        out: Dict[int, Set[int]] = {}
+        for bi, keys in enumerate(self.signatures(token_ids, length)):
+            for band, key in enumerate(keys):
+                for eid in self._buckets.get((bi, band, key), ()):
+                    out.setdefault(eid, set()).add(bi)
+        return out
+
+
+def match_mask(query_ids, donor_ids, block_size: int,
+               candidate_blocks: Set[int], min_agree: float
+               ) -> List[float]:
+    """Per-block token agreement of query vs donor at aligned positions,
+    gated to LSH-candidate blocks.  Returns agreement in [0, 1] for each
+    full block both sides cover (0.0 for non-candidates — they were
+    never even close enough to collide)."""
+    q = np.asarray(query_ids)
+    d = np.asarray(donor_ids)
+    nb = min(len(q), len(d)) // block_size
+    out: List[float] = []
+    for b in range(nb):
+        if b not in candidate_blocks:
+            out.append(0.0)
+            continue
+        lo = b * block_size
+        agree = float(np.mean(q[lo:lo + block_size]
+                              == d[lo:lo + block_size]))
+        out.append(agree if agree >= min_agree else 0.0)
+    return out

@@ -166,6 +166,17 @@ class BlockTrie:
         Returns (depth, chain) where chain is [(block_id, fill), ...] —
         full blocks followed by at most one partial tail.  Touches every
         node on the chain (true recency for eviction)."""
+        return self._walk(token_ids, stamp=True)
+
+    def peek(self, token_ids) -> Tuple[int, List[Tuple[int, int]]]:
+        """Like ``lookup`` but WITHOUT stamping recency — for inspecting
+        a candidate chain (e.g. the semantic donor search sizing up which
+        donors are device-resident) where merely being considered must
+        not count as a served hit, or cold chains would never age out."""
+        return self._walk(token_ids, stamp=False)
+
+    def _walk(self, token_ids, *, stamp: bool
+              ) -> Tuple[int, List[Tuple[int, int]]]:
         ids = [int(t) for t in token_ids]
         n = len(ids)
         chain: List[Tuple[int, int]] = []
@@ -190,17 +201,19 @@ class BlockTrie:
         if best_p is not None:
             chain.append((best_p.block, best_p.fill))
             depth += best_p.fill
-            best_p.last_touch = self._tick()
-        # stamp the walked chain
-        t = self._tick()
-        nd = None
-        children = self._root
-        d = 0
-        while d + self.block <= depth:
-            nd = children[tuple(ids[d:d + self.block])]
-            nd.last_touch = t
-            children = nd.children
-            d += self.block
+            if stamp:
+                best_p.last_touch = self._tick()
+        if stamp:
+            # stamp the walked chain
+            t = self._tick()
+            nd = None
+            children = self._root
+            d = 0
+            while d + self.block <= depth:
+                nd = children[tuple(ids[d:d + self.block])]
+                nd.last_touch = t
+                children = nd.children
+                d += self.block
         return depth, chain
 
     # ------------------------------------------------------------------

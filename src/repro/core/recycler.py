@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.embedder import HashEmbedder
 from repro.core.index import EmbeddingIndex
+from repro.core.lsh import BlockLSH, match_mask
 from repro.core import quant as kvq
 from repro.core.kvstore import CacheEntry, HostKVStore
 from repro.core.quant import CAP_AXIS as _CAP_AXIS
@@ -115,6 +116,49 @@ class RecycleResult:
     cache: Any = None            # host cache pytree ready for the engine
 
 
+@dataclass
+class GraftPlan:
+    """A semantic block-donor graft nominated by ``lookup_semantic``.
+
+    The donor's blocks [b0, b1) match the query's SAME-POSITION blocks
+    (verified token agreement >= min_agree per block).  The engine
+    recomputes the first ``boundary`` block(s) of the run under the new
+    prompt's real context (the KVLink link-region idea at block
+    granularity) and grafts the interior [interior_lo, interior_hi)
+    verbatim; the fidelity gate compares the recomputed boundary against
+    the donor's same blocks and refuses the graft on divergence.
+    """
+    entry: CacheEntry
+    b0: int                      # first matched block
+    b1: int                      # one past the last matched block
+    boundary: int                # leading run blocks recomputed, >= 1
+    block_size: int
+    similarity: float            # donor's sentence-embedding similarity
+    agreement: float             # mean token agreement over [b0, b1)
+
+    @property
+    def interior_lo(self) -> int:
+        return self.b0 + self.boundary
+
+    @property
+    def interior_hi(self) -> int:
+        return self.b1
+
+    @property
+    def seg1_end(self) -> int:
+        """First token position NOT recomputed before the graft."""
+        return self.interior_lo * self.block_size
+
+    @property
+    def graft_end(self) -> int:
+        """First token position after the grafted interior."""
+        return self.b1 * self.block_size
+
+    @property
+    def interior_tokens(self) -> int:
+        return (self.interior_hi - self.interior_lo) * self.block_size
+
+
 class Recycler:
     """Cross-prompt KV recycling policy over a HostKVStore."""
 
@@ -122,11 +166,14 @@ class Recycler:
                  embedder: Optional[HashEmbedder] = None,
                  *, enable_partial: bool = False, block_size: int = 64,
                  retrieval_k: int = 4, compress: bool = False,
-                 compress_residual: int = kvq.DEFAULT_RESIDUAL):
+                 compress_residual: int = kvq.DEFAULT_RESIDUAL,
+                 semantic: bool = False, graft_min_agree: float = 1.0,
+                 graft_boundary_blocks: int = 1):
         # NB: not ``store or ...`` — an empty HostKVStore is falsy (__len__)
         self.store = store if store is not None else HostKVStore()
         self.embedder = embedder if embedder is not None else HashEmbedder()
         self.index = EmbeddingIndex(self.embedder.dim)
+        self.block = block_size
         self.radix = RadixPrefixCache(block_size) if enable_partial else None
         self.retrieval_k = retrieval_k
         # int8 host-cache compression (beyond paper): halves bf16 KV bytes.
@@ -135,6 +182,42 @@ class Recycler:
         # uncompressed path; the invalid region beyond ``length`` is dropped.
         self.compress = compress
         self.compress_residual = compress_residual
+        # beyond-paper semantic mode: block-level donor search over a
+        # token-block LSH (SemShareKV-style), consumed by the paged
+        # engine's graft path.  Off by default — the greedy token-identity
+        # of the exact/partial/miss paths is untouched when off.
+        self.semantic = semantic
+        self.graft_min_agree = graft_min_agree
+        self.graft_boundary_blocks = max(1, graft_boundary_blocks)
+        self.lsh = BlockLSH(block_size) if semantic else None
+        # A store handed in pre-populated (e.g. HostKVStore.load_dir) used
+        # to be INVISIBLE to retrieval: neither the embedding index nor
+        # the radix/LSH were rebuilt, so no persisted entry could ever
+        # hit.  Rebuild every mirror from the store's entries here.
+        for e in self.store.entries():
+            self._index_entry(e)
+        # budget evictions can now fire inside store.put(); the callback
+        # keeps the mirrors consistent however the eviction was triggered
+        self.store.on_evict = self._forget_entry
+
+    # ------------------------------------------------------------------
+    def _index_entry(self, entry: CacheEntry) -> None:
+        """Register one store entry in every retrieval mirror."""
+        self.index.add(entry.entry_id, self.embedder.encode(entry.text))
+        if is_trimmable(entry.cache):
+            if self.radix is not None:
+                self.radix.insert(entry.token_ids, entry.entry_id,
+                                  entry.length)
+            if self.lsh is not None:
+                self.lsh.add(entry.entry_id, entry.token_ids, entry.length)
+
+    def _forget_entry(self, entry_id: int) -> None:
+        """Drop one evicted entry from every retrieval mirror."""
+        self.index.remove(entry_id)
+        if self.radix is not None:
+            self.radix.forget_entry(entry_id)
+        if self.lsh is not None:
+            self.lsh.remove(entry_id)
 
     # ------------------------------------------------------------------
     def admit(self, text: str, token_ids, cache_host, length: int,
@@ -147,13 +230,12 @@ class Recycler:
             cache_host = kvq.quantize_tree(cache_host, length=length,
                                            residual=self.compress_residual)
         entry = self.store.put(text, token_ids, cache_host, length, capacity)
-        self.index.add(entry.entry_id, self.embedder.encode(text))
-        if self.radix is not None and is_trimmable(cache_host):
-            self.radix.insert(entry.token_ids, entry.entry_id, length)
-        for eid in self.store.evict_to_budget():
-            self.index.remove(eid)
-            if self.radix is not None:
-                self.radix.forget_entry(eid)
+        # put() enforces the byte budget itself now (evicted ids reach
+        # _forget_entry through store.on_evict); only index the new entry
+        # if it actually survived — an entry bigger than the whole budget
+        # is evicted inside put and must not linger in the mirrors
+        if entry.entry_id in self.store:
+            self._index_entry(entry)
         return entry
 
     # ------------------------------------------------------------------
@@ -224,3 +306,63 @@ class Recycler:
                                      sim, _materialize(trim_to_depth(e.cache,
                                                                      depth)))
         return RecycleResult(False, "miss", None, 0, sim_best, None)
+
+    # ------------------------------------------------------------------
+    def lookup_semantic(self, text: str, token_ids) -> Optional[GraftPlan]:
+        """Block-level donor search for a prompt that MISSED the prefix
+        paths (beyond paper; SemShareKV + KVLink at block granularity).
+
+        Hashes the query's token blocks through the LSH, verifies every
+        candidate block against the donor's actual token ids at the SAME
+        positions, and nominates the donor with the longest run of
+        agreeing blocks.  The plan's leading ``boundary`` block(s) are
+        recomputed by the engine; only the interior is grafted, and the
+        run is clamped so the block holding the final prompt token is
+        always recomputed (generation needs its true logits).  Returns
+        None when semantic mode is off or no donor clears the bar.
+        """
+        if self.lsh is None:
+            return None
+        ids = np.asarray(token_ids, np.int32)
+        m = len(ids)
+        bs = self.block
+        last_block = (m - 1) // bs       # must be recomputed -> ungraftable
+        if last_block < self.graft_boundary_blocks + 1:
+            return None                  # no room for any interior
+        best: Optional[GraftPlan] = None
+        qvec = self.embedder.encode(text)
+        for eid, cand in self.lsh.candidates(ids, m).items():
+            if eid not in self.store:
+                continue
+            e = self.store.get(eid, touch=False)
+            agrees = match_mask(ids, e.token_ids[:e.length], bs, cand,
+                                self.graft_min_agree)
+            # only blocks strictly before last_block can be grafted
+            agrees = agrees[:min(len(agrees), last_block)]
+            # longest run of agreeing blocks
+            b = 0
+            while b < len(agrees):
+                if agrees[b] <= 0.0:
+                    b += 1
+                    continue
+                b_end = b
+                while b_end < len(agrees) and agrees[b_end] > 0.0:
+                    b_end += 1
+                n_interior = (b_end - b) - self.graft_boundary_blocks
+                if n_interior >= 1:
+                    mean_agree = float(np.mean(agrees[b:b_end]))
+                    plan = GraftPlan(e, b, b_end,
+                                     self.graft_boundary_blocks, bs,
+                                     0.0, mean_agree)
+                    if (best is None
+                            or plan.interior_tokens
+                            > best.interior_tokens
+                            or (plan.interior_tokens
+                                == best.interior_tokens
+                                and plan.agreement > best.agreement)):
+                        best = plan
+                b = b_end
+        if best is not None:
+            best.similarity = self.index.similarity(best.entry.entry_id,
+                                                    qvec)
+        return best

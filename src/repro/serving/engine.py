@@ -66,6 +66,9 @@ class Engine:
                  compress_host_cache: bool = False,
                  compress_residual: Optional[int] = None,
                  kv_quant: bool = False,
+                 semantic: bool = False,
+                 graft_min_agree: float = 1.0,
+                 graft_boundary_blocks: int = 1,
                  sample_seed: int = 0,
                  rt: Runtime = LOCAL):
         self.cfg = cfg
@@ -77,7 +80,9 @@ class Engine:
         self.recycler = recycler or Recycler(
             embedder=HashEmbedder(), enable_partial=enable_partial,
             block_size=block_size, compress=compress_host_cache,
-            compress_residual=compress_residual)
+            compress_residual=compress_residual, semantic=semantic,
+            graft_min_agree=graft_min_agree,
+            graft_boundary_blocks=graft_boundary_blocks)
         self.block = block_size
         self.max_new = max_new_tokens
         self.window = window

@@ -74,7 +74,7 @@ from repro.core.blockpool import SENTINEL
 from repro.core.kvstore import to_host, tree_bytes
 from repro.core import quant as kvq
 from repro.core.quant import dequantize_vectors_jnp, quantize_vectors_jnp
-from repro.core.recycler import grow_capacity
+from repro.core.recycler import GraftPlan, grow_capacity
 from repro.data.tokenizer import EOS
 from repro.models import (decode_step, init_cache, init_paged_pool,
                           paged_block_bytes, prefill_paged)
@@ -340,6 +340,19 @@ class _PendingAdmission:
     next_c0: int = 0              # next chunk's (block-aligned) start
     w_floor: int = 0              # first pool position the chunks may write
     started: bool = False         # tier lookup + prefix setup done?
+    # semantic block-donor graft state (None/-1 when no graft in flight).
+    # ``segs`` splits the prompt into recompute segments around the
+    # grafted interior: [(0, seg1_end), (graft_end, m)] — the chunks skip
+    # [seg1_end, graft_end) entirely.  ``gate_at`` is the position where
+    # the fidelity gate runs (end of segment 1); ``reg_cap`` caps the L1
+    # trie registration frontier so approximate (grafted / post-graft)
+    # blocks are NEVER indexed under the new prompt's token keys.
+    segs: Optional[List[Tuple[int, int]]] = None
+    seg_i: int = 0
+    gate_at: int = -1
+    reg_cap: int = 1 << 30
+    graft: Optional[GraftPlan] = None
+    graft_ref: Optional[dict] = None  # donor fp boundary K/V (gate ref)
 
 
 class PagedEngine(Engine):
@@ -380,7 +393,8 @@ class PagedEngine(Engine):
                  capacity: int = 256, num_blocks: Optional[int] = None,
                  fp_tail_blocks: int = 2, prefill_mode: str = "chunked",
                  prefill_chunk: Optional[int] = None,
-                 prealloc_watermark: int = 1, **kw):
+                 prealloc_watermark: int = 1,
+                 graft_max_div: float = 0.35, **kw):
         if kw.get("kv_quant"):
             # the int8 tier compresses its host tier by default, with a
             # residual deep enough that a promoted prefix can fill the
@@ -412,6 +426,18 @@ class PagedEngine(Engine):
         if prefill_mode not in ("chunked", "staged"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.prefill_mode = prefill_mode
+        # semantic block-donor recycling (beyond paper; SemShareKV +
+        # KVLink at block granularity): on a prefix miss, graft matching
+        # interior donor blocks and recompute only the boundary.  The
+        # mode rides the chunked admission's segment machinery — the
+        # staged path has no segments, so the combination is rejected
+        # rather than silently ignored.
+        self.semantic = bool(getattr(self.recycler, "semantic", False))
+        self.graft_max_div = graft_max_div
+        self.semantic_gate_divs: List[float] = []
+        if self.semantic and prefill_mode == "staged":
+            raise ValueError("semantic grafting requires "
+                             "prefill_mode='chunked'")
         if prefill_chunk is None:
             # default: 8 blocks per chunk.  Big enough that typical
             # admissions seal in one or two steps (and — for int8 pools —
@@ -477,6 +503,9 @@ class PagedEngine(Engine):
             "layout_conversions": 0,
             "q8_block_promotions": 0, "prefill_chunks": 0,
             "staging_prefills": 0, "spec_preallocs": 0,
+            "semantic_grafts": 0, "semantic_refusals": 0,
+            "semantic_resident_grafts": 0, "semantic_host_grafts": 0,
+            "tokens_grafted": 0,
         })
 
     # ------------------------------------------------------------------
@@ -999,8 +1028,149 @@ class PagedEngine(Engine):
                 self.pool, jnp.int32(slot),
                 self._host_ring_window(host_cache, depth))
 
+        # semantic block-donor grafting: only on a prefix MISS (both
+        # tiers), so the exact/partial paths are byte-identical to
+        # semantic=False engines
+        if self.semantic and st.use_recycling and not hit:
+            plan = self.recycler.lookup_semantic(st.prompt, ids)
+            if plan is not None:
+                self._install_graft(slot, adm, plan)
+
         adm.next_c0 = aligned
         adm.started = True
+
+    # ------------------------------------------------------------------
+    # semantic block-donor grafting
+    # ------------------------------------------------------------------
+    def _install_graft(self, slot: int, adm: _PendingAdmission,
+                       plan: GraftPlan) -> None:
+        """Wire a nominated donor graft into the pending admission: put
+        the donor's interior blocks [interior_lo, interior_hi) into the
+        row's table (refcount++ when the donor chain is device-resident,
+        block-granular fp promotion from the host entry otherwise) and
+        split the prompt into recompute segments around them.  The graft
+        is PROVISIONAL until ``_graft_gate`` accepts it after segment 1's
+        boundary recompute."""
+        st = adm.st
+        bs = self.block
+        e = plan.entry
+        lo, hi = plan.interior_lo, plan.interior_hi
+        # donor fp view: uploads on the host path + the gate's reference
+        host = e.cache
+        if kvq.is_quantized(host):
+            host = kvq.dequantize_tree(host)
+        if not self._host_layout_ok(host):
+            host = self._convert_dense_quant(host)
+            self.stats["layout_conversions"] += 1
+        # resident fast path: the donor's own chain still holds the
+        # interior on device — share it in place, zero copies.  peek, not
+        # lookup: sizing up a donor must not stamp recency
+        d_res, chain = self.trie.peek(e.token_ids[:e.length])
+        if d_res >= plan.graft_end:
+            blocks = [b for b, _ in chain[lo:hi]]
+            for b in blocks:
+                self.allocator.ref(b)
+            self.stats["semantic_resident_grafts"] += 1
+        else:
+            blocks = []
+            moved = 0
+            for j in range(lo, hi):
+                b = self._alloc_block()
+                blk = self._host_block(host, j)
+                moved += sum(int(np.asarray(a).nbytes)
+                             for s in blk.values() for a in s.values())
+                self.pool = self._upload_blk_fn(self.pool, blk,
+                                                jnp.int32(b))
+                blocks.append(b)
+            self.stats["h2d_copies"] += 1
+            self.stats["h2d_bytes"] += moved
+            self.stats["semantic_host_grafts"] += 1
+        for k, b in enumerate(blocks):
+            self._tables[slot][lo + k] = b
+        self._row_blocks[slot] = [int(x) for x in self._tables[slot]
+                                  if x != SENTINEL]
+        self._committed[slot] -= len(blocks)
+        # the gate's reference: the donor's OWN boundary blocks [b0, lo)
+        # in fp — what the recompute would reproduce if the differing
+        # head changed nothing
+        ref = {}
+        for seg, c in host.items():
+            ref[seg] = {n: np.asarray(c[n][:, 0, plan.b0 * bs:lo * bs])
+                        for n in ("k", "v")}
+        adm.graft = plan
+        adm.graft_ref = ref
+        adm.segs = [(0, plan.seg1_end), (plan.graft_end, st.m)]
+        adm.seg_i = 0
+        adm.gate_at = plan.seg1_end
+        adm.reg_cap = plan.seg1_end
+
+    def _graft_gate(self, slot: int, adm: _PendingAdmission) -> None:
+        """Fidelity gate, run when segment 1's chunks reach the graft.
+
+        Measures how far the recomputed boundary block(s) [b0,
+        interior_lo) — token-identical to the donor's but recomputed
+        under the new prompt's real head — diverge from the donor's own
+        K/V at those blocks (mean relative Frobenius error).  Boundary
+        logits cannot see the un-attended interior under causal masking,
+        so the boundary K/V delta is the observable proxy for how much
+        the context difference would have perturbed the grafted region.
+        Divergence <= ``graft_max_div`` accepts the graft (skip to the
+        post-graft segment); otherwise every interior block is
+        dereferenced and the admission falls back to a full contiguous
+        recompute — token-identical to semantic=False."""
+        plan = adm.graft
+        st = adm.st
+        bs = self.block
+        lo, hi = plan.interior_lo, plan.interior_hi
+        bids = [int(self._tables[slot][j]) for j in range(plan.b0, lo)]
+        n = len(bids) * bs
+        got = to_host(self._stage_fn(self.pool,
+                                     jnp.asarray(bids, jnp.int32), n, n))
+        rels = []
+        for seg, ref in adm.graft_ref.items():
+            for name in ("k", "v"):
+                a = np.asarray(got[seg][name][:, 0, :n], np.float32)
+                b = np.asarray(ref[name], np.float32)
+                rels.append(np.linalg.norm(a - b)
+                            / (np.linalg.norm(b) + 1e-9))
+        div = float(np.mean(rels))
+        self.semantic_gate_divs.append(div)
+        if div <= self.graft_max_div:
+            st.depth = plan.interior_tokens
+            st.hit = True
+            st.mode = "semantic_block"
+            st.sim = plan.similarity
+            self.stats["semantic_grafts"] += 1
+            self.stats["tokens_grafted"] += plan.interior_tokens
+            adm.seg_i = 1
+            adm.next_c0 = plan.graft_end
+            if self.kv_quant:
+                # the post-graft chunk reads its last R history blocks
+                # (the grafted interior) through the row's fp ring tail —
+                # reseed it at the graft boundary like a resident hit
+                self.pool = self._seedtail_fn(
+                    self.pool, jnp.int32(slot),
+                    jnp.asarray(self._tables[slot]),
+                    jnp.int32(adm.next_c0))
+        else:
+            for j in range(lo, hi):
+                b = int(self._tables[slot][j])
+                self._tables[slot][j] = SENTINEL
+                self.allocator.unref(b)
+            self._row_blocks[slot] = [int(x) for x in self._tables[slot]
+                                      if x != SENTINEL]
+            self._committed[slot] += hi - lo
+            self.stats["semantic_refusals"] += 1
+            # a refused graft leaves NOTHING approximate in the row:
+            # every remaining position recomputes contiguously, so the
+            # registration cap is lifted and the prompt indexes like any
+            # cold admission
+            adm.graft = None
+            adm.graft_ref = None
+            adm.segs = None
+            adm.seg_i = 0
+            adm.gate_at = -1
+            adm.reg_cap = 1 << 30
 
     def _admission_chunk(self, slot: int) -> None:
         """Advance one pending admission by ONE chunk: allocate the
@@ -1013,7 +1183,11 @@ class PagedEngine(Engine):
         if not adm.started:
             self._begin_admission(slot, adm)
         c0 = adm.next_c0
-        remaining = st.m - c0
+        # a grafted admission chunks per SEGMENT: [0, seg1_end) first,
+        # then — if the gate accepts — [graft_end, m), skipping the
+        # grafted interior entirely
+        seg_end = adm.segs[adm.seg_i][1] if adm.segs else st.m
+        remaining = seg_end - c0
         C = next((s for s in self.chunk_shapes if s >= remaining),
                  self.prefill_chunk)
         n_valid = min(C, remaining)
@@ -1021,8 +1195,12 @@ class PagedEngine(Engine):
             if self._tables[slot][idx] == SENTINEL:
                 b = self._alloc_block()
                 self._tables[slot][idx] = b
-                self._row_blocks[slot].append(b)
                 self._committed[slot] -= 1
+        # rebuild rather than append: a graft installs interior blocks at
+        # HIGHER table indices than the segment being chunked, and the
+        # row_blocks invariant is table order
+        self._row_blocks[slot] = [int(x) for x in self._tables[slot]
+                                  if x != SENTINEL]
         toks = np.zeros((1, C), np.int32)
         toks[0, :n_valid] = st.ids[c0:c0 + n_valid]
         logits, self.pool = self._chunk_fn(
@@ -1032,11 +1210,24 @@ class PagedEngine(Engine):
         self.stats["prefill_chunks"] += 1
         # progressive L1 registration: blocks this chunk sealed become
         # shareable immediately — a neighbor admitted this same step can
-        # compose its table from them at ITS first chunk
-        for b in self.trie.register(st.ids, c0 + n_valid,
-                                    self._row_blocks[slot]):
-            self.allocator.ref(b)
+        # compose its table from them at ITS first chunk.  ``reg_cap``
+        # stops the frontier at the graft: grafted interior and
+        # post-graft blocks are approximate under THIS prompt's keys and
+        # must never serve an exact-prefix lookup
+        reg_len = min(c0 + n_valid, adm.reg_cap)
+        if reg_len > 0:
+            for b in self.trie.register(st.ids, reg_len,
+                                        self._row_blocks[slot]):
+                self.allocator.ref(b)
         adm.next_c0 = c0 + n_valid
+        if adm.segs and adm.seg_i == 0 and adm.next_c0 >= adm.gate_at:
+            # segment 1 reached the graft: run the fidelity gate.  On
+            # accept it advances next_c0 past the interior; on refusal it
+            # clears the segments and the next chunk continues
+            # contiguously from here — either way the admission resumes
+            # at the next engine step
+            self._graft_gate(slot, adm)
+            return
         if adm.next_c0 >= st.m:
             self._finish_admission(slot, logits)
 
@@ -1242,7 +1433,11 @@ class PagedEngine(Engine):
     # ------------------------------------------------------------------
     def _result(self, st: _Slot, *, row: Optional[int] = None, stage=None,
                 cap: Optional[int] = None) -> GenResult:
-        if st.admit:
+        # contamination rule: a grafted row's K/V is approximate for THIS
+        # prompt's tokens (interior from a different context, suffix
+        # computed attending it) — admitting it to the host store would
+        # let future exact-prefix lookups serve approximate caches
+        if st.admit and st.mode != "semantic_block":
             cap = cap or self._capacity(st.m + st.max_new)
             if stage is None:
                 # harvest from the pool: gather the row's prompt blocks

@@ -1,12 +1,15 @@
 """Unit tests for the recycling core: store, index, recycler policies."""
 import os
+import subprocess
+import sys
 import tempfile
 
 import numpy as np
 import pytest
 
-from repro.core import (EmbeddingIndex, HashEmbedder, HostKVStore,
+from repro.core import (BlockLSH, EmbeddingIndex, HashEmbedder, HostKVStore,
                         RadixPrefixCache, Recycler)
+from repro.core.lsh import match_mask
 from repro.core.recycler import (common_prefix_len, grow_capacity,
                                  is_trimmable, trim_to_depth)
 
@@ -40,6 +43,42 @@ class TestEmbedder:
         assert float(base @ ext) > 0.6
         assert float(base @ other) < 0.3
 
+    def test_pinned_embedding_values(self):
+        """Regression for the ``hash(kind)`` seed bug: these constants
+        were generated from the blake2b-seeded embedder and must hold on
+        every machine, process, and PYTHONHASHSEED forever.  The old
+        builtin-hash seeding produced a different vector per process."""
+        from repro.core.embedder import _KIND_SEEDS
+        assert _KIND_SEEDS == {"w": 17069, "b": 23418, "c": 40538,
+                               "r": 6956}
+        v = HashEmbedder(dim=64).encode("hello world")
+        assert np.nonzero(v)[0].tolist() == [13, 18, 23, 26, 38, 48, 49,
+                                             51, 57, 58, 62, 63]
+        assert v[13] == pytest.approx(-0.288675, abs=1e-5)
+        assert v[18] == pytest.approx(0.288675, abs=1e-5)
+
+    def test_stable_across_hash_seeds(self):
+        """Embeddings from subprocesses with DIFFERENT PYTHONHASHSEED
+        values must be bit-identical — the property the store's disk
+        persistence depends on (a reloaded index is useless if every
+        process embeds the same text differently)."""
+        import repro.core.embedder as emb
+        script = (
+            "import importlib.util, hashlib\n"
+            f"spec = importlib.util.spec_from_file_location("
+            f"'emb', {emb.__file__!r})\n"
+            "m = importlib.util.module_from_spec(spec)\n"
+            "spec.loader.exec_module(m)\n"
+            "v = m.HashEmbedder(dim=64).encode('seed stability probe')\n"
+            "print(hashlib.sha256(v.tobytes()).hexdigest())\n")
+        digests = set()
+        for seed in ("0", "1", "424242"):
+            env = {**os.environ, "PYTHONHASHSEED": seed}
+            out = subprocess.run([sys.executable, "-c", script], env=env,
+                                 capture_output=True, text=True, check=True)
+            digests.add(out.stdout.strip())
+        assert len(digests) == 1, digests
+
 
 class TestIndex:
     def test_search_and_remove(self):
@@ -54,6 +93,23 @@ class TestIndex:
         top = idx.search(e.encode("alpha beta"), k=1)
         assert top[0][0] == 2
 
+    def test_duplicate_add_replaces(self):
+        """Re-adding an id must replace its vector — the old append-only
+        behavior left a stale duplicate row that ``remove`` only half
+        deleted and ``similarity`` kept reading."""
+        e = HashEmbedder(dim=32)
+        idx = EmbeddingIndex(32)
+        idx.add(7, e.encode("old text"))
+        idx.add(7, e.encode("new text"))
+        assert len(idx) == 1
+        q = e.encode("new text")
+        assert idx.similarity(7, q) == pytest.approx(1.0, abs=1e-5)
+        assert idx.search(q, k=5) == [(7, pytest.approx(1.0, abs=1e-5))]
+        idx.remove(7)
+        assert len(idx) == 0 and 7 not in idx
+        assert idx.search(q, k=1) == []
+        assert np.isnan(idx.similarity(7, q))
+
 
 class TestStore:
     def test_lru_eviction_budget(self):
@@ -67,6 +123,63 @@ class TestStore:
         assert len(store) == 2
         assert store.total_bytes <= store.max_bytes
         assert store.evictions == 2
+
+    def test_put_enforces_budget_itself(self):
+        """``put`` alone must keep the store under max_bytes — direct
+        store users used to be able to exceed the budget indefinitely
+        because only Recycler.admit ever called evict_to_budget."""
+        cache = _attn_cache()
+        entry_bytes = sum(a.nbytes for seg in cache.values()
+                          for a in seg.values())
+        store = HostKVStore(max_bytes=int(entry_bytes * 2.5))
+        evicted = []
+        store.on_evict = evicted.append
+        ids = [store.put(f"p{i}", np.arange(6), _attn_cache(), 6).entry_id
+               for i in range(5)]
+        assert store.total_bytes <= store.max_bytes
+        assert len(store) == 2
+        # LRU order: the oldest three fell out, each reported on_evict
+        assert evicted == ids[:3]
+        assert ids[3] in store and ids[4] in store
+
+    def test_oversize_entry_refused(self):
+        """An entry bigger than the WHOLE budget is evicted inside put —
+        the store honestly refuses to hold it rather than blowing the
+        budget."""
+        store = HostKVStore(max_bytes=64)
+        e = store.put("big", np.arange(6), _attn_cache(), 6)
+        assert e.entry_id not in store
+        assert len(store) == 0 and store.total_bytes == 0
+
+    def test_byte_accounting_mixed_sequence(self):
+        """total_bytes == sum(entry.nbytes) after any mix of put / get /
+        remove / evict_to_budget (the invariant the budget enforcement
+        rests on)."""
+        cache = _attn_cache()
+        entry_bytes = sum(a.nbytes for seg in cache.values()
+                          for a in seg.values())
+        store = HostKVStore(max_bytes=int(entry_bytes * 3.5))
+
+        def check():
+            assert store.total_bytes == sum(e.nbytes
+                                            for e in store.entries())
+
+        ids = []
+        for i in range(3):
+            ids.append(store.put(f"p{i}", np.arange(4), _attn_cache(),
+                                 4).entry_id)
+            check()
+        store.get(ids[0])                       # LRU touch
+        store.remove(ids[1])
+        check()
+        store.remove(ids[1])                    # double remove: no-op
+        check()
+        for i in range(4):
+            store.put(f"q{i}", np.arange(4), _attn_cache(), 4)
+            check()
+        store.evict_to_budget()
+        check()
+        assert store.total_bytes <= store.max_bytes
 
     def test_disk_roundtrip(self):
         store = HostKVStore()
@@ -212,3 +325,190 @@ class TestRecycler:
         assert e0.entry_id not in r.radix
         res = r.lookup("first prompt zz", np.arange(10))
         assert not res.hit
+
+    def test_prepopulated_store_rebuilds_mirrors(self):
+        """A Recycler built over a pre-populated store (the load_dir
+        reload path) must rebuild the embedding index, radix, and LSH —
+        persisted entries used to be invisible to every retrieval path
+        until the next admit."""
+        r = Recycler(enable_partial=True, block_size=4)
+        toks = np.arange(16)
+        r.admit("reload me please", toks, _attn_cache(filled=16), 16)
+        with tempfile.TemporaryDirectory() as d:
+            r.store.save_dir(d)
+            loaded = HostKVStore.load_dir(d)
+        r2 = Recycler(loaded, enable_partial=True, block_size=4,
+                      semantic=True)
+        # exact-prefix path sees the reloaded entry
+        res = r2.lookup("reload me please and more",
+                        np.concatenate([toks, [20, 21]]))
+        assert res.hit and res.mode == "exact_prefix"
+        assert res.reuse_depth == 16
+        # radix partial path was rebuilt too
+        res2 = r2.lookup("totally different words",
+                         np.asarray([0, 1, 2, 3, 4, 5, 99, 98]))
+        assert res2.hit and res2.mode == "partial_block"
+        assert res2.reuse_depth == 4
+        # ...and the block LSH: interior blocks of the reloaded donor are
+        # graftable for a query that misses both prefix paths
+        q = toks.copy()
+        q[0] = 77                     # break the prefix at token 0
+        plan = r2.lookup_semantic("unrelated head same tail", q)
+        assert plan is not None and plan.entry.text == "reload me please"
+
+    def test_reload_after_budget_eviction_keeps_mirrors_consistent(self):
+        """load_dir enforces the budget; the Recycler's rebuilt mirrors
+        must cover exactly the surviving entries."""
+        cache = _attn_cache()
+        entry_bytes = sum(a.nbytes for seg in cache.values()
+                          for a in seg.values())
+        r = Recycler(enable_partial=True, block_size=4)
+        r.admit("cold entry", np.arange(8), _attn_cache(), 8)
+        kept = r.admit("hot entry", np.arange(50, 58), _attn_cache(), 8)
+        with tempfile.TemporaryDirectory() as d:
+            r.store.save_dir(d)
+            loaded = HostKVStore.load_dir(d,
+                                          max_bytes=int(entry_bytes * 1.5))
+        r2 = Recycler(loaded, enable_partial=True, block_size=4)
+        assert len(r2.index) == len(loaded) == 1
+        assert kept.entry_id in r2.index
+        assert not r2.lookup("cold entry zz", np.arange(10)).hit
+        res = r2.lookup("hot entry zz",
+                        np.concatenate([np.arange(50, 58), [9]]))
+        assert res.hit and res.entry.entry_id == kept.entry_id
+
+
+class TestBlockLSH:
+    def test_identical_blocks_always_collide(self):
+        lsh = BlockLSH(4)
+        lsh.add(1, np.arange(12), 12)
+        cands = lsh.candidates(np.arange(12), 12)
+        assert cands[1] == {0, 1, 2}
+
+    def test_position_aligned(self):
+        """Matching CONTENT at a different block position must not
+        collide — a KV block only stands in at the absolute positions it
+        was computed for."""
+        lsh = BlockLSH(4)
+        lsh.add(1, np.arange(12), 12)
+        shifted = np.arange(4, 16)    # donor's blocks 1,2 at positions 0,1
+        assert lsh.candidates(shifted, 12).get(1, set()) == set()
+
+    def test_partial_tail_block_not_indexed(self):
+        lsh = BlockLSH(4)
+        lsh.add(1, np.arange(10), 10)           # 2 full blocks + 2 tokens
+        assert len(lsh.signatures(np.arange(10), 10)) == 2
+        cands = lsh.candidates(np.arange(12), 12)
+        assert cands[1] == {0, 1}
+
+    def test_remove_and_readd_replaces(self):
+        lsh = BlockLSH(4)
+        a, b = np.arange(8), np.arange(100, 108)
+        lsh.add(1, a, 8)
+        lsh.remove(1)
+        assert 1 not in lsh and lsh.candidates(a, 8) == {}
+        lsh.add(1, a, 8)
+        lsh.add(1, b, 8)              # re-add replaces, no stale buckets
+        assert lsh.candidates(a, 8).get(1, set()) == set()
+        assert lsh.candidates(b, 8)[1] == {0, 1}
+
+    def test_match_mask_agreement_and_gating(self):
+        q = np.arange(8)
+        d = np.arange(8).copy()
+        d[5] = 99                     # block 1 agrees 3/4
+        assert match_mask(q, d, 4, {0, 1}, 1.0) == [1.0, 0.0]
+        assert match_mask(q, d, 4, {0, 1}, 0.7) == [1.0, 0.75]
+        assert match_mask(q, d, 4, {1}, 0.7) == [0.0, 0.75]  # 0 not cand
+
+
+class TestSemanticLookup:
+    def _recycler(self, **kw):
+        kw.setdefault("semantic", True)
+        kw.setdefault("block_size", 4)
+        return Recycler(**kw)
+
+    def test_graft_plan_geometry(self):
+        r = self._recycler()
+        donor = np.arange(20)
+        r.admit("donor prompt", donor, _attn_cache(n_slots=20, filled=20),
+                20)
+        q = donor.copy()
+        q[1] = 99                     # break block 0; blocks 1..4 agree
+        plan = r.lookup_semantic("query prompt", q)
+        assert plan is not None
+        # last block (4, holds the final prompt token) is ungraftable;
+        # the run is blocks [1, 4): boundary block 1 recomputed, interior
+        # blocks [2, 4) grafted
+        assert (plan.b0, plan.b1, plan.boundary) == (1, 4, 1)
+        assert plan.seg1_end == 8 and plan.graft_end == 16
+        assert plan.interior_tokens == 8
+        assert plan.agreement == 1.0
+
+    def test_semantic_off_returns_none(self):
+        r = Recycler(block_size=4)    # semantic left at default False
+        r.admit("donor", np.arange(20), _attn_cache(n_slots=20, filled=20),
+                20)
+        assert r.lsh is None
+        assert r.lookup_semantic("q", np.arange(20)) is None
+
+    def test_too_short_for_interior(self):
+        """With boundary=1 the query needs its final token beyond block 2
+        (recompute boundary + graft >=1 interior + recompute last)."""
+        r = self._recycler()
+        r.admit("donor", np.arange(20), _attn_cache(n_slots=20, filled=20),
+                20)
+        assert r.lookup_semantic("q", np.arange(8)) is None   # last_block 1
+        # 12 tokens with block 0 broken: the agreeing run is a single
+        # block — all boundary, no interior -> no plan
+        q = np.arange(12)
+        q[0] = 55
+        assert r.lookup_semantic("q", q) is None
+
+    def test_longest_run_wins(self):
+        r = self._recycler()
+        short = np.arange(24)
+        long = np.arange(24).copy()
+        long[2] = 77                  # long donor disagrees in block 0
+        r.admit("short run donor", short,
+                _attn_cache(n_slots=24, filled=24), 12)   # covers 3 blocks
+        r.admit("long run donor", long,
+                _attn_cache(n_slots=24, filled=24), 24)
+        q = np.arange(24).copy()
+        q[0] = 55                     # miss both donors' block 0
+        plan = r.lookup_semantic("query", q)
+        # short donor offers blocks [1,3) -> 1 interior block; long donor
+        # offers [1,5) -> 3 interior blocks and must win
+        assert plan is not None and plan.entry.text == "long run donor"
+        assert (plan.b0, plan.b1) == (1, 5)
+        assert plan.interior_tokens == 12
+
+    def test_boundary_blocks_widen_recompute(self):
+        r = self._recycler(graft_boundary_blocks=2)
+        donor = np.arange(24)
+        r.admit("donor", donor, _attn_cache(n_slots=24, filled=24), 24)
+        q = donor.copy()
+        q[1] = 99
+        plan = r.lookup_semantic("query", q)
+        assert plan is not None
+        assert plan.boundary == 2
+        assert plan.seg1_end == plan.b0 * 4 + 8
+        assert plan.interior_tokens >= 4
+
+    def test_min_agree_gates_noisy_blocks(self):
+        r = self._recycler(graft_min_agree=1.0)
+        donor = np.arange(20)
+        r.admit("donor", donor, _attn_cache(n_slots=20, filled=20), 20)
+        q = donor.copy()
+        # noise on block 2's FIRST token: only 1 of 3 shingles is lost,
+        # so the LSH still surfaces the block and min_agree decides
+        q[8] = 99
+        # strict agreement: the run splits at the noisy block, leaving
+        # only blocks [0, 2) graftable (1 interior block)
+        strict = r.lookup_semantic("query", q)
+        assert strict is not None and (strict.b0, strict.b1) == (0, 2)
+        assert strict.agreement == 1.0
+        r2 = self._recycler(graft_min_agree=0.7)
+        r2.admit("donor", donor, _attn_cache(n_slots=20, filled=20), 20)
+        loose = r2.lookup_semantic("query", q)
+        assert loose is not None and (loose.b0, loose.b1) == (0, 4)
+        assert loose.agreement == pytest.approx((1 + 1 + 0.75 + 1) / 4)

@@ -5,6 +5,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.core.index import EmbeddingIndex
+from repro.core.kvstore import HostKVStore
 from repro.core.radix import RadixPrefixCache
 from repro.core.recycler import common_prefix_len, trim_to_depth
 from repro.data.tokenizer import ByteTokenizer
@@ -86,6 +88,79 @@ class TestPrefixProperties:
     def test_tokenizer_deterministic(self, text):
         tok = ByteTokenizer(1024)
         np.testing.assert_array_equal(tok.encode(text), tok.encode(text))
+
+
+class TestIndexInvariants:
+    @given(st.lists(st.tuples(st.sampled_from("ar"), st.integers(0, 7)),
+                    max_size=40))
+    @settings(max_examples=200, deadline=None)
+    def test_one_row_per_id(self, ops):
+        """After any mix of add (including duplicate re-adds) and remove:
+        one row per id, the id->row map is exact, and search/similarity
+        read the LATEST vector for every live id."""
+        dim = 8
+        idx = EmbeddingIndex(dim)
+        live = {}
+        version = 0
+        for op, eid in ops:
+            if op == "a":
+                version += 1
+                v = np.zeros(dim, np.float32)
+                v[eid % dim] = 1.0
+                v[(eid + version) % dim] += 0.5
+                v /= np.linalg.norm(v)
+                idx.add(eid, v)
+                live[eid] = v
+            else:
+                idx.remove(eid)
+                live.pop(eid, None)
+            # structural invariant: len == |_row| == rows of _vecs
+            assert len(idx) == len(idx._row) == idx._vecs.shape[0]
+            assert set(idx.ids()) == set(live)
+            for j, v in live.items():
+                assert idx.similarity(j, v) == pytest.approx(1.0, abs=1e-5)
+        if live:
+            got = dict(idx.search(np.ones(dim, np.float32),
+                                  k=len(live) + 3))
+            assert set(got) == set(live)
+
+
+class TestStoreInvariants:
+    @given(st.lists(st.tuples(st.sampled_from("pgre"), st.integers(0, 5),
+                              st.integers(1, 4)),
+                    max_size=30),
+           st.integers(1, 8))
+    @settings(max_examples=150, deadline=None)
+    def test_byte_accounting(self, ops, budget_blocks):
+        """``total_bytes == sum(e.nbytes)`` and ``total_bytes <=
+        max_bytes`` after any interleaving of put / get / remove /
+        evict_to_budget, with on_evict firing exactly once per budget
+        eviction."""
+        unit = np.zeros(16, np.float32).nbytes   # 64 bytes per size-1 put
+        store = HostKVStore(max_bytes=budget_blocks * unit)
+        evicted = []
+        store.on_evict = evicted.append
+        put_ids = []
+        for op, key, size in ops:
+            if op == "p":
+                cache = {"k": np.zeros(16 * size, np.float32)}
+                put_ids.append(store.put(f"t{key}", np.arange(4), cache,
+                                         4).entry_id)
+            elif op == "g" and put_ids:
+                eid = put_ids[key % len(put_ids)]
+                if eid in store:
+                    store.get(eid)
+            elif op == "r" and put_ids:
+                store.remove(put_ids[key % len(put_ids)])
+            else:
+                store.evict_to_budget()
+            assert store.total_bytes == sum(e.nbytes
+                                            for e in store.entries())
+            assert store.total_bytes <= store.max_bytes
+        # every evicted id is gone, reported once, and was never removed
+        assert len(evicted) == len(set(evicted)) == store.evictions
+        for eid in evicted:
+            assert eid not in store
 
 
 class TestTrimProperty:

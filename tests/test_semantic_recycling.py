@@ -1,0 +1,195 @@
+"""Semantic block-donor recycling (PagedEngine ``semantic=True``): a
+prefix-MISS prompt grafts interior donor blocks and recomputes only the
+boundary; the fidelity gate can refuse the graft, and a refusal — or
+``semantic=False`` — is token-identical to the plain engine.  The mode is
+off by default and must leave the exact/partial/miss paths untouched.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import HostKVStore, Recycler
+from repro.data.tokenizer import EOS
+from repro.models import init_params
+from repro.serving import ContinuousBatchingScheduler, PagedEngine
+
+# 64 shared characters = 8 full blocks at block_size 8; the 7-char head
+# (+BOS) fills exactly one differing block, so donor and query share
+# blocks 1..8 at the SAME positions while sharing no prefix
+HEAD_A = "aaaaaaa"
+HEAD_B = "bbbbbbb"
+MID = "the quick brown fox jumps over the lazy dog again and again!!!!"
+DONOR = HEAD_A + MID
+QUERY = HEAD_B + MID
+
+CACHED = [
+    "the quick brown fox jumps over the lazy dog today",
+    "what is the capital of france and why",
+]
+REQUESTS = [
+    (CACHED[0] + " and tomorrow", "exact_prefix"),
+    ("the quick brown fox jumps over a red fence", "partial_block"),
+    ("zzz qqq completely unrelated 12345", "miss"),
+    (CACHED[1] + " is it paris", "exact_prefix"),
+]
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = get_config("dialogpt-medium").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _paged(stack, *, quant=False, max_new=6, precache=None, **kw):
+    cfg, params = stack
+    kw.setdefault("prefill_mode", "chunked")
+    eng = PagedEngine(cfg, params, max_batch=3, capacity=128,
+                      max_new_tokens=max_new, block_size=8,
+                      enable_partial=True, kv_quant=quant, **kw)
+    if precache:
+        eng.precache(precache)
+    return eng
+
+
+def _run(eng, prompts, **submit_kw):
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [sched.submit(p, **submit_kw) for p in prompts]
+    sched.run()
+    eng.check_invariants()
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: reuse where exact-prefix sees nothing
+# ---------------------------------------------------------------------------
+def test_graft_reuses_where_prefix_paths_report_zero(stack):
+    """Acceptance: the query shares no prefix with the donor (both
+    prefix paths report depth 0) but 6 interior blocks of shared middle
+    are grafted — reuse depth 48 at block_size 8."""
+    plain = _paged(stack, semantic=False)
+    _run(plain, [DONOR], admit=True)
+    r0 = _run(plain, [QUERY])[0].result
+    assert r0.mode == "miss" and r0.reuse_depth == 0
+
+    # model weights are random (reduced test config), so the recomputed
+    # boundary diverges numerically from the donor's — a permissive gate
+    # isolates the graft plumbing from the fidelity policy (tested below)
+    eng = _paged(stack, semantic=True, graft_max_div=1e9)
+    _run(eng, [DONOR], admit=True)     # donor blocks stay trie-resident
+    r = _run(eng, [QUERY])[0].result
+    assert r.cache_hit and r.mode == "semantic_block"
+    # prompt = BOS + 71 chars = 72 tokens = 9 blocks; block 0 (head)
+    # differs, block 8 holds the final token (always recomputed), block 1
+    # is the recomputed boundary -> interior blocks [2, 8) are grafted
+    assert r.reuse_depth == 48
+    assert eng.stats["semantic_grafts"] == 1
+    assert eng.stats["semantic_resident_grafts"] == 1
+    assert eng.stats["tokens_grafted"] == 48
+    assert len(eng.semantic_gate_divs) == 1
+    assert len(r.text) > 0
+
+
+def test_gate_refusal_is_token_identical_to_plain(stack):
+    """graft_max_div=0 refuses every graft; the fallback recompute must
+    be byte-for-byte the semantic=False output (nothing approximate may
+    leak from a refused graft)."""
+    plain = _paged(stack, semantic=False, precache=[DONOR])
+    want = _run(plain, [QUERY])[0].result
+
+    eng = _paged(stack, semantic=True, graft_max_div=0.0,
+                 precache=[DONOR])
+    r = _run(eng, [QUERY])[0].result
+    assert eng.stats["semantic_refusals"] == 1
+    assert eng.stats["semantic_grafts"] == 0
+    assert r.mode == "miss" and not r.cache_hit
+    assert r.text == want.text
+    np.testing.assert_array_equal(r.token_ids, want.token_ids)
+
+
+@pytest.mark.parametrize("quant", [False, True], ids=["fp", "int8"])
+def test_refusal_identity_under_early_eos(stack, quant, monkeypatch):
+    """Refused grafts stay token-identical even when remapped greedy
+    forces early EOS mid-batch, fp and int8."""
+    import repro.serving.engine as engine_mod
+
+    def eos_greedy(logits):
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.where(g % 5 == 1, jnp.int32(EOS), g)
+
+    monkeypatch.setattr(engine_mod, "greedy", eos_greedy)
+    plain = _paged(stack, quant=quant, semantic=False, max_new=8,
+                   precache=[DONOR])
+    wants = _run(plain, [QUERY, REQUESTS[2][0]])
+
+    eng = _paged(stack, quant=quant, semantic=True, graft_max_div=0.0,
+                 max_new=8, precache=[DONOR])
+    got = _run(eng, [QUERY, REQUESTS[2][0]])
+    assert eng.stats["semantic_refusals"] == 1
+    for w, g in zip(wants, got):
+        assert g.result.text == w.result.text
+        np.testing.assert_array_equal(g.result.token_ids,
+                                      w.result.token_ids)
+
+
+def test_int8_graft_accepts_and_decodes(stack):
+    """The graft path works on the int8 pool: verbatim q8 interior
+    movement plus the fp ring-tail reseed at the graft boundary."""
+    eng = _paged(stack, quant=True, semantic=True, graft_max_div=1e9)
+    _run(eng, [DONOR], admit=True)
+    r = _run(eng, [QUERY])[0].result
+    assert r.mode == "semantic_block" and r.reuse_depth == 48
+    assert eng.stats["semantic_grafts"] == 1
+    assert eng.stats["semantic_resident_grafts"] == 1
+    assert len(r.text) > 0
+
+
+# ---------------------------------------------------------------------------
+# the mode must not perturb the existing paths
+# ---------------------------------------------------------------------------
+def test_prefix_paths_unchanged_with_semantic_on(stack):
+    """exact/partial/miss requests behave identically whether semantic
+    mode is on or off — grafting only ever fires on a prefix miss with a
+    qualifying donor."""
+    off = _paged(stack, semantic=False, precache=CACHED)
+    on = _paged(stack, semantic=True, precache=CACHED)
+    roff = _run(off, [p for p, _ in REQUESTS])
+    ron = _run(on, [p for p, _ in REQUESTS])
+    for (p, want), a, b in zip(REQUESTS, roff, ron):
+        assert b.result.mode == a.result.mode, p
+        assert b.result.text == a.result.text, p
+        np.testing.assert_array_equal(b.result.token_ids,
+                                      a.result.token_ids)
+    assert on.stats["semantic_grafts"] == 0
+    assert on.stats["semantic_refusals"] == 0
+
+
+def test_semantic_requires_chunked_prefill(stack):
+    with pytest.raises(ValueError, match="chunked"):
+        _paged(stack, semantic=True, prefill_mode="staged")
+
+
+# ---------------------------------------------------------------------------
+# host-tier graft: donor lives only in the (reloaded) host store
+# ---------------------------------------------------------------------------
+def test_host_graft_from_reloaded_store(stack):
+    """A fresh engine over a store reloaded from disk has an empty
+    device trie, so the donor's interior blocks must be promoted from
+    host block-by-block — and the reload-rebuilt LSH must surface the
+    donor at all."""
+    warm = _paged(stack, semantic=False, precache=[DONOR])
+    with tempfile.TemporaryDirectory() as d:
+        warm.recycler.store.save_dir(d)
+        rec = Recycler(HostKVStore.load_dir(d), enable_partial=True,
+                       block_size=8, semantic=True)
+        eng = _paged(stack, recycler=rec, semantic=True,
+                     graft_max_div=1e9)
+        r = _run(eng, [QUERY])[0].result
+    assert r.mode == "semantic_block" and r.reuse_depth == 48
+    assert eng.stats["semantic_host_grafts"] == 1
+    assert eng.stats["semantic_resident_grafts"] == 0
+    assert eng.stats["h2d_copies"] > 0
