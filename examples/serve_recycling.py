@@ -14,6 +14,9 @@ a prefix reference the same ref-counted device blocks (copy-on-write on
 divergence), warm prefixes are re-admitted with zero host→device copies,
 and the host store acts as an L2 tier behind the device-resident L1 —
 the run reports resident hits, host promotions and device KV bytes in use.
+``--speculative`` decodes the paged pool self-speculatively (sparse-view
+drafter + single-dispatch verify; greedy rows only, token-identical
+output) and reports rounds, acceptance rate and tokens per round.
 """
 import argparse
 import json
@@ -50,10 +53,22 @@ def main():
                          "paged-native chunked prefill (reference "
                          "baseline; compiles one prefill executable per "
                          "distinct suffix length)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="decode the paged pool self-speculatively: the "
+                         "same weights refine --gamma draft guesses by "
+                         "fixed-point sweeps over a pre-gathered sparse "
+                         "sink+recent block view and ONE batched "
+                         "dispatch verifies the bundle — greedy rows "
+                         "only, token-identical output, reports the "
+                         "acceptance stats (implies --paged)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft tokens per speculative round")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
+    if args.speculative:
+        args.paged = True
 
     cfg = get_config("dialogpt-medium")
     if not args.full:
@@ -67,7 +82,9 @@ def main():
                              enable_partial=args.partial, block_size=16,
                              kv_quant=args.int8,
                              prefill_mode=("staged" if args.staged_prefill
-                                           else "chunked"))
+                                           else "chunked"),
+                             speculative=args.speculative,
+                             gamma=args.gamma)
     elif args.continuous:
         engine = BatchedEngine(cfg, params, max_batch=args.batch,
                                capacity=args.capacity,
@@ -125,6 +142,16 @@ def main():
                   f"{engine.stats['spec_preallocs']} speculative block "
                   f"reservations, {engine.prefill_compiles()} compiled "
                   f"prefill executable(s)")
+            if args.speculative:
+                st = engine.stats
+                acc = (st["spec_accepted_tokens"]
+                       / max(st["spec_draft_tokens"], 1))
+                print(f"speculative (gamma={args.gamma}): "
+                      f"{st['spec_rounds']} rounds, "
+                      f"{100 * acc:.0f}% drafts accepted, "
+                      f"{st['spec_emitted_tokens'] / max(st['spec_rounds'], 1):.2f} "
+                      f"tokens/round, {st['spec_fallback_steps']} "
+                      f"fallback steps")
         print("NOTE: per-request latency below spans the whole shared batch "
               "(queue wait included); batching trades it for throughput — "
               "see benchmarks/continuous_batching.py for tokens/s")

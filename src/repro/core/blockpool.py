@@ -118,6 +118,26 @@ class BlockAllocator:
             self.stats["frees"] += 1
         return self._refs[block]
 
+    def unref_many(self, blocks) -> int:
+        """Drop one reference from each block in ``blocks`` — the
+        speculative-rollback primitive: a rejected draft tail's reserved
+        blocks leave their table and return here in one call.  Validity
+        is checked for ALL blocks before any is released, so a bad id
+        (sentinel, dead block) can never strand a partial rollback.
+        Returns how many blocks the call actually freed (refcount hit
+        0)."""
+        blocks = list(blocks)
+        for b in blocks:
+            if b == SENTINEL:
+                raise ValueError("cannot unref the sentinel block")
+            if self._refs[b] <= 0:
+                raise ValueError(f"unref of dead block {b}")
+        freed = 0
+        for b in blocks:
+            if self.unref(b) == 0:
+                freed += 1
+        return freed
+
     # ------------------------------------------------------------------
     def refcount(self, block: int) -> int:
         return self._refs[block]

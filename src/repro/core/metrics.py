@@ -77,6 +77,31 @@ def summarize_runs(baseline: List[RunMetrics], recycled: List[RunMetrics],
     }
 
 
+def tpot_summary(results) -> Dict:
+    """TPOT / TTFT summary over GenResults (anything carrying
+    ``step_times_s`` / ``ttft_s``): p50/p95/mean time-per-output-token
+    plus mean and p95 time-to-first-token — the serving latency pair
+    (TTFT = admission cost, TPOT = decode cadence).  A speculative
+    round's burst is recorded as equal per-token shares of the round's
+    wall time, so accepted drafts show up as LOWER TPOT samples rather
+    than as missing ones."""
+    steps = [t for r in results for t in getattr(r, "step_times_s", [])]
+    ttfts = [r.ttft_s for r in results
+             if getattr(r, "ttft_s", 0.0) > 0.0]
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else float("nan")
+
+    return {
+        "tpot_p50_s": pct(steps, 50),
+        "tpot_p95_s": pct(steps, 95),
+        "tpot_mean_s": float(np.mean(steps)) if steps else float("nan"),
+        "tpot_samples": len(steps),
+        "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+        "ttft_p95_s": pct(ttfts, 95),
+    }
+
+
 class Timer:
     """Wall-clock timer with block_until_ready semantics handled by caller
     (the paper's cuda.synchronize analogue is jax block_until_ready)."""

@@ -17,6 +17,10 @@ from repro.kernels.prefill_attention import (paged_prefill_attention
                                              as _prefill_paged)
 from repro.kernels.prefill_attention import (paged_prefill_attention_quant
                                              as _prefill_paged_quant)
+from repro.kernels.verify_attention import (paged_verify_attention
+                                            as _verify_paged)
+from repro.kernels.verify_attention import (paged_verify_attention_quant
+                                            as _verify_paged_quant)
 from repro.kernels.rwkv6_wkv import rwkv6_wkv as _wkv
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
@@ -103,6 +107,30 @@ def paged_prefill_attention_quant(q, k_chunk, v_chunk, k_pool, v_pool,
     return _prefill_paged_quant(q, k_chunk, v_chunk, k_pool, v_pool,
                                 k_scale, v_scale, k_tail_row, v_tail_row,
                                 table_row, c0, w_eff, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(q, k_chunk, v_chunk, k_pool, v_pool,
+                           block_tables, c0s, *, interpret=True):
+    """Batched speculative-verify attention: every row's (Cv,)-token
+    draft bundle attends history through its scalar-prefetched block
+    table and the bundle itself from the fp operands; c0s (B,) are the
+    per-row bundle starts (armed rows have no write floor)."""
+    return _verify_paged(q, k_chunk, v_chunk, k_pool, v_pool,
+                         block_tables, c0s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention_quant(q, k_chunk, v_chunk, k_pool, v_pool,
+                                 k_scale, v_scale, k_tails, v_tails,
+                                 block_tables, c0s, *, interpret=True):
+    """int8 batched verify with the dequant fused into the table gather;
+    the per-QUERY recency gate reads fp history from each row's
+    pre-round ring snapshot (B, R*bs, Hkv, D) instead of the live
+    (draft-polluted) ring."""
+    return _verify_paged_quant(q, k_chunk, v_chunk, k_pool, v_pool,
+                               k_scale, v_scale, k_tails, v_tails,
+                               block_tables, c0s, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -4,6 +4,9 @@ from repro.models.model import (
     train_loss,
     prefill,
     prefill_paged,
+    verify_paged,
+    draft_view,
+    draft_refine,
     decode_step,
     embed_inputs,
 )
@@ -15,6 +18,9 @@ __all__ = [
     "train_loss",
     "prefill",
     "prefill_paged",
+    "verify_paged",
+    "draft_view",
+    "draft_refine",
     "decode_step",
     "embed_inputs",
     "init_cache",

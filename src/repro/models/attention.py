@@ -435,6 +435,187 @@ def paged_prefill_write(cache, k_new, v_new, row, table_row, start,
     }
 
 
+def paged_verify_write(cache, k_new, v_new, c0s, n_valid, act):
+    """Batched multi-token speculative-verify scatter: row b writes its
+    ``Cv`` new roped K/V at absolute positions [c0s[b], c0s[b] + Cv)
+    through its own DEVICE table row — verification only runs on ARMED
+    rows, whose tables are installed and current, and every block the
+    bundle touches was speculatively reserved for (and is private to)
+    the row before the round, so a rejected tail rolls back as a
+    host-side table truncation.  Draft K/V written during the sparse
+    draft pass are rewritten here with full-context values (the draft's
+    sparse attention changes every layer's inputs, so its K/V are only
+    approximations).  Positions i >= ``n_valid`` and every position of a
+    row with ``act[b] == 0`` (not speculating this round) route to the
+    sentinel block.
+
+    int8 pools dual-write the ring like decode.  The engine enforces
+    ``gamma <= (R-1) * block_size``, so one round's writes span at most
+    R distinct blocks and every valid write's ring slot is live;
+    inactive/padding ring writes are routed out of bounds and dropped."""
+    bs = cache["k"].shape[1]
+    B, Cv = k_new.shape[:2]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    i = jnp.arange(Cv, dtype=jnp.int32)[None]
+    p = c0s.astype(jnp.int32)[:, None] + i               # (B, Cv)
+    valid = (i < n_valid) & (act[:, None] > 0)
+    blk = jnp.where(valid, cache["block_tables"][rows, p // bs], 0)
+    off = p % bs
+    if is_quant_cache(cache):
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        R = cache["k_tail"].shape[1] // bs
+        ring = jnp.where(valid, (p // bs) % R * bs + off, R * bs)
+        return {
+            "k": cache["k"].at[blk, off].set(kq),
+            "v": cache["v"].at[blk, off].set(vq),
+            "k_scale": cache["k_scale"].at[blk, off].set(ks),
+            "v_scale": cache["v_scale"].at[blk, off].set(vs),
+            "k_tail": cache["k_tail"].at[rows, ring].set(k_new,
+                                                         mode="drop"),
+            "v_tail": cache["v_tail"].at[rows, ring].set(v_new,
+                                                         mode="drop"),
+            "block_tables": cache["block_tables"],
+        }
+    return {
+        "k": cache["k"].at[blk, off].set(k_new),
+        "v": cache["v"].at[blk, off].set(v_new),
+        "block_tables": cache["block_tables"],
+    }
+
+
+def attend_paged_verify(q, k_chunk, v_chunk, cache, c0s):
+    """Reference batched verify attention: every row's draft bundle
+    (B, Cv, H, Dh) at absolute positions [c0s[b], c0s[b] + Cv) attends
+    its full HISTORY (< c0) through the row's device block table and the
+    bundle itself from the fresh fp operands (it seals after attention,
+    like chunked prefill).  Bundle padding keys sit at positions
+    >= c0 + n_valid — causally invisible to every valid query — so no
+    n_valid operand exists here.
+
+    int8 pools apply the fp-ring recency gate PER QUERY (query at qp
+    reads history block t at fp iff t > qp//bs - R — exactly the window
+    non-speculative decode would use at position qp) and read fp history
+    from the PRE-ROUND ring snapshot riding the cache as
+    ``k_tail_snap``/``v_tail_snap`` — taken anyway for the exact
+    rollback restore (and equal to the live ring, since drafts never
+    touch the pool); it provably covers every block any verify query
+    gates to fp."""
+    B, Cv, H, Dh = q.shape
+    tbl = cache["block_tables"]                  # (B, NBt)
+    NBt = tbl.shape[1]
+    bs = cache["k"].shape[1]
+    Hkv = k_chunk.shape[2]
+    q_pos = c0s.astype(jnp.int32)[:, None] + jnp.arange(Cv, dtype=jnp.int32)
+    hist_pos = jnp.arange(NBt * bs, dtype=jnp.int32)[None]
+    hist_pos = jnp.where(hist_pos < c0s[:, None], hist_pos, -1)  # (B, Sh)
+    kv_pos = jnp.concatenate([hist_pos, q_pos], axis=1)
+    if not is_quant_cache(cache):
+        k = cache["k"][tbl].reshape(B, NBt * bs, Hkv, Dh)
+        v = cache["v"][tbl].reshape(B, NBt * bs, Hkv, Dh)
+        k = jnp.concatenate([k, k_chunk.astype(k.dtype)], axis=1)
+        v = jnp.concatenate([v, v_chunk.astype(v.dtype)], axis=1)
+        return attend_direct(q, k, v, q_pos, kv_pos, causal=True)
+
+    G = H // Hkv
+    scale = Dh ** -0.5
+    R = cache["k_tail"].shape[1] // bs
+    k8 = dequantize_vectors_jnp(cache["k"][tbl], cache["k_scale"][tbl],
+                                q.dtype).reshape(B, NBt * bs, Hkv, Dh)
+    v8 = dequantize_vectors_jnp(cache["v"][tbl], cache["v_scale"][tbl],
+                                q.dtype).reshape(B, NBt * bs, Hkv, Dh)
+    ti = jnp.arange(NBt, dtype=jnp.int32)
+    ring_k = (cache["k_tail_snap"].reshape(B, R, bs, Hkv, Dh)[:, ti % R]
+              .reshape(B, NBt * bs, Hkv, Dh).astype(q.dtype))
+    ring_v = (cache["v_tail_snap"].reshape(B, R, bs, Hkv, Dh)[:, ti % R]
+              .reshape(B, NBt * bs, Hkv, Dh).astype(q.dtype))
+    k_int = jnp.concatenate([k8, k_chunk.astype(q.dtype)], axis=1)
+    v_int = jnp.concatenate([v8, v_chunk.astype(q.dtype)], axis=1)
+    k_fp = jnp.concatenate([ring_k, k_chunk.astype(q.dtype)], axis=1)
+    v_fp = jnp.concatenate([ring_v, v_chunk.astype(q.dtype)], axis=1)
+    # per-(query, key) recency gate over history; bundle keys collapse to
+    # the same fp operand on both views, so their gate value is moot
+    gate_h = ti[None, None] > (q_pos[:, :, None] // bs) - R  # (B, Cv, NBt)
+    gate_h = jnp.broadcast_to(gate_h[..., None], (B, Cv, NBt, bs))
+    gate = jnp.concatenate(
+        [gate_h.reshape(B, Cv, NBt * bs),
+         jnp.ones((B, Cv, Cv), bool)], axis=-1)      # (B, Cv, Skv)
+    qg = q.reshape(B, Cv, Hkv, G, Dh)
+    s_fp = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_fp,
+                      preferred_element_type=jnp.float32) * scale
+    s_int = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_int,
+                       preferred_element_type=jnp.float32) * scale
+    gate_b = gate[:, None, None]                     # align with bkgqs
+    bias = _mask_bias(q_pos, kv_pos, causal=True, window=0)
+    s = jnp.where(gate_b, s_fp, s_int) + bias[:, None, None]
+    w = jax.nn.softmax(s, axis=-1)
+    gf = gate_b.astype(w.dtype)
+    out = (jnp.einsum("bkgqs,bskd->bqkgd", (w * gf).astype(v_fp.dtype),
+                      v_fp, preferred_element_type=jnp.float32)
+           + jnp.einsum("bkgqs,bskd->bqkgd",
+                        (w * (1.0 - gf)).astype(v_int.dtype), v_int,
+                        preferred_element_type=jnp.float32))
+    return out.reshape(B, Cv, H, Dh).astype(q.dtype)
+
+
+def gather_draft_view(cache, draft_tables, draft_base, pos, dtype):
+    """Pre-gather the sparse self-draft view ONCE per speculative round.
+
+    ``cache`` is a whole pool SEGMENT (leaves carry the stacked layer
+    axis L); ``draft_tables``/``draft_base`` (B, NDt) name each row's
+    sink + recent blocks and their original table indices (-1 = pad).
+    Positions stay truthful because K/V were encoded in place: entry e
+    covers [draft_base[b, e] * bs, ...).  Returns per-layer dense K/V
+    (L, B, NDt*bs, Hkv, Dh) plus shared key positions (B, NDt*bs); view
+    slots at or past the round start ``pos`` (B,) are masked out — they
+    hold stale bits, and the round's own tokens attend each other
+    through the draft scratch instead (``attn_draft_view``).
+
+    This gather is what keeps the draft loop off the big pool: a plain
+    decode step carries the whole pool through the layer scan — a
+    pool-sized slice + copy per layer per token — while the draft pays
+    one gather here and then scans over view + scratch leaves orders of
+    magnitude smaller.
+
+    int8 pools dequantize the gather and overlay the row's fp ring on
+    entries whose base block falls in the decode recency window; the
+    ring is clean at round start because drafts never touch the pool.
+    jnp-only by design: draft K/V are approximations that verification
+    rewrites, so the drafter can never affect output tokens and has no
+    kernel twin to keep in lockstep."""
+    B, NDt = draft_tables.shape
+    L, _, bs, Hkv, Dh = cache["k"].shape
+    p = pos.astype(jnp.int32)
+    base = draft_base.astype(jnp.int32)              # (B, NDt)
+    if is_quant_cache(cache):
+        k = dequantize_vectors_jnp(cache["k"][:, draft_tables],
+                                   cache["k_scale"][:, draft_tables], dtype)
+        v = dequantize_vectors_jnp(cache["v"][:, draft_tables],
+                                   cache["v_scale"][:, draft_tables], dtype)
+        R = cache["k_tail"].shape[2] // bs
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        recent = ((base >= 0) & (base <= (p // bs)[:, None])
+                  & (base > (p // bs)[:, None] - R))  # (B, NDt)
+        ring_k = cache["k_tail"].reshape(
+            L, B, R, bs, Hkv, Dh)[:, rows, base % R]
+        ring_v = cache["v_tail"].reshape(
+            L, B, R, bs, Hkv, Dh)[:, rows, base % R]
+        sel = recent[None, :, :, None, None, None]
+        k = jnp.where(sel, ring_k.astype(dtype), k)
+        v = jnp.where(sel, ring_v.astype(dtype), v)
+    else:
+        k = cache["k"][:, draft_tables]          # (L, B, NDt, bs, Hkv, Dh)
+        v = cache["v"][:, draft_tables]
+    k = k.reshape(L, B, NDt * bs, Hkv, Dh).astype(dtype)
+    v = v.reshape(L, B, NDt * bs, Hkv, Dh).astype(dtype)
+    j = jnp.arange(bs, dtype=jnp.int32)
+    kv_pos = jnp.where(base[:, :, None] >= 0,
+                       base[:, :, None] * bs + j[None, None],
+                       -1).reshape(B, NDt * bs)
+    kv_pos = jnp.where(kv_pos < p[:, None], kv_pos, -1)
+    return k, v, kv_pos
+
+
 def attend_paged_prefill(q, k_chunk, v_chunk, cache, row, table_row, c0,
                          w_eff):
     """Reference chunked-prefill attention: the chunk's queries (1, C, H,
@@ -714,6 +895,54 @@ def _attn_decode_paged(cfg: ModelConfig, p, x, cache, pos, *, window=0,
     return out @ p["wo"], cache
 
 
+def attn_verify(cfg: ModelConfig, p, x, cache, c0s, n_valid, act, *,
+                rt=None):
+    """Speculative-verify sublayer: x (B, Cv, d) is every row's pending
+    token plus its gamma draft tokens at positions [c0s[b], c0s[b] + Cv).
+    The bundle attends full history through the device block tables and
+    itself from its fresh projections, THEN seals K/V into the
+    speculatively reserved blocks (``paged_verify_write``) — the same
+    attend-before-seal order as chunked prefill, so int8 pools see exact
+    fp values for the bundle.  Rows with act == 0 and padding positions
+    scribble the sentinel block."""
+    B, Cv, _ = x.shape
+    c0s = jnp.asarray(c0s, jnp.int32)
+    positions = c0s[:, None] + jnp.arange(Cv, dtype=jnp.int32)
+    q, k, v = project_qkv(cfg, p, x, positions)
+    if rt is not None and rt.use_pallas:
+        out = _pallas_verify_paged(cfg, q, k, v, cache, c0s, rt)
+    else:
+        out = attend_paged_verify(q, k, v, cache, c0s)
+    # the ring snapshot rides the cache only into attention; the written
+    # cache returns to the plain pool structure
+    cache = {kk: vv for kk, vv in cache.items()
+             if kk not in ("k_tail_snap", "v_tail_snap")}
+    cache = paged_verify_write(cache, k, v, c0s, n_valid, act)
+    out = out.reshape(B, Cv, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache
+
+
+def attn_draft_view(cfg: ModelConfig, p, x, cache, qpos, vpos, *, rt=None):
+    """Draft-bundle attention sublayer over a pre-gathered sparse view:
+    x (B, G, d) holds the round's CURRENT draft guesses at positions
+    ``qpos`` (B, G), attending the view (``cache["vk"]/["vv"]`` with key
+    positions ``vpos``) plus the bundle itself from its fresh
+    projections — the verify staircase, minus the pool.  Nothing is
+    read from or written to any persistent cache: every fixed-point
+    sweep recomputes the bundle's K/V from the refined guesses, and
+    verification re-encodes the round's positions with full-context
+    values, so drafts only decide what gets PROPOSED."""
+    positions = qpos.astype(jnp.int32)               # (B, G)
+    q, kn, vn = project_qkv(cfg, p, x, positions)
+    k = jnp.concatenate([cache["vk"], kn], axis=1)
+    v = jnp.concatenate([cache["vv"], vn], axis=1)
+    kv_pos = jnp.concatenate([vpos, positions], axis=1)
+    out = attend_direct(q, k, v, positions, kv_pos, causal=True)
+    out = out.reshape(x.shape[0], x.shape[1],
+                      cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], {}
+
+
 # Cross attention (whisper decoder): no causal mask, static kv from encoder.
 def init_cross_attention(cfg: ModelConfig, key, dtype):
     return init_attention(cfg, key, dtype, cross=True)
@@ -783,6 +1012,19 @@ def _pallas_prefill_paged(cfg, q, k_chunk, v_chunk, cache, row, table_row,
     return ops.paged_prefill_attention(
         q, k_chunk, v_chunk, cache["k"], cache["v"], table_row, c0, w_eff,
         interpret=rt.pallas_interpret)
+
+
+def _pallas_verify_paged(cfg, q, k_chunk, v_chunk, cache, c0s, rt):
+    from repro.kernels import ops
+    if is_quant_cache(cache):
+        return ops.paged_verify_attention_quant(
+            q, k_chunk, v_chunk, cache["k"], cache["v"],
+            cache["k_scale"], cache["v_scale"],
+            cache["k_tail_snap"], cache["v_tail_snap"],
+            cache["block_tables"], c0s, interpret=rt.pallas_interpret)
+    return ops.paged_verify_attention(
+        q, k_chunk, v_chunk, cache["k"], cache["v"],
+        cache["block_tables"], c0s, interpret=rt.pallas_interpret)
 
 
 def _pallas_decode_paged(cfg, q, cache, pos, rt):

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.models import encdec
+from repro.models import attention, encdec
 from repro.models.layers import (chunked_cross_entropy, init_embeddings,
                                  position_embedding, unembed)
 from repro.models.transformer import apply_stack, init_stack
@@ -138,6 +138,87 @@ def prefill_paged(cfg: ModelConfig, params, tokens, pool, row, table_row,
     last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
     logits = unembed(cfg, params, last, rt)[:, 0]
     return logits, pool
+
+
+def verify_paged(cfg: ModelConfig, params, tokens, pool, c0s, n_valid,
+                 act, *, rt: Runtime = LOCAL):
+    """Batched multi-token speculative verification (ONE dispatch for
+    every speculating row).
+
+    ``tokens`` (B, Cv) is each row's pending token followed by its gamma
+    draft tokens, at absolute positions [c0s[b], c0s[b] + Cv); positions
+    i >= ``n_valid`` are padding (Cv is gamma + 1 rounded up to a block
+    multiple).  Rows with ``act[b] == 0`` are not speculating this
+    round: their writes route to the sentinel block and their logits are
+    garbage the engine discards.  K/V seal into speculatively reserved
+    blocks through each row's DEVICE table (verification only runs on
+    armed rows), so a rejected tail is rolled back host-side.
+
+    Returns (per-position logits (B, Cv, V), updated pool) — the
+    all-position logits are what acceptance needs: position j's argmax
+    is the greedy target that draft token j+1 must match, and the last
+    accepted position's argmax is the free bonus token."""
+    B, Cv = tokens.shape
+    x = params["embed"]["wte"][tokens]
+    c0s = jnp.asarray(c0s, jnp.int32)
+    positions = c0s[:, None] + jnp.arange(Cv, dtype=jnp.int32)
+    pe = position_embedding(cfg, params["embed"], positions, x.dtype)
+    if pe is not None:
+        x = x + pe
+    if rt.mesh is not None and rt.batch_axes:
+        x = rt.hint(x, rt.batch_axes, None, None)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    act = jnp.asarray(act, jnp.int32)
+    x, pool, _ = apply_stack(cfg, params, x, mode="verify", cache=pool,
+                             pos=(c0s, n_valid, act), window=0, rt=rt)
+    logits = unembed(cfg, params, x, rt)
+    return logits, pool
+
+
+def draft_view(cfg: ModelConfig, pool, draft_tables, draft_base, pos):
+    """Pre-gather the sparse sink+recent draft view from the paged pool,
+    ONCE per speculative round (see ``attention.gather_draft_view``).
+    Returns ({seg: {"vk", "vv"}} with (L, B, NDt*bs, Hkv, Dh) leaves,
+    shared key positions (B, NDt*bs)) — everything the gamma draft
+    steps read; the pool itself never enters their dispatches."""
+    dt = jnp.dtype(cfg.dtype)
+    view, vpos = {}, None
+    for seg, c in pool.items():
+        vk, vv, vpos = attention.gather_draft_view(c, draft_tables,
+                                                   draft_base, pos, dt)
+        view[seg] = {"vk": vk, "vv": vv}
+    return view, vpos
+
+
+def draft_refine(cfg: ModelConfig, params, tokens, view, vpos, pos, *,
+                 rt: Runtime = LOCAL):
+    """One fixed-point draft sweep: ``tokens`` (B, G) — each row's
+    pending token followed by its first G - 1 draft guesses — run
+    through the model at positions [pos[b], pos[b] + G) IN PARALLEL
+    against the round's pre-gathered sparse view (staircase attention:
+    position j attends the view plus guesses < j from this sweep's own
+    fresh projections).  Returns logits (B, G, V); position j's argmax
+    is the REFINED guess for draft token j + 1.
+
+    This is a Jacobi iteration on the greedy decode recurrence: after k
+    sweeps the first k guesses equal exact sequential greedy decoding
+    over the view, and locally predictable spans converge much faster.
+    Each sweep costs ONE multi-token dispatch — the same economics as
+    verification — where a sequential drafter pays a full per-token
+    dispatch (dominated by per-op overhead at small model sizes, not
+    FLOPs) for every draft token.  The paged pool is not an input:
+    sweeps read only the view and their own projections."""
+    B, G = tokens.shape
+    x = params["embed"]["wte"][tokens]
+    qpos = pos.astype(jnp.int32)[:, None] + jnp.arange(G, dtype=jnp.int32)
+    pe = position_embedding(cfg, params["embed"], qpos, x.dtype)
+    if pe is not None:
+        x = x + pe
+    if rt.mesh is not None and rt.batch_axes:
+        x = rt.hint(x, rt.batch_axes, None, None)
+    x, _, _ = apply_stack(cfg, params, x, mode="draft", cache=view,
+                          pos=(qpos, vpos), window=0, rt=rt)
+    return unembed(cfg, params, x, rt)
 
 
 def decode_step(cfg: ModelConfig, params, token, cache, pos, *,

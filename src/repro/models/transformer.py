@@ -124,6 +124,12 @@ def _mix_attn(cfg, p, x, cache, *, mode, pos, window, rt):
                                    window=window, rt=rt)
     if mode == "decode":
         return attn.attn_decode(cfg, p, x, cache, pos, window=window, rt=rt)
+    if mode == "draft":
+        qpos, vpos = pos
+        return attn.attn_draft_view(cfg, p, x, cache, qpos, vpos, rt=rt)
+    if mode == "verify":
+        c0s, n_valid, act = pos
+        return attn.attn_verify(cfg, p, x, cache, c0s, n_valid, act, rt=rt)
     return attn.attn_prefill(cfg, p, x, start_pos=pos, cache=cache,
                              window=window, rt=rt)
 

@@ -76,8 +76,9 @@ from repro.core import quant as kvq
 from repro.core.quant import dequantize_vectors_jnp, quantize_vectors_jnp
 from repro.core.recycler import GraftPlan, grow_capacity
 from repro.data.tokenizer import EOS
-from repro.models import (decode_step, init_cache, init_paged_pool,
-                          paged_block_bytes, prefill_paged)
+from repro.models import (decode_step, draft_refine, draft_view,
+                          init_cache, init_paged_pool, paged_block_bytes,
+                          prefill_paged, verify_paged)
 from repro.serving import engine as engine_mod
 from repro.serving.engine import Engine, GenResult, _Slot
 from repro.serving.sampling import sample_batched, sample_logits
@@ -312,6 +313,41 @@ def _seed_tail_from_pool(pool, row, table_row, aligned):
     return out
 
 
+def _ring_restore(pool, snap, ps, fbs):
+    """Exact fp-ring rollback after a speculative round (int8 pools).
+
+    Element (r, o) of row b's ring should end the round holding position
+    q_correct = ti(r) * bs + o with ti(r) = fb - ((fb - r) % R) — the
+    newest block <= the accept frontier ``fbs[b]`` congruent to r mod R,
+    exactly what token-by-token decoding through the frontier would have
+    left there.  Elements with q_correct >= ``ps[b]`` (the round's first
+    written position) were rewritten by the verify pass with their exact
+    values and are KEPT; every other element either was never touched
+    (the snapshot equals the live ring) or was clobbered by a rejected
+    write that wrapped onto an older slot, and is restored from the
+    pre-round snapshot — which is exact there, because a slot's correct
+    holder only changes when its position enters [ps, fb*bs + bs), i.e.
+    when q_correct >= ps.  Rows not in the round pass ps = -2**30 (keep
+    everything; their rings were only scribbled at stale positions the
+    recency gates never select, same as every plain decode step)."""
+    out = {}
+    for seg, c in pool.items():
+        bs = c["k"].shape[2]                   # (L, NB, bs, H, D)
+        n = c["k_tail"].shape[2]               # (L, B, R*bs, H, D)
+        R = n // bs
+        idx = jnp.arange(n, dtype=jnp.int32)
+        r, o = idx // bs, idx % bs
+        ti = fbs[:, None] - ((fbs[:, None] - r[None]) % R)
+        qc = ti * bs + o[None]                 # (B, R*bs)
+        keep = (qc >= ps[:, None])[None, :, :, None, None]
+        out[seg] = {**c,
+                    "k_tail": jnp.where(keep, c["k_tail"],
+                                        snap[seg]["k_tail"]),
+                    "v_tail": jnp.where(keep, c["v_tail"],
+                                        snap[seg]["v_tail"])}
+    return out
+
+
 def _set_row(pool, tokens, pos, row, table_row, tok0, m):
     out = {}
     for seg, c in pool.items():
@@ -394,7 +430,10 @@ class PagedEngine(Engine):
                  fp_tail_blocks: int = 2, prefill_mode: str = "chunked",
                  prefill_chunk: Optional[int] = None,
                  prealloc_watermark: int = 1,
-                 graft_max_div: float = 0.35, **kw):
+                 graft_max_div: float = 0.35,
+                 speculative: bool = False, gamma: int = 4,
+                 sink_blocks: int = 1, recent_blocks: int = 3,
+                 spec_iters: int = 2, **kw):
         if kw.get("kv_quant"):
             # the int8 tier compresses its host tier by default, with a
             # residual deep enough that a promoted prefix can fill the
@@ -460,6 +499,40 @@ class PagedEngine(Engine):
         self.chunk_shapes = sorted({s for s in (bs, 2 * bs, prefill_chunk)
                                     if s <= prefill_chunk})
         self.prealloc_watermark = prealloc_watermark
+        # self-speculative decoding (PR 7): the same weights draft gamma
+        # tokens against a sparse sink+recent block view — refined by
+        # ``spec_iters`` fixed-point sweeps, each ONE multi-token
+        # dispatch (see ``_draft_loop``) — then ONE batched multi-token
+        # dispatch verifies the bundle against the full table.  Greedy
+        # rows only — acceptance is longest-prefix match against the
+        # greedy target, which keeps the output token-identical to the
+        # plain step-by-step path.
+        self.speculative = bool(speculative)
+        self.gamma = int(gamma)
+        self.sink_blocks = int(sink_blocks)
+        self.recent_blocks = int(recent_blocks)
+        self.spec_iters = int(spec_iters)
+        if self.speculative:
+            if self.gamma < 1:
+                raise ValueError(f"gamma must be >= 1, got {gamma}")
+            if self.spec_iters < 1:
+                raise ValueError(
+                    f"spec_iters must be >= 1, got {spec_iters}")
+            if self.sink_blocks < 0 or self.recent_blocks < 1:
+                raise ValueError("speculative drafting needs "
+                                 "sink_blocks >= 0 and recent_blocks >= 1")
+            if self.kv_quant and self.gamma > (fp_tail_blocks - 1) * bs:
+                raise ValueError(
+                    f"int8 speculative rollback requires gamma <= "
+                    f"(fp_tail_blocks - 1) * block_size = "
+                    f"{(fp_tail_blocks - 1) * bs}: a round writes ring "
+                    f"positions [p, p + gamma], and the exact restore "
+                    f"needs the pre-round snapshot to still cover every "
+                    f"older block a wrapped write clobbered")
+        # verify bundle width: gamma drafts + the pending token, padded
+        # up to a block multiple (the verify kernel tiles by block)
+        self.spec_cv = _ceil_div(self.gamma + 1, bs) * bs
+        self.spec_ndt = self.sink_blocks + self.recent_blocks
         self._tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self._pos = jnp.zeros((max_batch,), jnp.int32)
         self._slots: List[Optional[_Slot]] = [None] * max_batch
@@ -496,6 +569,17 @@ class PagedEngine(Engine):
         self._settail_fn = jax.jit(_set_row_tail, donate_argnums=(0,))
         self._seedtail_fn = jax.jit(_seed_tail_from_pool,
                                     donate_argnums=(0,))
+        # speculative executables: the whole draft loop is ONE dispatch
+        # (spec_iters unrolled fixed-point sweeps over all gamma
+        # positions), verification another — a round costs two
+        # dispatches regardless of batch size or gamma.  The draft
+        # only READS the pool (one view gather), so nothing is donated
+        self._draft_fn = jax.jit(self._draft_loop)
+        self._verify_fn = jax.jit(self._verify_step, donate_argnums=(2,))
+        # a REAL device copy: the verify dispatch donates the pool, so a
+        # mere reference to the live tails would be invalidated
+        self._snap_fn = jax.jit(lambda t: jax.tree.map(jnp.copy, t))
+        self._ringfix_fn = jax.jit(_ring_restore, donate_argnums=(0,))
         self.stats.update({
             "batched_decode_steps": 0, "admissions": 0, "sampled_steps": 0,
             "resident_hits": 0, "host_promotions": 0, "cow_copies": 0,
@@ -503,6 +587,9 @@ class PagedEngine(Engine):
             "layout_conversions": 0,
             "q8_block_promotions": 0, "prefill_chunks": 0,
             "staging_prefills": 0, "spec_preallocs": 0,
+            "spec_rounds": 0, "spec_draft_tokens": 0,
+            "spec_accepted_tokens": 0, "spec_emitted_tokens": 0,
+            "spec_fallback_steps": 0,
             "semantic_grafts": 0, "semantic_refusals": 0,
             "semantic_resident_grafts": 0, "semantic_host_grafts": 0,
             "tokens_grafted": 0,
@@ -612,6 +699,233 @@ class PagedEngine(Engine):
                        w_floor, n_valid):
         return prefill_paged(self.cfg, params, tokens, pool, row,
                              table_row, c0, w_floor, n_valid, rt=self.rt)
+
+    # ------------------------------------------------------------------
+    # self-speculative decoding (drafter == target; sparse-view draft)
+    # ------------------------------------------------------------------
+    def _draft_loop(self, params, tok0, pool, pos, dtab, dbase):
+        """``gamma`` greedy sparse-view drafts in ONE dispatch: the same
+        weights decode attending only the sink + recent pool blocks
+        named by ``dtab``/``dbase`` (positions stay truthful through the
+        base indices).  The pool is READ-ONLY here — its sparse view is
+        gathered ONCE up front — and the guesses are refined by
+        ``spec_iters`` FIXED-POINT sweeps (``draft_refine``), each a
+        single multi-token forward over all gamma positions, instead of
+        gamma sequential one-token decodes: after k sweeps the first k
+        drafts equal exact sequential greedy over the view, and
+        predictable spans converge much faster, so a whole round costs
+        spec_iters + 1 bundle-sized dispatches.  Drafts write nothing:
+        the verify pass encodes every round position itself, so drafts
+        only ever influence which tokens get PROPOSED, never what the
+        pool ends up holding."""
+        view, vpos = draft_view(self.cfg, pool, dtab, dbase, pos)
+        guess = jnp.tile(tok0, (1, self.gamma))
+        for _ in range(self.spec_iters):
+            toks = jnp.concatenate([tok0, guess[:, :-1]], axis=1)
+            logits = draft_refine(self.cfg, params, toks, view, vpos,
+                                  pos, rt=self.rt)
+            # greedy via the engine module: tests substitute it (early
+            # EOS), and the drafter must propose with the same rule the
+            # verifier accepts by
+            guess = engine_mod.greedy(logits)
+        return guess
+
+    def _verify_step(self, params, tokens, pool, snap, c0s, act):
+        """ONE batched dispatch verifying every armed row's bundle (the
+        pending token + its gamma drafts) against the FULL table,
+        returning the greedy target at every bundle position.  int8
+        pools attend their fp recent window from the pre-round ring
+        SNAPSHOT — taken anyway for the exact rollback restore, and
+        identical to the live ring since drafts stopped touching the
+        pool; the snapshot rides into the layer scan as extra cache
+        leaves and is stripped before the pool comes back."""
+        if snap is not None:
+            pool = {seg: {**c, "k_tail_snap": snap[seg]["k_tail"],
+                          "v_tail_snap": snap[seg]["v_tail"]}
+                    for seg, c in pool.items()}
+        logits, pool = verify_paged(self.cfg, params, tokens, pool, c0s,
+                                    jnp.int32(self.gamma + 1), act,
+                                    rt=self.rt)
+        return engine_mod.greedy(logits), pool
+
+    def _draft_tokens(self, draft):
+        """The draft tokens fed to verification — a patchable seam: the
+        rollback property test substitutes ARBITRARY tokens here, because
+        acceptance must reproduce the non-speculative output whatever the
+        drafter proposed (drafts only affect speed, never tokens)."""
+        return draft
+
+    def _spec_ready(self, active) -> bool:
+        """A speculative round replaces this step iff every active row
+        decodes greedily (acceptance is longest-prefix match against the
+        greedy target), every row's gamma + 1 bundle positions fit its
+        capacity, and the round's reserved blocks are obtainable."""
+        if np.any(self._temp > 0.0):
+            return False
+        bs = self.block
+        need = 0
+        for i in active:
+            st = self._slots[i]
+            p = st.m + len(st.emitted) - 1
+            if p + self.gamma > self.capacity - 1:
+                return False
+            need += sum(1 for idx in range(p // bs,
+                                           (p + self.gamma) // bs + 1)
+                        if self._tables[i, idx] == SENTINEL)
+        return self.allocator.num_free() + self._evictable() >= need
+
+    def _spec_round(self, active):
+        """One speculative round over the armed rows: reserve the
+        bundle's blocks, snapshot the fp ring (int8), draft gamma tokens
+        against the sparse sink+recent view, verify the bundle in one
+        batched full-table dispatch, emit the accepted prefix plus the
+        free bonus token, and roll the rejected tail back (table
+        truncation + refcount release + exact ring restore).  Token-for-
+        token identical to plain greedy steps — the drafts only decide
+        how many of those steps one round buys."""
+        t_round = time.perf_counter()
+        bs = self.block
+        B, g = self.max_batch, self.gamma
+        W = self.nbt + 2 * self.max_batch
+        ps_h: Dict[int, int] = {}
+        reserved: Dict[int, List[Tuple[int, int]]] = {}
+        updates: List[Tuple[int, int, int]] = []
+        for i in active:
+            st = self._slots[i]
+            p = st.m + len(st.emitted) - 1
+            ps_h[i] = p
+            rs = []
+            for idx in range(p // bs, (p + g) // bs + 1):
+                if self._tables[i, idx] == SENTINEL:
+                    b = self._alloc_block()
+                    self._tables[i, idx] = b
+                    self._row_blocks[i].append(b)
+                    self._committed[i] -= 1
+                    updates.append((i, idx, b))
+                    rs.append((idx, b))
+            reserved[i] = rs
+        while updates:
+            self._apply_table_updates(updates[:W])
+            updates = updates[W:]
+
+        snap = None
+        if self.kv_quant:
+            snap = self._snap_fn({seg: {"k_tail": c["k_tail"],
+                                        "v_tail": c["v_tail"]}
+                                  for seg, c in self.pool.items()})
+
+        # sparse draft view: first sink_blocks table entries + the
+        # recent window ending at the round's last reserved block, with
+        # the ORIGINAL table indices alongside so kv positions stay
+        # truthful; -1 bases mark padding
+        dtab = np.zeros((B, self.spec_ndt), np.int32)      # SENTINEL pad
+        dbase = np.full((B, self.spec_ndt), -1, np.int32)
+        pos_h = np.zeros((B,), np.int32)
+        tok0 = np.zeros((B, 1), np.int32)
+        act_h = np.zeros((B,), np.int32)
+        for i in active:
+            p = ps_h[i]
+            hi = (p + g) // bs
+            lo = max(0, hi - self.recent_blocks + 1)
+            idxs = (list(range(min(self.sink_blocks, lo)))
+                    + list(range(lo, hi + 1)))
+            for j, idx in enumerate(idxs):
+                dtab[i, j] = self._tables[i, idx]
+                dbase[i, j] = idx
+            pos_h[i] = p
+            tok0[i, 0] = self._slots[i].emitted[-1]
+            act_h[i] = 1
+
+        dts = self._draft_fn(
+            self.params, jnp.asarray(tok0), self.pool,
+            jnp.asarray(pos_h), jnp.asarray(dtab), jnp.asarray(dbase))
+        draft = self._draft_tokens(np.asarray(dts))
+
+        vt = np.zeros((B, self.spec_cv), np.int32)
+        for i in active:
+            vt[i, 0] = self._slots[i].emitted[-1]
+            vt[i, 1:g + 1] = draft[i]
+        tg, self.pool = self._verify_fn(
+            self.params, jnp.asarray(vt), self.pool, snap,
+            jnp.asarray(pos_h), jnp.asarray(act_h))
+        targets = np.asarray(tg)
+        dt_round = time.perf_counter() - t_round
+
+        done: List[Tuple[int, GenResult]] = []
+        roll_updates: List[Tuple[int, int, int]] = []
+        roll_free: List[int] = []
+        fix_ps = np.full((B,), -(2 ** 30), np.int32)  # default: keep all
+        fix_fbs = np.zeros((B,), np.int32)
+        self.stats["spec_rounds"] += 1
+        self.stats["spec_draft_tokens"] += g * len(active)
+        for i in active:
+            st = self._slots[i]
+            p = ps_h[i]
+            # greedy acceptance: longest prefix of drafts matching the
+            # verifier's targets, then the target at the first mismatch
+            # (or past the last draft) rides along free
+            a = 0
+            while a < g and draft[i, a] == targets[i, a]:
+                a += 1
+            self.stats["spec_accepted_tokens"] += a
+            burst = [int(x) for x in draft[i, :a]] + [int(targets[i, a])]
+            n_emit = 0
+            finished = False
+            for t in burst:
+                st.emitted.append(t)
+                n_emit += 1
+                if ((st.stop_at_eos and t == EOS)
+                        or len(st.emitted) >= st.max_new):
+                    finished = True
+                    break
+            self.stats["spec_emitted_tokens"] += n_emit
+            # honest per-token latency: the round emitted n_emit tokens
+            # in one burst — each records an equal share of the round
+            for _ in range(n_emit):
+                st.step_times_s.append(dt_round / n_emit)
+            if finished:
+                done.append((i, self._result(st, row=i)))
+                self._release_row(i)
+                continue
+            # rollback: reserved blocks past the accept frontier leave
+            # the table and return to the free list; verify's writes at
+            # the kept positions [p, p + a] stay (they are the exact
+            # values plain decode would have written)
+            fb = (p + a) // bs
+            dropped = [(idx, b) for idx, b in reserved[i] if idx > fb]
+            if dropped:
+                for idx, b in dropped:
+                    self._tables[i, idx] = SENTINEL
+                    roll_updates.append((i, idx, SENTINEL))
+                    roll_free.append(b)
+                    self._committed[i] += 1
+                self._row_blocks[i] = [int(x) for x in self._tables[i]
+                                       if x != SENTINEL]
+            fix_ps[i] = p
+            fix_fbs[i] = fb
+        while roll_updates:
+            self._apply_table_updates(roll_updates[:W])
+            roll_updates = roll_updates[W:]
+        if roll_free:
+            self.allocator.unref_many(roll_free)
+        if self.kv_quant:
+            # exact ring restore (see _ring_restore): finished rows keep
+            # their stale rings — the next admission reseeds them before
+            # any query can gate them in
+            self.pool = self._ringfix_fn(self.pool, snap,
+                                         jnp.asarray(fix_ps),
+                                         jnp.asarray(fix_fbs))
+        # rebuild the device token/pos mirrors wholesale: every
+        # surviving row advanced a different number of tokens this round
+        tok_h = np.zeros((B, 1), np.int32)
+        npos_h = np.zeros((B,), np.int32)
+        for i in self.active_slots():
+            st = self._slots[i]
+            tok_h[i, 0] = st.emitted[-1]
+            npos_h[i] = st.m + len(st.emitted) - 1
+        self._tokens = jnp.asarray(tok_h)
+        self._pos = jnp.asarray(npos_h)
+        return done
 
     def prefill_compiles(self) -> int:
         """How many prefill executables the admission path has compiled.
@@ -1369,6 +1683,13 @@ class PagedEngine(Engine):
         active = self.active_slots()
         if not active:
             return done
+        if self.speculative:
+            if self._spec_ready(active):
+                done.extend(self._spec_round(active))
+                return done
+            # sampled rows in the batch, bundle past capacity, or blocks
+            # unobtainable: fall back to the plain step for this round
+            self.stats["spec_fallback_steps"] += 1
         bs = self.block
         updates: List[Tuple[int, int, int]] = []
         for i in active:
@@ -1394,6 +1715,7 @@ class PagedEngine(Engine):
         if updates:
             self._apply_table_updates(updates)
 
+        t_step = time.perf_counter()
         if np.any(self._temp > 0.0):
             self._step_rng, sub = jax.random.split(self._step_rng)
             self.stats["sampled_steps"] += 1
@@ -1405,10 +1727,12 @@ class PagedEngine(Engine):
             nxt, self._tokens, self.pool, self._pos = self._pstep_fn(
                 self.params, self._tokens, self.pool, self._pos)
         toks = np.asarray(nxt)
+        dt_step = time.perf_counter() - t_step
         self.stats["batched_decode_steps"] += 1
         for i in active:
             st = self._slots[i]
             st.emitted.append(int(toks[i]))
+            st.step_times_s.append(dt_step)
             if ((st.stop_at_eos and st.emitted[-1] == EOS)
                     or len(st.emitted) >= st.max_new):
                 done.append((i, self._result(st, row=i)))
@@ -1464,6 +1788,7 @@ class PagedEngine(Engine):
             mode=st.mode if st.use_recycling else "baseline",
             prompt_similarity=st.sim,
             ttft_s=max(st.t_first - st.t0, 0.0),
+            step_times_s=list(st.step_times_s),
         )
 
     # ------------------------------------------------------------------
@@ -1473,7 +1798,12 @@ class PagedEngine(Engine):
           * every block's refcount equals (#tables naming it) + (1 if the
             L1 trie indexes it) — so a block in two tables is provably
             shared, and no freed block is reachable
-          * table entries beyond a row's blocks are sentinel"""
+          * table entries beyond a row's blocks are sentinel
+          * an armed (decoding) row's table names a CONTIGUOUS prefix
+            whose frontier never runs past the row's write position by
+            more than the one-block watermark prealloc — after a
+            speculative round this is exactly the post-rollback bound
+            (the accept frontier's block, plus at most the prealloc)"""
         self.allocator.check()
         expected: Dict[int, int] = {}
         for i in range(self.max_batch):
@@ -1487,3 +1817,16 @@ class PagedEngine(Engine):
         for b in range(1, self.allocator.num_blocks):
             assert self.allocator.refcount(b) == expected.get(b, 0), \
                 (b, self.allocator.refcount(b), expected.get(b, 0))
+        for i in range(self.max_batch):
+            st = self._slots[i]
+            if st is None:
+                continue    # pending admissions may hold grafted
+                            # interior blocks at non-contiguous indices
+            named_idx = [j for j in range(self.nbt)
+                         if self._tables[i, j] != SENTINEL]
+            assert named_idx == list(range(len(named_idx))), \
+                (i, named_idx)
+            if named_idx:
+                p = st.m + len(st.emitted) - 1
+                assert named_idx[-1] <= p // self.block + 1, \
+                    (i, named_idx[-1], p, self.block)

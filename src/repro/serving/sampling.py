@@ -43,6 +43,12 @@ def sample_batched(logits, rng, *, temperature=0.0, top_k=0,
     k > top_k_cap is clamped to the cap."""
     if isinstance(temperature, (int, float)) and temperature <= 0.0:
         return greedy(logits)                # static shortcut: trace-safe
+    if not isinstance(temperature, jax.core.Tracer):
+        # concrete all-greedy batch (every row at temperature 0): plain
+        # batched argmax — no rng split, no per-row dynamic top-k sort.
+        # Tracer-guarded so the check never forces a value inside jit.
+        if not bool(jnp.any(jnp.asarray(temperature) > 0.0)):
+            return greedy(logits)
     temperature = jnp.asarray(temperature, jnp.float32)
     t = jnp.broadcast_to(temperature, (logits.shape[0],))
     scaled = logits / jnp.maximum(t, 1e-6)[:, None]
