@@ -63,28 +63,49 @@ def main():
                          "acceptance stats (implies --paged)")
     ap.add_argument("--gamma", type=int, default=4,
                     help="draft tokens per speculative round")
+    ap.add_argument("--mesh", nargs=2, type=int, metavar=("D", "T"),
+                    help="serve the recycled pass on D data-parallel "
+                         "paged-engine replicas, each with a T-way "
+                         "tensor-parallel (KV-head-sharded) block pool, "
+                         "sharing one host L2 with prefix-affinity "
+                         "routing (implies --paged; needs D*T devices — "
+                         "on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=<D*T> "
+                         "before launching)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
     if args.speculative:
         args.paged = True
+    if args.mesh:
+        args.paged = True
 
     cfg = get_config("dialogpt-medium")
     if not args.full:
         cfg = cfg.reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
+    server = None
     if args.paged:
         args.continuous = True
-        engine = PagedEngine(cfg, params, max_batch=args.batch,
-                             capacity=args.capacity,
-                             max_new_tokens=args.max_new,
-                             enable_partial=args.partial, block_size=16,
-                             kv_quant=args.int8,
-                             prefill_mode=("staged" if args.staged_prefill
-                                           else "chunked"),
-                             speculative=args.speculative,
-                             gamma=args.gamma)
+        paged_kw = dict(max_batch=args.batch, capacity=args.capacity,
+                        max_new_tokens=args.max_new,
+                        enable_partial=args.partial, block_size=16,
+                        kv_quant=args.int8,
+                        prefill_mode=("staged" if args.staged_prefill
+                                      else "chunked"),
+                        speculative=args.speculative, gamma=args.gamma)
+        if args.mesh:
+            from repro.launch.serve import ShardedServer
+            dp, tp = args.mesh
+            server = ShardedServer(cfg, params, replicas=dp, tp=tp,
+                                   **paged_kw)
+            # the serial baseline pass and precache run on replica 0;
+            # its recycler IS the shared L2, so every replica sees the
+            # precached prefixes
+            engine = server.engines[0]
+        else:
+            engine = PagedEngine(cfg, params, **paged_kw)
     elif args.continuous:
         engine = BatchedEngine(cfg, params, max_batch=args.batch,
                                capacity=args.capacity,
@@ -112,7 +133,29 @@ def main():
     # clear() below would otherwise empty out from under us
     baseline_reqs = list(sched.run())
     sched.completed.clear()
-    if args.continuous:
+    if server is not None:
+        from types import SimpleNamespace
+        server.run(test_prompts)             # untimed: compiles every replica
+        results = server.run(test_prompts, admit=True)   # residency-routed
+        recycled_reqs = [SimpleNamespace(prompt=p,
+                                         result=(None if isinstance(r, str)
+                                                 else r),
+                                         error=(r if isinstance(r, str)
+                                                else None))
+                         for p, r in zip(test_prompts, results)]
+        st = server.stats()
+        print(f"sharded serving: {st['replicas']} replica(s), "
+              f"{st['cross_replica_promotions']} cross-replica "
+              f"promotion(s), {st['host_entries']} shared-L2 entries "
+              f"({st['host_bytes']/1e6:.1f} MB)")
+        for i, pr in enumerate(st["per_replica"]):
+            print(f"  replica {i}: tp={pr['kv_tp_degree']}, "
+                  f"{pr['stats']['resident_hits']} L1 hits, "
+                  f"{pr['stats']['host_promotions']} L2 promotions, "
+                  f"{pr['device_kv_bytes_per_device']/1e6:.2f} MB KV "
+                  f"per device")
+        server.check_invariants()
+    elif args.continuous:
         csched = ContinuousBatchingScheduler(engine)
         # full untimed pass (admit=False): compiles the pool decode step AND
         # every per-suffix-length prefill the timed pass will dispatch

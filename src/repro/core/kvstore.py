@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -120,6 +121,13 @@ class HostKVStore:
         # explicit remove()); lets index mirrors stay consistent even when
         # eviction fires inside put()
         self.on_evict: Optional[Callable[[int], None]] = None
+        # The store is the SHARED L2 of the mesh-sharded server: N engine
+        # replicas admit/promote through one instance from their own
+        # threads.  This reentrant lock makes each mutation (put + its
+        # budget eviction, touching get, remove) atomic; cross-structure
+        # consistency with the recycler's retrieval mirrors is the
+        # caller's job (ShardedServer serializes whole recycler ops).
+        self.lock = threading.RLock()
 
     def __len__(self):
         return len(self._entries)
@@ -138,52 +146,56 @@ class HostKVStore:
     def put(self, text: str, token_ids, cache, length: int,
             capacity: Optional[int] = None) -> CacheEntry:
         token_ids = np.asarray(token_ids, np.int32)
-        entry = CacheEntry(self._next_id, text, token_ids, cache,
-                           int(length), int(capacity or length))
-        self._next_id += 1
-        self._entries[entry.entry_id] = entry
-        self.total_bytes += entry.nbytes
-        # enforce the byte budget HERE, not just in Recycler.admit — the
-        # new entry is MRU, so it is evicted only if it alone exceeds the
-        # whole budget (in which case the store honestly refuses to hold
-        # it rather than blowing the budget)
-        self.evict_to_budget()
-        return entry
+        with self.lock:
+            entry = CacheEntry(self._next_id, text, token_ids, cache,
+                               int(length), int(capacity or length))
+            self._next_id += 1
+            self._entries[entry.entry_id] = entry
+            self.total_bytes += entry.nbytes
+            # enforce the byte budget HERE, not just in Recycler.admit —
+            # the new entry is MRU, so it is evicted only if it alone
+            # exceeds the whole budget (in which case the store honestly
+            # refuses to hold it rather than blowing the budget)
+            self.evict_to_budget()
+            return entry
 
     def get(self, entry_id: int, *, touch: bool = True) -> CacheEntry:
         """``touch=True`` marks a *served hit*: LRU order moves, and the
         entry's tier accounting (hits / last_hit) is stamped.  Peeking
         candidates during retrieval uses touch=False and only counts as a
         peek, so hits / (hits + peeks-that-missed) stays meaningful."""
-        e = self._entries[entry_id]
-        if touch:
-            self._entries.move_to_end(entry_id)
-            self._clock += 1
-            e.hits += 1
-            e.last_hit = self._clock
-            self.stats["hits"] += 1
-        else:
-            self.stats["peeks"] += 1
-        return e
+        with self.lock:
+            e = self._entries[entry_id]
+            if touch:
+                self._entries.move_to_end(entry_id)
+                self._clock += 1
+                e.hits += 1
+                e.last_hit = self._clock
+                self.stats["hits"] += 1
+            else:
+                self.stats["peeks"] += 1
+            return e
 
     def remove(self, entry_id: int) -> None:
-        e = self._entries.pop(entry_id, None)
-        if e is not None:
-            self.total_bytes -= e.nbytes
+        with self.lock:
+            e = self._entries.pop(entry_id, None)
+            if e is not None:
+                self.total_bytes -= e.nbytes
 
     def evict_to_budget(self) -> List[int]:
         """Evict LRU entries until under max_bytes; returns evicted ids."""
-        evicted = []
-        if self.max_bytes is None:
+        with self.lock:
+            evicted = []
+            if self.max_bytes is None:
+                return evicted
+            while self.total_bytes > self.max_bytes and self._entries:
+                eid, e = self._entries.popitem(last=False)
+                self.total_bytes -= e.nbytes
+                self.evictions += 1
+                evicted.append(eid)
+                if self.on_evict is not None:
+                    self.on_evict(eid)
             return evicted
-        while self.total_bytes > self.max_bytes and self._entries:
-            eid, e = self._entries.popitem(last=False)
-            self.total_bytes -= e.nbytes
-            self.evictions += 1
-            evicted.append(eid)
-            if self.on_evict is not None:
-                self.on_evict(eid)
-        return evicted
 
     # ---- disk ----------------------------------------------------------
     def save_dir(self, path: str) -> None:

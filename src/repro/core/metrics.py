@@ -84,20 +84,28 @@ def tpot_summary(results) -> Dict:
     (TTFT = admission cost, TPOT = decode cadence).  A speculative
     round's burst is recorded as equal per-token shares of the round's
     wall time, so accepted drafts show up as LOWER TPOT samples rather
-    than as missing ones."""
-    steps = [t for r in results for t in getattr(r, "step_times_s", [])]
-    ttfts = [r.ttft_s for r in results
-             if getattr(r, "ttft_s", 0.0) > 0.0]
+    than as missing ones.
+
+    Degenerate inputs are well-defined instead of raising or emitting
+    NaN (``json.dump`` writes NaN as invalid JSON): results whose
+    ``step_times_s`` / ``ttft_s`` is absent or None contribute no
+    samples; with no samples the corresponding fields are None and
+    ``tpot_samples`` is 0; with a single sample every percentile is
+    that sample."""
+    steps = [t for r in results
+             for t in (getattr(r, "step_times_s", None) or [])]
+    ttfts = [t for t in (getattr(r, "ttft_s", None) for r in results)
+             if t is not None and t > 0.0]
 
     def pct(xs, q):
-        return float(np.percentile(xs, q)) if xs else float("nan")
+        return float(np.percentile(xs, q)) if xs else None
 
     return {
         "tpot_p50_s": pct(steps, 50),
         "tpot_p95_s": pct(steps, 95),
-        "tpot_mean_s": float(np.mean(steps)) if steps else float("nan"),
+        "tpot_mean_s": float(np.mean(steps)) if steps else None,
         "tpot_samples": len(steps),
-        "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+        "ttft_mean_s": float(np.mean(ttfts)) if ttfts else None,
         "ttft_p95_s": pct(ttfts, 95),
     }
 

@@ -28,6 +28,26 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def check_shard_view(H: int, Hkv: int) -> None:
+    """Guard the q-heads / kv-heads pairing at kernel entry.
+
+    The paged kernels derive every head count from operand shapes, so
+    under a tensor-parallel ``shard_map`` they transparently run on the
+    shard-LOCAL view (H/tp query heads against an Hkv/tp pool) — both
+    operands must come from the SAME shard.  Mixing views (a head-sharded
+    q against an unsharded pool, or vice versa) breaks the grouped
+    reshape; for MHA-ratio pools that surfaces here as a non-divisible
+    head pair instead of as a silently wrong grouping downstream.  A GQA
+    mismatch whose wrong ratio still divides passes this check — the
+    token-identity suites are the real gate."""
+    if Hkv <= 0 or H % Hkv:
+        raise ValueError(
+            f"query heads ({H}) not a multiple of kv heads ({Hkv}); "
+            "under shard_map both operands must be the same shard's "
+            "local view — mixing a head-sharded tensor with an "
+            "unsharded one produces exactly this mismatch")
+
+
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, scale, window, bk, nk):
     ki = pl.program_id(1)
@@ -207,6 +227,7 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *,
     B, _, H, D = q.shape
     bs, Hkv = k_pool.shape[1], k_pool.shape[2]
     NBt = block_tables.shape[1]
+    check_shard_view(H, Hkv)
     G = H // Hkv
     scale = scale or D ** -0.5
 
@@ -284,6 +305,7 @@ def paged_decode_attention_quant(q, k_pool, v_pool, k_scale, v_scale,
     bs, Hkv = k_pool.shape[1], k_pool.shape[2]
     NBt = block_tables.shape[1]
     R = k_tail.shape[1] // bs
+    check_shard_view(H, Hkv)
     G = H // Hkv
     scale = scale or D ** -0.5
 

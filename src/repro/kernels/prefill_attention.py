@@ -43,6 +43,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.decode_attention import check_shard_view
+
 NEG_INF = -1e30
 
 
@@ -135,6 +137,7 @@ def paged_prefill_attention(q, k_chunk, v_chunk, k_pool, v_pool, table_row,
     bs, Hkv = k_pool.shape[1], k_pool.shape[2]
     NBt = table_row.shape[0]
     CB = C // bs
+    check_shard_view(H, Hkv)
     G = H // Hkv
     scale = scale or D ** -0.5
 
@@ -228,6 +231,7 @@ def paged_prefill_attention_quant(q, k_chunk, v_chunk, k_pool, v_pool,
     NBt = table_row.shape[0]
     CB = C // bs
     R = k_tail_row.shape[0] // bs
+    check_shard_view(H, Hkv)
     G = H // Hkv
     scale = scale or D ** -0.5
 

@@ -43,6 +43,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.decode_attention import check_shard_view
+
 NEG_INF = -1e30
 
 
@@ -136,6 +138,7 @@ def paged_verify_attention(q, k_chunk, v_chunk, k_pool, v_pool,
     bs, Hkv = k_pool.shape[1], k_pool.shape[2]
     NBt = block_tables.shape[1]
     CB = Cv // bs
+    check_shard_view(H, Hkv)
     G = H // Hkv
     scale = scale or D ** -0.5
 
@@ -240,6 +243,7 @@ def paged_verify_attention_quant(q, k_chunk, v_chunk, k_pool, v_pool,
     NBt = block_tables.shape[1]
     CB = Cv // bs
     R = k_tails.shape[1] // bs
+    check_shard_view(H, Hkv)
     G = H // Hkv
     scale = scale or D ** -0.5
 

@@ -35,6 +35,7 @@ from repro.models.cache import cache_struct
 from repro.roofline import (RooflineTerms, model_flops, max_scan_trip,
                             parse_collective_bytes)
 from repro.sharding import (batch_shardings, cache_shardings,
+                            clear_fallback_log, fallback_log,
                             param_shardings, runtime_for)
 from repro.training.optimizer import AdamWState, adamw_update, cosine_lr
 
@@ -147,6 +148,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "recycled": recycled, "chips": mesh.size, "ok": False}
+    clear_fallback_log()
     try:
         fn, args, in_sh, out_sh, donate = build_step(
             cfg, shape, mesh, rt, recycled=recycled, suffix_frac=suffix_frac,
@@ -208,6 +210,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["ok"] = True
     except Exception:
         rec["error"] = traceback.format_exc()[-4000:]
+    # which leaves the divisibility rules refused to shard (replication
+    # fallbacks) for THIS build — populated by the sharding-rule calls
+    # above, recorded even on failure so a surprise replication blowing
+    # the memory budget is visible in the artifact
+    rec["sharding_fallbacks"] = fallback_log()
     rec["total_s"] = round(time.time() - t0, 1)
 
     import os as _os
@@ -215,7 +222,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     with open(f"{out_dir}/{tag}.json", "w") as f:
         json.dump(rec, f, indent=1)
     status = "OK " if rec["ok"] else "FAIL"
-    print(f"[{status}] {tag}  ({rec['total_s']}s)", flush=True)
+    fb = (f"  [{len(rec['sharding_fallbacks'])} sharding fallback(s)]"
+          if rec["sharding_fallbacks"] else "")
+    print(f"[{status}] {tag}  ({rec['total_s']}s){fb}", flush=True)
     if not rec["ok"]:
         print(rec["error"].splitlines()[-1], flush=True)
     return rec

@@ -18,6 +18,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def serving_meshes(replicas: int, tp: int, devices=None):
+    """Per-replica (data=1, model=tp) sub-meshes for the mesh-sharded
+    paged server: replica r owns devices [r*tp, (r+1)*tp) and its engine
+    never communicates with another replica's devices (data parallelism
+    is N independent engines over a shared host L2, not a batch axis).
+
+    Smoke/CI runs get their devices from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax import, like the dry-run)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    need = replicas * tp
+    if len(devices) < need:
+        raise ValueError(
+            f"mesh {replicas}x{tp} needs {need} devices, have "
+            f"{len(devices)} (forced host devices require XLA_FLAGS "
+            f"before jax import)")
+    return [Mesh(np.array(devices[r * tp:(r + 1) * tp]).reshape(1, tp),
+                 ("data", "model")) for r in range(replicas)]
+
+
 # TPU v5e hardware constants (per chip) for the roofline terms.
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

@@ -16,13 +16,14 @@ to a ring of that size; SSM/hybrid archs carry O(1)/windowed state natively.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, InputShape
-from repro.models.cache import cache_struct
+from repro.models.cache import cache_struct, init_paged_pool
 
 
 def sds(shape, dtype):
@@ -70,3 +71,19 @@ def input_specs(cfg: ModelConfig, shape: InputShape, *,
                               kv_quant=kv_quant),
         "pos": sds((), jnp.int32),
     }
+
+
+def paged_pool_struct(cfg: ModelConfig, num_blocks: int, block_size: int,
+                      max_batch: int, max_blocks_per_seq: int, *,
+                      dtype=None, kv_quant: bool = False,
+                      fp_tail_blocks: int = 2):
+    """ShapeDtypeStruct pytree of a paged block pool — ``cache_struct``'s
+    serving analogue, zero device allocation.  Feed it to
+    ``sharding.paged_pool_shardings`` to audit mesh placement (which
+    leaves land head-sharded on 'model', which fall back to replication
+    — the fallbacks that would silently multiply the KV memory budget)
+    before committing pool memory."""
+    fn = functools.partial(init_paged_pool, cfg, num_blocks, block_size,
+                           max_batch, max_blocks_per_seq, dtype=dtype,
+                           quant=kv_quant, fp_tail_blocks=fp_tail_blocks)
+    return jax.eval_shape(fn)

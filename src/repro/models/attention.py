@@ -812,6 +812,10 @@ def _attn_prefill_paged(cfg: ModelConfig, p, x, cache, row, table_row, c0,
     positions = c0 + jnp.arange(C, dtype=jnp.int32)
     q, k, v = project_qkv(cfg, p, x, positions)
     w_eff = jnp.maximum(w_floor, c0)
+    ax = paged_tp_axis(rt, cache)
+    if ax is not None:
+        return _tp_prefill_paged(cfg, p, q, k, v, cache, row, table_row,
+                                 c0, w_eff, w_floor, n_valid, rt, ax)
     if rt is not None and rt.use_pallas:
         out = _pallas_prefill_paged(cfg, q, k, v, cache, row, table_row,
                                     c0, w_eff, rt)
@@ -886,6 +890,9 @@ def _attn_decode_paged(cfg: ModelConfig, p, x, cache, pos, *, window=0,
                                   "windowed decode stays on the slot pool")
     positions = pos.astype(jnp.int32)[:, None]          # (B, 1)
     q, k, v = project_qkv(cfg, p, x, positions)
+    ax = paged_tp_axis(rt, cache)
+    if ax is not None:
+        return _tp_decode_paged(cfg, p, q, k, v, cache, pos, rt, ax)
     cache = paged_cache_write(cache, k, v, pos)
     if rt is not None and rt.use_pallas:
         out = _pallas_decode_paged(cfg, q, cache, pos, rt)
@@ -909,6 +916,10 @@ def attn_verify(cfg: ModelConfig, p, x, cache, c0s, n_valid, act, *,
     c0s = jnp.asarray(c0s, jnp.int32)
     positions = c0s[:, None] + jnp.arange(Cv, dtype=jnp.int32)
     q, k, v = project_qkv(cfg, p, x, positions)
+    ax = paged_tp_axis(rt, cache)
+    if ax is not None:
+        return _tp_verify_paged(cfg, p, q, k, v, cache, c0s, n_valid, act,
+                                rt, ax)
     if rt is not None and rt.use_pallas:
         out = _pallas_verify_paged(cfg, q, k, v, cache, c0s, rt)
     else:
@@ -1037,3 +1048,130 @@ def _pallas_decode_paged(cfg, q, cache, pos, rt):
     return ops.paged_decode_attention(
         q, cache["k"], cache["v"], cache["block_tables"], pos,
         interpret=rt.pallas_interpret)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel paged dispatch (PR 8): the decode/prefill/verify paged
+# sublayers run under shard_map with the KV-head axis split over 'model'.
+#
+# Head-split softmax is shard-local — every head's statistics live entirely
+# on the shard that owns it, so each shard runs the SAME attend code (jnp
+# reference or Pallas kernel) on its local (Hkv/tp)-head view of the pool;
+# the cross-'model' reduction is the output projection: each shard holds
+# the wo rows of its own heads, computes a partial (B, S, d) product, and
+# a psum across 'model' assembles the full sublayer output.  Block tables
+# and scalars stay replicated, so the scalar-prefetch gather and the pool
+# writes are untouched — the allocator never knows the pool is sharded.
+# ---------------------------------------------------------------------------
+def paged_tp_axis(rt, cache):
+    """The mesh axis splitting paged KV heads, or None (replication
+    fallback — same ``kv_heads % tp`` rule as ``sharding.cache_shardings``
+    and ``sharding.paged_pool_shardings``)."""
+    if rt is None or rt.mesh is None or not rt.model_axes:
+        return None
+    ax = rt.model_axes[-1]
+    if ax not in rt.mesh.shape or rt.mesh.shape[ax] <= 1:
+        return None
+    hkv = cache["k"].shape[-2]
+    if hkv % rt.mesh.shape[ax]:
+        return None
+    return ax
+
+
+def _paged_pool_specs(cache, ax):
+    """shard_map PartitionSpecs for the paged pool leaves (KV heads on
+    ``ax``; block tables replicated), mirroring paged_pool_shardings."""
+    from jax.sharding import PartitionSpec as P
+    specs = {}
+    for name, leaf in cache.items():
+        nd = leaf.ndim
+        spec = [None] * nd
+        if name in ("k", "v", "k_tail", "v_tail",
+                    "k_tail_snap", "v_tail_snap"):
+            spec[nd - 2] = ax
+        elif name in ("k_scale", "v_scale"):
+            spec[nd - 1] = ax
+        specs[name] = P(*spec)
+    return specs
+
+
+def _shard_paged(body, rt, in_specs, out_specs):
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=rt.mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def _tp_decode_paged(cfg, p, q, k, v, cache, pos, rt, ax):
+    from jax.sharding import PartitionSpec as P
+    hs = P(None, None, ax, None)
+    cs = _paged_pool_specs(cache, ax)
+
+    def body(wo, q, k, v, cache, pos):
+        cache = paged_cache_write(cache, k, v, pos)
+        if rt.use_pallas:
+            out = _pallas_decode_paged(cfg, q, cache, pos, rt)
+        else:
+            out = attend_paged(q, cache, pos)
+        out = out.reshape(out.shape[0], 1, -1)
+        y = jax.lax.psum(out @ wo, ax)
+        return y, cache
+
+    f = _shard_paged(body, rt,
+                     in_specs=(P(ax, None), hs, hs, hs, cs, P(None)),
+                     out_specs=(P(None, None, None), cs))
+    return f(p["wo"], q, k, v, cache, pos)
+
+
+def _tp_prefill_paged(cfg, p, q, k, v, cache, row, table_row, c0, w_eff,
+                      w_floor, n_valid, rt, ax):
+    from jax.sharding import PartitionSpec as P
+    hs = P(None, None, ax, None)
+    cs = _paged_pool_specs(cache, ax)
+    s = P()
+
+    def body(wo, q, k, v, cache, row, table_row, c0, w_eff, w_floor,
+             n_valid):
+        if rt.use_pallas:
+            out = _pallas_prefill_paged(cfg, q, k, v, cache, row, table_row,
+                                        c0, w_eff, rt)
+        else:
+            out = attend_paged_prefill(q, k, v, cache, row, table_row, c0,
+                                       w_eff)
+        cache = paged_prefill_write(cache, k, v, row, table_row, c0,
+                                    w_floor, n_valid)
+        out = out.reshape(out.shape[0], out.shape[1], -1)
+        y = jax.lax.psum(out @ wo, ax)
+        return y, cache
+
+    f = _shard_paged(body, rt,
+                     in_specs=(P(ax, None), hs, hs, hs, cs, s, P(None),
+                               s, s, s, s),
+                     out_specs=(P(None, None, None), cs))
+    return f(p["wo"], q, k, v, cache, row, table_row, c0, w_eff, w_floor,
+             n_valid)
+
+
+def _tp_verify_paged(cfg, p, q, k, v, cache, c0s, n_valid, act, rt, ax):
+    from jax.sharding import PartitionSpec as P
+    hs = P(None, None, ax, None)
+    cs = _paged_pool_specs(cache, ax)
+
+    def body(wo, q, k, v, cache, c0s, n_valid, act):
+        if rt.use_pallas:
+            out = _pallas_verify_paged(cfg, q, k, v, cache, c0s, rt)
+        else:
+            out = attend_paged_verify(q, k, v, cache, c0s)
+        cache = {kk: vv for kk, vv in cache.items()
+                 if kk not in ("k_tail_snap", "v_tail_snap")}
+        cache = paged_verify_write(cache, k, v, c0s, n_valid, act)
+        out = out.reshape(out.shape[0], out.shape[1], -1)
+        y = jax.lax.psum(out @ wo, ax)
+        return y, cache
+
+    cs_out = {kk: ss for kk, ss in cs.items()
+              if kk not in ("k_tail_snap", "v_tail_snap")}
+    f = _shard_paged(body, rt,
+                     in_specs=(P(ax, None), hs, hs, hs, cs, P(None), P(),
+                               P(None)),
+                     out_specs=(P(None, None, None), cs_out))
+    return f(p["wo"], q, k, v, cache, c0s, n_valid, act)

@@ -95,7 +95,8 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
 
 def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
                     max_batch: int, max_blocks_per_seq: int, *, dtype=None,
-                    quant: bool = False, fp_tail_blocks: int = 2):
+                    quant: bool = False, fp_tail_blocks: int = 2,
+                    mesh=None):
     """Paged continuous-batching pool: ONE shared block pool per layer
     plus per-request block tables (``attention.init_paged_kv_cache``),
     stacked over the layer scan like every other cache.  Blocks are
@@ -106,7 +107,12 @@ def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
 
     ``quant=True`` stores pool K/V int8 with per-vector f32 scales plus a
     per-row fp ring tail of ``fp_tail_blocks`` blocks — ~2-4x more
-    resident blocks per HBM byte (see ``attention.init_paged_kv_cache``)."""
+    resident blocks per HBM byte (see ``attention.init_paged_kv_cache``).
+
+    ``mesh`` places the pool with ``sharding.paged_pool_shardings``:
+    K/V blocks, ring tails, and int8 scales split the KV-head axis over
+    'model' (replication fallback when heads don't divide); block tables
+    replicate.  Without a mesh the pool is single-device as before."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     if cfg.mla is not None:
         raise NotImplementedError(
@@ -122,6 +128,10 @@ def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
             max_batch=max_batch, max_blocks_per_seq=max_blocks_per_seq,
             quant=quant, fp_tail_blocks=fp_tail_blocks)
         pool[f"seg{i}"] = _stack(c, n)
+    if mesh is not None:
+        from repro.sharding import paged_pool_shardings
+        shardings = paged_pool_shardings(pool, cfg, mesh)
+        pool = jax.tree.map(jax.device_put, pool, shardings)
     return pool
 
 

@@ -458,10 +458,17 @@ class PagedEngine(Engine):
             num_blocks = max_batch * self.nbt + self.nbt + 1
         self.allocator = BlockAllocator(num_blocks, bs)
         self.trie = BlockTrie(bs)
+        # Under a mesh-carrying Runtime the pool is placed TP-sharded
+        # (KV-head axis on 'model' when heads divide, replication fallback
+        # otherwise — sharding.paged_pool_shardings); the attention
+        # dispatches then run under shard_map (attention.paged_tp_axis).
+        # Everything host-side (allocator, trie, table mirrors) is
+        # replica-local numpy and never sees the mesh.
         self.pool = init_paged_pool(cfg, num_blocks, bs, max_batch,
                                     self.nbt, dtype=jnp.dtype(cfg.dtype),
                                     quant=self.kv_quant,
-                                    fp_tail_blocks=fp_tail_blocks)
+                                    fp_tail_blocks=fp_tail_blocks,
+                                    mesh=self.rt.mesh)
         if prefill_mode not in ("chunked", "staged"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.prefill_mode = prefill_mode
@@ -1048,6 +1055,18 @@ class PagedEngine(Engine):
         return self.allocator.num_live() * paged_block_bytes(
             self.cfg, self.block, dtype=jnp.dtype(self.cfg.dtype),
             quant=self.kv_quant)
+
+    def kv_tp_degree(self) -> int:
+        """How many 'model' shards the pool's KV-head axis is split over
+        (1 when unsharded or when the replication fallback applied)."""
+        from repro.models.attention import paged_tp_axis
+        ax = paged_tp_axis(self.rt, {"k": self.pool["seg0"]["k"][0]})
+        return 1 if ax is None else self.rt.mesh.shape[ax]
+
+    def device_kv_bytes_per_device(self) -> int:
+        """Live pool bytes each device holds: the TP shards split the
+        KV-head axis, so per-device bytes are in_use / tp."""
+        return self.device_kv_bytes_in_use() // self.kv_tp_degree()
 
     # ------------------------------------------------------------------
     def admit_slot(self, slot: int, prompt: str, *,

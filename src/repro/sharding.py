@@ -33,6 +33,36 @@ from repro.runtime import Runtime
 TP = "model"
 BIG_CACHE = 16384
 
+# ---------------------------------------------------------------------------
+# replication-fallback log: every rule that WANTED to shard a leaf but fell
+# back to replication records (leaf, shape, reason, chosen spec) exactly once
+# so the dry-run (and operators) can see which leaves silently replicate.
+# ---------------------------------------------------------------------------
+_FALLBACKS: dict = {}
+
+
+def _log_fallback(name, shape, spec, reason: str) -> None:
+    key = (name, tuple(shape), reason)
+    if key in _FALLBACKS:
+        return
+    rec = {"leaf": name, "shape": tuple(int(s) for s in shape),
+           "spec": str(spec), "reason": reason}
+    _FALLBACKS[key] = rec
+    import logging
+    logging.getLogger(__name__).warning(
+        "sharding fallback: leaf %r shape %s -> %s (%s)",
+        name, rec["shape"], rec["spec"], reason)
+
+
+def fallback_log():
+    """Records of every rule that fell back to replication (logged once per
+    (leaf, shape, reason)); surfaced by the dry-run artifact."""
+    return list(_FALLBACKS.values())
+
+
+def clear_fallback_log() -> None:
+    _FALLBACKS.clear()
+
 # leaf name -> axis position (from the right) that gets the 'model' axis
 _PARAM_RULES = {
     # embeddings
@@ -111,6 +141,9 @@ def param_shardings(params_struct, mesh: Mesh, *,
         is_expert = bool(name and name.startswith("we_"))
         if idx is not None and leaf.shape[idx] % tp_size != 0:
             spec_list = [None] * len(leaf.shape)          # fallback: replicate
+            _log_fallback(name, leaf.shape, P(),
+                          f"dim {idx} = {leaf.shape[idx]} not divisible by "
+                          f"tp={tp_size}")
         elif (idx is not None and not is_expert
               and leaf.shape[idx] < 128 * tp_size):
             # tiny dims (e.g. whisper's 512-wide attention) — sharding buys
@@ -178,6 +211,10 @@ def cache_shardings(cache_struct, cfg: ModelConfig, mesh: Mesh,
                 spec[nd - 2] = TP
             elif C >= BIG_CACHE and C % tp_size == 0:
                 spec[nd - 3] = TP
+            elif tp_size > 1:
+                _log_fallback(name, shape, P(),
+                              f"kv_heads = {hkv} not divisible by "
+                              f"tp={tp_size} (cache rule)")
         elif name in ("ckv", "krope"):
             C = shape[-2]
             if C >= BIG_CACHE and C % tp_size == 0:
@@ -199,6 +236,60 @@ def cache_shardings(cache_struct, cfg: ModelConfig, mesh: Mesh,
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# paged serving pool (PR 8): TP-sharded block pool placement
+# ---------------------------------------------------------------------------
+def paged_pool_shardings(pool_struct, cfg: ModelConfig, mesh: Mesh):
+    """NamedSharding pytree for a paged KV block pool (``init_paged_pool``).
+
+    Derived from the decode cache rules above: pool K/V blocks
+    (L, NB, bs, Hkv, Dh) and the per-row fp ring tails put the KV-head
+    axis on 'model' when ``kv_heads % tp == 0`` (same right-aligned
+    position nd-2 as the dense k/v rule); int8 scale leaves
+    (L, NB, bs, Hkv) shard heads at nd-1 like k_scale/v_scale.  Block
+    tables are host-mirrored allocator state and stay replicated — the
+    scalar-prefetch gather needs every table entry on every shard.
+    Falls back to replication (logged once) when heads don't divide."""
+    tp_size = mesh.shape[TP]
+
+    def one(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        if name in ("k", "v", "k_tail", "v_tail"):
+            hkv = leaf.shape[nd - 2]
+            if hkv % tp_size == 0:
+                spec[nd - 2] = TP
+            elif tp_size > 1:
+                _log_fallback(name, leaf.shape, P(),
+                              f"kv_heads = {hkv} not divisible by "
+                              f"tp={tp_size} (paged pool rule)")
+        elif name in ("k_scale", "v_scale"):
+            hkv = leaf.shape[nd - 1]
+            if hkv % tp_size == 0:
+                spec[nd - 1] = TP
+            elif tp_size > 1:
+                _log_fallback(name, leaf.shape, P(),
+                              f"kv_heads = {hkv} not divisible by "
+                              f"tp={tp_size} (paged pool rule)")
+        # block_tables (and anything unrecognized) replicate
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, pool_struct)
+
+
+def serving_runtime(mesh: Mesh, *, use_pallas: bool = False) -> Runtime:
+    """Runtime for one paged-serving engine replica over a (data=1, model=T)
+    sub-mesh.  Batch stays replicated inside the replica (data parallelism
+    is N whole engine replicas, not a sharded batch); the 'model' axis
+    splits KV heads in the pool and the attention dispatches."""
+    return Runtime(mesh=mesh, model_axes=(TP,), use_pallas=use_pallas)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,55 @@
+"""Regression tests for ``core.metrics.tpot_summary`` degenerate inputs.
+
+The summary used to emit NaN for empty sample sets (invalid JSON under
+``json.dump(..., allow_nan=False)`` and silently non-standard otherwise)
+and raised ``TypeError`` when a result carried ``step_times_s=None`` /
+``ttft_s=None`` (the ``getattr`` default only covers ABSENT attributes,
+not present-but-None ones).  Now: no samples → None fields + a zero
+sample count; a single sample → every percentile is that sample.
+"""
+from __future__ import annotations
+
+import json
+from types import SimpleNamespace
+
+from repro.core.metrics import tpot_summary
+
+
+def test_empty_results_is_none_not_nan():
+    s = tpot_summary([])
+    assert s["tpot_samples"] == 0
+    for key in ("tpot_p50_s", "tpot_p95_s", "tpot_mean_s",
+                "ttft_mean_s", "ttft_p95_s"):
+        assert s[key] is None
+    # NaN would raise here; None serializes as null
+    json.dumps(s, allow_nan=False)
+
+
+def test_none_step_times_do_not_raise():
+    # attribute PRESENT but None — the getattr default doesn't apply
+    results = [SimpleNamespace(step_times_s=None, ttft_s=None)]
+    s = tpot_summary(results)
+    assert s["tpot_samples"] == 0
+    assert s["tpot_p50_s"] is None
+    assert s["ttft_mean_s"] is None
+
+
+def test_single_entry_percentiles_are_that_sample():
+    results = [SimpleNamespace(step_times_s=[0.25], ttft_s=0.5)]
+    s = tpot_summary(results)
+    assert s["tpot_samples"] == 1
+    assert s["tpot_p50_s"] == s["tpot_p95_s"] == s["tpot_mean_s"] == 0.25
+    assert s["ttft_mean_s"] == s["ttft_p95_s"] == 0.5
+
+
+def test_mixed_results_skip_sampleless_entries():
+    results = [
+        SimpleNamespace(step_times_s=[0.1, 0.3], ttft_s=0.2),
+        SimpleNamespace(step_times_s=None, ttft_s=None),
+        SimpleNamespace(step_times_s=[], ttft_s=0.0),   # 0 ttft = unset
+    ]
+    s = tpot_summary(results)
+    assert s["tpot_samples"] == 2
+    assert abs(s["tpot_mean_s"] - 0.2) < 1e-12
+    assert abs(s["ttft_mean_s"] - 0.2) < 1e-12
+    json.dumps(s, allow_nan=False)
