@@ -57,7 +57,13 @@ Besides the table, the run writes ``BENCH_continuous_batching.json`` (or
 ``--json-out PATH``) so CI can track the perf trajectory machine-readably.
 ``--check-chunked`` (CI smoke) fails the run if any chunked config
 compiled more than one prefill executable per chunk shape or if the
-TTFT rows are missing from the artifact; ``--check-semantic`` fails it
+TTFT rows are missing from the artifact; ``--packed`` adds a
+burst-arrival workload (8 requests at once) served by the chunked route
+vs the ragged packed route (ALL pending admissions' chunk steps in ONE
+dispatch per engine step), with ``packed_vs_chunked_b*`` rows recording
+admission tokens/s, TTFT p50/p95 and dispatch/executable counts, and
+``--check-packed`` gates token identity, one-dispatch-per-step, the
+bucket-ladder compile bound and TTFT p95 no worse than chunked; ``--check-semantic`` fails it
 unless the semantic rows show grafted reuse depth > 0 where the prefix
 paths report 0, with the prefix paths byte-preserved; ``--check-spec``
 fails it unless speculative rounds actually ran AND speculative greedy
@@ -208,6 +214,20 @@ def main():
                          "compiled at most one prefill executable per "
                          "fixed chunk shape and every paged row carries "
                          "TTFT data (CI gate)")
+    ap.add_argument("--packed", action="store_true",
+                    help="also run the burst-arrival workload (8 requests "
+                         "submitted at once) through the packed admission "
+                         "route vs the chunked one and record admission "
+                         "tokens/s, TTFT p50/p95 and prefill dispatch/"
+                         "executable counts (packed_vs_chunked_b* rows)")
+    ap.add_argument("--check-packed", action="store_true",
+                    help="fail (exit 1) unless packed greedy decode is "
+                         "token-identical to chunked on the burst "
+                         "workload, the packed route issued ONE prefill "
+                         "dispatch per engine step, compiled at most one "
+                         "executable per packed bucket, and its TTFT p95 "
+                         "is no worse than chunked (CI gate; implies "
+                         "--packed)")
     ap.add_argument("--mesh", default=None, metavar="DxT",
                     help="also run the mesh-sharded ShardedServer (D "
                          "data-parallel PagedEngine replicas x T-way TP "
@@ -363,6 +383,81 @@ def main():
                 "max_resident_blocks_fp": fp["max_resident_blocks"],
                 "max_resident_blocks_int8": q8["max_resident_blocks"],
             })
+
+    if args.check_packed:
+        args.packed = True
+    if args.packed:
+        # Burst arrival — the regime the packed route exists for: 8
+        # requests land at once, so every engine step has up to 8
+        # admissions mid-flight.  The chunked route advances them with
+        # one prefill dispatch EACH per step; the packed route lands all
+        # their chunk steps in ONE ragged packed dispatch.  Same
+        # workload, same precache, greedy — tokens must be identical,
+        # the win is admission latency (TTFT) and dispatch count.
+        burst_b = 8
+        burst_prompts = workload(burst_b)
+        pair = {}
+        for mode in ("chunked", "packed"):
+            peng = PagedEngine(cfg, params, max_batch=burst_b,
+                               capacity=args.capacity,
+                               max_new_tokens=args.max_new, block_size=8,
+                               enable_partial=True, prefill_mode=mode)
+            peng.precache(CACHED)
+            sched = ContinuousBatchingScheduler(peng)
+            dt, toks, ttfts, served, cold = timed_best(
+                sched, burst_prompts, args.max_new)
+            peng.check_invariants()
+            from repro.core.metrics import slo_summary
+            slo = slo_summary(served)
+            prompt_toks = sum(r.prompt_tokens for r in served)
+            row = {
+                "config": f"{mode}_burst_b{burst_b}", "wall_s": dt,
+                "gen_tokens": toks, "tokens_per_s": toks / dt,
+                "speedup": (toks / dt) / serial_tps,
+                # admission throughput: prompt tokens prefilled per
+                # wall-second of the whole burst pass
+                "admission_tokens_per_s": prompt_toks / dt,
+                "ttft_mean_s": sum(ttfts) / max(len(ttfts), 1),
+                "ttft_p50_s": slo["ttft_p50_s"],
+                "ttft_p95_s": slo["ttft_p95_s"],
+                "tpot_p50_s": slo["tpot_p50_s"],
+                "tpot_p95_s": slo["tpot_p95_s"],
+                "prefill_compiles": peng.prefill_compiles(),
+                "prefill_chunks": peng.stats["prefill_chunks"],
+                "prefill_dispatches": peng.stats["prefill_dispatches"],
+                "prefill_packed_steps":
+                    peng.stats.get("prefill_packed_steps", 0),
+                "packed_buckets": len(peng.packed_buckets),
+                # greedy outputs are deterministic across the timed
+                # passes, so the scheduler's final pass stands in for
+                # the best one in the identity gate
+                "tokens_by_prompt": {r.prompt: [int(t) for t in
+                                                r.result.token_ids]
+                                     for r in sched.completed
+                                     if r.result is not None},
+            }
+            pair[mode] = row
+            rows.append(row)
+        c, p = pair["chunked"], pair["packed"]
+        rows.append({
+            "config": f"packed_vs_chunked_b{burst_b}",
+            "admission_tokens_per_s_chunked": c["admission_tokens_per_s"],
+            "admission_tokens_per_s_packed": p["admission_tokens_per_s"],
+            "ttft_p50_chunked_s": c["ttft_p50_s"],
+            "ttft_p50_packed_s": p["ttft_p50_s"],
+            "ttft_p95_chunked_s": c["ttft_p95_s"],
+            "ttft_p95_packed_s": p["ttft_p95_s"],
+            "ttft_p95_speedup": (c["ttft_p95_s"]
+                                 / max(p["ttft_p95_s"], 1e-9)),
+            "prefill_dispatches_chunked": c["prefill_dispatches"],
+            "prefill_dispatches_packed": p["prefill_dispatches"],
+            "prefill_compiles_chunked": c["prefill_compiles"],
+            "prefill_compiles_packed": p["prefill_compiles"],
+            "tokens_identical": (c["tokens_by_prompt"]
+                                 == p["tokens_by_prompt"]),
+        })
+        for row in (c, p):              # the per-prompt tokens served
+            del row["tokens_by_prompt"]  # their gate; keep the json lean
 
     if args.check_spec:
         args.speculative = True
@@ -703,6 +798,16 @@ def main():
                   f"({r['ttft_cold_speedup']:.2f}x), prefill compiles "
                   f"{r['prefill_compiles_staged']} -> "
                   f"{r['prefill_compiles_chunked']}")
+        if r["config"].startswith("packed_vs_chunked"):
+            print(f"{r['config']}: ttft p95 "
+                  f"{1e3 * r['ttft_p95_chunked_s']:.1f}ms -> "
+                  f"{1e3 * r['ttft_p95_packed_s']:.1f}ms "
+                  f"({r['ttft_p95_speedup']:.2f}x), prefill dispatches "
+                  f"{r['prefill_dispatches_chunked']} -> "
+                  f"{r['prefill_dispatches_packed']}, compiles "
+                  f"{r['prefill_compiles_chunked']} -> "
+                  f"{r['prefill_compiles_packed']}, tokens identical: "
+                  f"{r['tokens_identical']}")
         if r["config"].startswith("int8_vs_fp"):
             print(f"{r['config']}: {r['bytes_reduction']:.2f}x fewer device "
                   f"KV bytes in use ({r['bytes_in_use_fp']} -> "
@@ -781,6 +886,50 @@ def main():
                              "\n  ".join(bad))
         print("--check-chunked OK: at most one compiled prefill per "
               "chunk shape, TTFT rows present")
+
+    if args.check_packed:
+        # CI gate for the packed admission route: token identity vs
+        # chunked on the burst workload, ONE prefill dispatch per packed
+        # engine step (vs one per admission chunk on the chunked route),
+        # at most one compiled executable per packed bucket, and TTFT
+        # p95 no worse than chunked.  Perf margins beyond that are
+        # reported, not gated — a shared CI box cannot promise ratios.
+        bad = []
+        summary = [r for r in rows
+                   if r["config"].startswith("packed_vs_chunked")]
+        if not summary:
+            bad.append("no packed_vs_chunked summary row in the artifact")
+        for r in summary:
+            if not r["tokens_identical"]:
+                bad.append(f"{r['config']}: packed tokens diverge from "
+                           f"chunked on the burst workload")
+            if r["ttft_p95_packed_s"] > r["ttft_p95_chunked_s"]:
+                bad.append(f"{r['config']}: packed ttft p95 "
+                           f"{1e3 * r['ttft_p95_packed_s']:.1f}ms worse "
+                           f"than chunked "
+                           f"{1e3 * r['ttft_p95_chunked_s']:.1f}ms")
+        for r in timed:
+            if not r["config"].startswith("packed_burst_b"):
+                continue
+            if r["prefill_dispatches"] != r["prefill_packed_steps"]:
+                bad.append(f"{r['config']}: {r['prefill_dispatches']} "
+                           f"dispatches over {r['prefill_packed_steps']} "
+                           f"packed steps (expected one per step)")
+            if r["prefill_chunks"] <= r["prefill_dispatches"]:
+                bad.append(f"{r['config']}: burst never packed more than "
+                           f"one admission per dispatch "
+                           f"({r['prefill_chunks']} chunks over "
+                           f"{r['prefill_dispatches']} dispatches)")
+            if r["prefill_compiles"] > r["packed_buckets"]:
+                bad.append(f"{r['config']}: {r['prefill_compiles']} "
+                           f"prefill executables (expected <= "
+                           f"{r['packed_buckets']}, one per packed "
+                           f"bucket)")
+        if bad:
+            raise SystemExit("--check-packed FAILED:\n  " + "\n  ".join(bad))
+        print("--check-packed OK: packed tokens identical to chunked, "
+              "one dispatch per packed step, compiles bounded by the "
+              "bucket ladder, ttft p95 no worse")
 
     if args.check_spec:
         # CI gate: speculative rows must exist with real rounds, and

@@ -90,6 +90,7 @@ class CacheEntry:
     nbytes: int = 0
     hits: int = 0                # times this entry served a lookup (tiering)
     last_hit: int = -1           # store clock at the last touching get()
+    tenant: Optional[str] = None  # owner for per-tenant byte quotas
 
     def __post_init__(self):
         if not self.nbytes:
@@ -117,6 +118,11 @@ class HostKVStore:
         self.evictions = 0
         self._clock = 0                        # touching-get counter
         self.stats = {"peeks": 0, "hits": 0}   # L2-tier traffic
+        # per-tenant byte usage (entries with tenant=None are untracked):
+        # what the scheduler's admit-time quota check reads.  Maintained
+        # by put/remove/evict so it always equals the sum of that
+        # tenant's live entries' nbytes.
+        self.tenant_bytes: Dict[str, int] = {}
         # called with each evicted entry_id (budget eviction only, not
         # explicit remove()); lets index mirrors stay consistent even when
         # eviction fires inside put()
@@ -143,15 +149,33 @@ class HostKVStore:
         recency or peek stats — for rebuilding retrieval mirrors."""
         return list(self._entries.values())
 
+    def tenant_usage(self, tenant: str) -> int:
+        """Live bytes held by ``tenant``'s entries (0 for unknown)."""
+        with self.lock:
+            return self.tenant_bytes.get(tenant, 0)
+
+    def _untrack_tenant(self, e: CacheEntry) -> None:
+        if e.tenant is not None:
+            left = self.tenant_bytes.get(e.tenant, 0) - e.nbytes
+            if left > 0:
+                self.tenant_bytes[e.tenant] = left
+            else:
+                self.tenant_bytes.pop(e.tenant, None)
+
     def put(self, text: str, token_ids, cache, length: int,
-            capacity: Optional[int] = None) -> CacheEntry:
+            capacity: Optional[int] = None,
+            tenant: Optional[str] = None) -> CacheEntry:
         token_ids = np.asarray(token_ids, np.int32)
         with self.lock:
             entry = CacheEntry(self._next_id, text, token_ids, cache,
-                               int(length), int(capacity or length))
+                               int(length), int(capacity or length),
+                               tenant=tenant)
             self._next_id += 1
             self._entries[entry.entry_id] = entry
             self.total_bytes += entry.nbytes
+            if tenant is not None:
+                self.tenant_bytes[tenant] = (
+                    self.tenant_bytes.get(tenant, 0) + entry.nbytes)
             # enforce the byte budget HERE, not just in Recycler.admit —
             # the new entry is MRU, so it is evicted only if it alone
             # exceeds the whole budget (in which case the store honestly
@@ -181,6 +205,7 @@ class HostKVStore:
             e = self._entries.pop(entry_id, None)
             if e is not None:
                 self.total_bytes -= e.nbytes
+                self._untrack_tenant(e)
 
     def evict_to_budget(self) -> List[int]:
         """Evict LRU entries until under max_bytes; returns evicted ids."""
@@ -191,6 +216,7 @@ class HostKVStore:
             while self.total_bytes > self.max_bytes and self._entries:
                 eid, e = self._entries.popitem(last=False)
                 self.total_bytes -= e.nbytes
+                self._untrack_tenant(e)
                 self.evictions += 1
                 evicted.append(eid)
                 if self.on_evict is not None:
@@ -215,6 +241,7 @@ class HostKVStore:
                 "capacity": e.capacity,
                 "hits": e.hits,
                 "last_hit": e.last_hit,
+                "tenant": e.tenant,
             }
         with open(os.path.join(path, "index.json"), "w") as f:
             json.dump({"next_id": self._next_id, "clock": self._clock,
@@ -239,9 +266,13 @@ class HostKVStore:
             e = CacheEntry(eid, m["text"], np.asarray(m["token_ids"], np.int32),
                            cache, m["length"], m["capacity"],
                            hits=m.get("hits", 0),
-                           last_hit=m.get("last_hit", -1))
+                           last_hit=m.get("last_hit", -1),
+                           tenant=m.get("tenant"))
             store._entries[eid] = e
             store.total_bytes += e.nbytes
+            if e.tenant is not None:
+                store.tenant_bytes[e.tenant] = (
+                    store.tenant_bytes.get(e.tenant, 0) + e.nbytes)
         store._next_id = meta["next_id"]
         store._clock = meta.get("clock", 0)
         store.evict_to_budget()

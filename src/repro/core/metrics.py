@@ -110,6 +110,64 @@ def tpot_summary(results) -> Dict:
     }
 
 
+def slo_summary(results, requests=None, *, ttft_slo_s: Optional[float] = None,
+                tpot_slo_s: Optional[float] = None) -> Dict:
+    """Serving-SLO summary: TTFT / TPOT / queue-delay percentiles plus the
+    fraction of requests meeting every GIVEN target.
+
+    ``results`` are GenResults (or anything carrying ``ttft_s`` /
+    ``step_times_s``); ``requests`` are scheduler ``Request`` objects
+    (anything carrying ``queue_delay_s``) for the admission-queue view —
+    pass the same objects the ContinuousBatchingScheduler returned.
+
+    SLO attainment is judged per REQUEST: a request attains when its TTFT
+    meets ``ttft_slo_s`` (if given) AND its p95 per-token step time meets
+    ``tpot_slo_s`` (if given).  With no targets given, or no measurable
+    requests, ``slo_attainment`` is None — same None-not-NaN convention
+    as ``tpot_summary`` (NaN is invalid JSON)."""
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else None
+
+    ttfts = [t for t in (getattr(r, "ttft_s", None) for r in results)
+             if t is not None and t > 0.0]
+    steps = [t for r in results
+             for t in (getattr(r, "step_times_s", None) or [])]
+    delays = [d for d in (getattr(r, "queue_delay_s", None)
+                          for r in (requests or []))
+              if d is not None]
+
+    attained = None
+    samples = 0
+    if ttft_slo_s is not None or tpot_slo_s is not None:
+        ok = 0
+        for r in results:
+            ttft = getattr(r, "ttft_s", None)
+            rsteps = getattr(r, "step_times_s", None) or []
+            meets = True
+            measurable = False
+            if ttft_slo_s is not None and ttft is not None and ttft > 0.0:
+                measurable = True
+                meets = meets and ttft <= ttft_slo_s
+            if tpot_slo_s is not None and rsteps:
+                measurable = True
+                meets = meets and pct(rsteps, 95) <= tpot_slo_s
+            if measurable:
+                samples += 1
+                ok += int(meets)
+        attained = ok / samples if samples else None
+
+    return {
+        "ttft_p50_s": pct(ttfts, 50),
+        "ttft_p95_s": pct(ttfts, 95),
+        "tpot_p50_s": pct(steps, 50),
+        "tpot_p95_s": pct(steps, 95),
+        "queue_delay_p50_s": pct(delays, 50),
+        "queue_delay_p95_s": pct(delays, 95),
+        "slo_attainment": attained,
+        "slo_samples": samples,
+    }
+
+
 class Timer:
     """Wall-clock timer with block_until_ready semantics handled by caller
     (the paper's cuda.synchronize analogue is jax block_until_ready)."""

@@ -222,14 +222,17 @@ class Recycler:
     # ------------------------------------------------------------------
     def admit(self, text: str, token_ids, cache_host, length: int,
               capacity: Optional[int] = None,
-              compress: Optional[bool] = None) -> CacheEntry:
+              compress: Optional[bool] = None,
+              tenant: Optional[str] = None) -> CacheEntry:
         """Store a finished run's cache for future recycling (paper §2.4).
         ``compress`` overrides the recycler-wide default for this entry
-        (byte-budget eviction fires either way)."""
+        (byte-budget eviction fires either way); ``tenant`` labels the
+        entry for the store's per-tenant byte accounting."""
         if self.compress if compress is None else compress:
             cache_host = kvq.quantize_tree(cache_host, length=length,
                                            residual=self.compress_residual)
-        entry = self.store.put(text, token_ids, cache_host, length, capacity)
+        entry = self.store.put(text, token_ids, cache_host, length, capacity,
+                               tenant=tenant)
         # put() enforces the byte budget itself now (evicted ids reach
         # _forget_entry through store.on_evict); only index the new entry
         # if it actually survived — an entry bigger than the whole budget

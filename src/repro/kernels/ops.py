@@ -17,6 +17,10 @@ from repro.kernels.prefill_attention import (paged_prefill_attention
                                              as _prefill_paged)
 from repro.kernels.prefill_attention import (paged_prefill_attention_quant
                                              as _prefill_paged_quant)
+from repro.kernels.prefill_attention import (paged_prefill_attention_packed
+                                             as _prefill_packed)
+from repro.kernels.prefill_attention import (
+    paged_prefill_attention_packed_quant as _prefill_packed_quant)
 from repro.kernels.verify_attention import (paged_verify_attention
                                             as _verify_paged)
 from repro.kernels.verify_attention import (paged_verify_attention_quant
@@ -107,6 +111,36 @@ def paged_prefill_attention_quant(q, k_chunk, v_chunk, k_pool, v_pool,
     return _prefill_paged_quant(q, k_chunk, v_chunk, k_pool, v_pool,
                                 k_scale, v_scale, k_tail_row, v_tail_row,
                                 table_row, c0, w_eff, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_tiles", "interpret"))
+def paged_prefill_attention_packed(q, k_chunk, v_chunk, k_pool, v_pool,
+                                   tables, desc, *, chunk_tiles=None,
+                                   interpret=True):
+    """Ragged packed multi-admission prefill: q / chunk K/V (1, T, H|Hkv,
+    D) concatenate EVERY pending admission's current chunk (segments
+    bs-aligned, T a bucket size); tables (S, NBt) are the per-segment
+    block tables and desc (4, QT) the per-query-tile [seg, c0, w_eff,
+    qt0] descriptors, both scalar-prefetched — so ONE compiled executable
+    per (bucket, segment-count) shape serves any number of concurrent
+    admissions at any depth."""
+    return _prefill_packed(q, k_chunk, v_chunk, k_pool, v_pool, tables,
+                           desc, chunk_tiles=chunk_tiles,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_tiles", "interpret"))
+def paged_prefill_attention_packed_quant(q, k_chunk, v_chunk, k_pool,
+                                         v_pool, k_scale, v_scale, k_tails,
+                                         v_tails, tables, desc, *,
+                                         chunk_tiles=None, interpret=True):
+    """int8 ragged packed prefill with the dequant fused into the
+    segment-table gather; each segment's last R history blocks come from
+    its row's fp ring tail (S, R*bs, Hkv, D), gathered by the caller."""
+    return _prefill_packed_quant(q, k_chunk, v_chunk, k_pool, v_pool,
+                                 k_scale, v_scale, k_tails, v_tails,
+                                 tables, desc, chunk_tiles=chunk_tiles,
+                                 interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

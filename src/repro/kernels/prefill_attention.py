@@ -33,6 +33,25 @@ gather fuses the per-vector dequant, and the last ``R`` history blocks
 the row's fp ring tail instead — the same recency gate the int8 decode
 kernel applies, so chunked prefill and decode see one consistent view of
 where full precision lives.
+
+``paged_prefill_attention_packed{,_quant}`` generalize the chunked pair
+to MANY concurrent admissions in ONE dispatch: every pending admission's
+current chunk is concatenated into a single ragged ``[total_tokens]``
+buffer (each segment bs-aligned, the whole buffer padded to one of a few
+bucket sizes), per-SEGMENT block tables arrive as a (S, NBt) scalar
+prefetch, and a per-QUERY-TILE descriptor (4, QT) of
+``[seg, c0, w_eff, qt0]`` rows drives both the gather index maps and the
+segment-masked online softmax.  The grid gains a query-tile axis
+(Hkv, QT, NBt + chunk_tiles) with the kv axis innermost, so each query
+tile keeps its own (bs*G, d) softmax state in VMEM; because segments are
+bs-aligned, every query tile belongs to exactly ONE segment and the
+per-tile output blocks are disjoint.  Chunk kv tiles index the packed
+buffer at ``qt0 + j`` — tiles past the query's own (j > qt - qt0) are
+fully masked by causality (their minimum key position exceeds the tile's
+maximum query position), so no cross-segment leakage is possible even
+though neighbouring segments are adjacent in the buffer.  Buffer bucket
+sizes and the fixed segment count keep the compile count independent of
+both suffix length AND the number of concurrent admissions.
 """
 from __future__ import annotations
 
@@ -292,3 +311,228 @@ def paged_prefill_attention_quant(q, k_chunk, v_chunk, k_pool, v_pool,
       kcr, vcr)
     return (out.reshape(Hkv, C, G, D).transpose(1, 0, 2, 3)
             .reshape(1, C, H, D))
+
+
+# ---------------------------------------------------------------------------
+# ragged packed multi-admission prefill
+# ---------------------------------------------------------------------------
+def _packed_tile_mask(qt, ti, desc_ref, BG, bs, G, nbt):
+    """Validity for query tile ``qt`` against kv tile ``ti``: history
+    tiles (< nbt) hold the tile's SEGMENT's pool positions, valid below
+    its w_eff; chunk tiles hold the segment's packed-buffer positions at
+    or after it.  Causality uses the tile's absolute query positions
+    ``c0 + (qt - qt0) * bs + r // G``."""
+    c0 = desc_ref[1, qt]
+    w_eff = desc_ref[2, qt]
+    qt0 = desc_ref[3, qt]
+    j = jax.lax.broadcasted_iota(jnp.int32, (BG, bs), 1)
+    r = jax.lax.broadcasted_iota(jnp.int32, (BG, bs), 0)
+    qp = c0 + (qt - qt0) * bs + r // G
+    is_hist = ti < nbt
+    kp = jnp.where(is_hist, ti * bs + j, c0 + (ti - nbt) * bs + j)
+    ok = (kp <= qp) & jnp.where(is_hist, kp < w_eff, kp >= w_eff)
+    return ok
+
+
+def _paged_prefill_packed_kernel(tbl_ref, desc_ref, q_ref, k_ref, v_ref,
+                                 kc_ref, vc_ref, o_ref, m_scr, l_scr,
+                                 acc_scr, *, scale, bs, nbt, G, ntiles):
+    """One (kv_head, query_tile, kv_tile) program: the BlockSpec index
+    maps already resolved history tile ``ti`` through the tile's
+    SEGMENT's table row, and chunk tile ``ti - nbt`` to packed-buffer
+    tile ``qt0 + (ti - nbt)``; the mask keeps everything segment-local."""
+    qt = pl.program_id(1)
+    ti = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32)                  # (bs*G, d)
+    is_hist = ti < nbt
+    k = jnp.where(is_hist, k_ref[0, 0], kc_ref[0, 0]).astype(jnp.float32)
+    v = jnp.where(is_hist, v_ref[0, 0], vc_ref[0, 0]).astype(jnp.float32)
+    s = q @ k.T * scale                               # (bs*G, bs)
+    s = jnp.where(_packed_tile_mask(qt, ti, desc_ref, q.shape[0], bs, G,
+                                    nbt), s, NEG_INF)
+    _accumulate(ti, ntiles, s, v, o_ref, m_scr, l_scr, acc_scr)
+
+
+def paged_prefill_attention_packed(q, k_chunk, v_chunk, k_pool, v_pool,
+                                   tables, desc, *, scale=None,
+                                   chunk_tiles=None, interpret=True):
+    """Ragged packed multi-admission prefill attention.
+
+    q / k_chunk / v_chunk (1, T, H|Hkv, D): EVERY pending admission's
+    current chunk concatenated (each segment bs-aligned, T padded to a
+    bucket size); pools (NB, bs, Hkv, D); tables (S, NBt) int32 — one
+    block-table row per segment (sentinel rows for padding segments);
+    desc (4, QT) int32 — per query tile ``[seg, c0, w_eff, qt0]`` where
+    qt0 is the segment's first packed tile.  History (< w_eff) is read
+    through the tile's segment's table; the segment's own chunk
+    (>= w_eff) from the fp operands.  ``chunk_tiles`` bounds how many
+    chunk kv tiles any one segment spans (defaults to all of them).
+    Padding queries produce garbage the caller discards.
+    Returns (1, T, H, D)."""
+    _, T, H, D = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    NBt = tables.shape[1]
+    QT = T // bs
+    CB = chunk_tiles or QT
+    check_shard_view(H, Hkv)
+    G = H // Hkv
+    scale = scale or D ** -0.5
+
+    qr, kcr, vcr = _chunk_layouts(q, k_chunk, v_chunk, bs)
+    kr = k_pool.transpose(2, 0, 1, 3)                 # (Hkv, NB, bs, D)
+    vr = v_pool.transpose(2, 0, 1, 3)
+
+    def hist_ix(h, qt, ti, tbl, dsc, n=NBt):
+        return (h, tbl[dsc[0, qt], jnp.minimum(ti, n - 1)], 0, 0)
+
+    def chunk_ix(h, qt, ti, tbl, dsc, n=NBt, qtt=QT):
+        return (h, jnp.clip(dsc[3, qt] + ti - n, 0, qtt - 1), 0, 0)
+
+    def q_ix(h, qt, ti, tbl, dsc):
+        return (h, qt, 0)
+
+    kernel = functools.partial(_paged_prefill_packed_kernel, scale=scale,
+                               bs=bs, nbt=NBt, G=G, ntiles=NBt + CB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # segment tables + tile descriptors
+        grid=(Hkv, QT, NBt + CB),
+        in_specs=[
+            pl.BlockSpec((1, bs * G, D), q_ix),
+            pl.BlockSpec((1, 1, bs, D), hist_ix),
+            pl.BlockSpec((1, 1, bs, D), hist_ix),
+            pl.BlockSpec((1, 1, bs, D), chunk_ix),
+            pl.BlockSpec((1, 1, bs, D), chunk_ix),
+        ],
+        out_specs=pl.BlockSpec((1, bs * G, D), q_ix),
+        scratch_shapes=[
+            pltpu.VMEM((bs * G,), jnp.float32),
+            pltpu.VMEM((bs * G,), jnp.float32),
+            pltpu.VMEM((bs * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, T * G, D), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), desc.astype(jnp.int32), qr, kr, vr,
+      kcr, vcr)
+    return (out.reshape(Hkv, T, G, D).transpose(1, 0, 2, 3)
+            .reshape(1, T, H, D))
+
+
+def _paged_prefill_packed_kernel_quant(tbl_ref, desc_ref, q_ref, k_ref,
+                                       v_ref, ks_ref, vs_ref, kt_ref,
+                                       vt_ref, kc_ref, vc_ref, o_ref,
+                                       m_scr, l_scr, acc_scr, *, scale, bs,
+                                       nbt, G, ntiles, rtail):
+    """int8 packed variant: history tiles arrive as int8 pool blocks plus
+    scales (dequant fused into the segment-table gather); the last
+    ``rtail`` HISTORY blocks of each tile's SEGMENT (ending at its newest
+    history block hb, from its w_eff) come from that segment's fp ring
+    tail — per-tile w_eff makes the recency gate per-segment, otherwise
+    identical to the chunked quant kernel."""
+    qt = pl.program_id(1)
+    ti = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32)                  # (bs*G, d)
+    k8 = k_ref[0, 0].astype(jnp.float32)              # (bs, d) int8 tile
+    v8 = v_ref[0, 0].astype(jnp.float32)
+    ks = ks_ref[0, 0].astype(jnp.float32)             # (bs,) f32 scales
+    vs = vs_ref[0, 0].astype(jnp.float32)
+    kt = kt_ref[0, 0, 0].astype(jnp.float32)          # (bs, d) fp ring tile
+    vt = vt_ref[0, 0, 0].astype(jnp.float32)
+    kc = kc_ref[0, 0].astype(jnp.float32)             # (bs, d) fp chunk tile
+    vc = vc_ref[0, 0].astype(jnp.float32)
+
+    hb = (desc_ref[2, qt] - 1) // bs                  # seg's newest hist blk
+    use_fp = (ti <= hb) & (ti > hb - rtail)
+    is_hist = ti < nbt
+    k = jnp.where(is_hist, jnp.where(use_fp, kt, k8 * ks[:, None]), kc)
+    v = jnp.where(is_hist, jnp.where(use_fp, vt, v8 * vs[:, None]), vc)
+    s = q @ k.T * scale
+    s = jnp.where(_packed_tile_mask(qt, ti, desc_ref, q.shape[0], bs, G,
+                                    nbt), s, NEG_INF)
+    _accumulate(ti, ntiles, s, v, o_ref, m_scr, l_scr, acc_scr)
+
+
+def paged_prefill_attention_packed_quant(q, k_chunk, v_chunk, k_pool,
+                                         v_pool, k_scale, v_scale, k_tails,
+                                         v_tails, tables, desc, *,
+                                         scale=None, chunk_tiles=None,
+                                         interpret=True):
+    """Fused-dequant ragged packed prefill: int8 pools (NB, bs, Hkv, D)
+    with f32 scales (NB, bs, Hkv); k_tails / v_tails (S, R*bs, Hkv, D) —
+    each SEGMENT's row's fp ring tail, gathered by the caller; tables
+    (S, NBt); desc (4, QT).  The gathers are unchanged from the fp packed
+    kernel — only history tile contents differ (int8 + scale, or the
+    segment's fp ring slot for its last R history blocks).
+    Returns (1, T, H, D)."""
+    _, T, H, D = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    NBt = tables.shape[1]
+    QT = T // bs
+    CB = chunk_tiles or QT
+    S = k_tails.shape[0]
+    R = k_tails.shape[1] // bs
+    check_shard_view(H, Hkv)
+    G = H // Hkv
+    scale = scale or D ** -0.5
+
+    qr, kcr, vcr = _chunk_layouts(q, k_chunk, v_chunk, bs)
+    kr = k_pool.transpose(2, 0, 1, 3)                 # (Hkv, NB, bs, D) int8
+    vr = v_pool.transpose(2, 0, 1, 3)
+    ksr = k_scale.transpose(2, 0, 1)                  # (Hkv, NB, bs) f32
+    vsr = v_scale.transpose(2, 0, 1)
+    ktr = (k_tails.reshape(S, R, bs, Hkv, D)          # (Hkv, S, R, bs, D)
+           .transpose(3, 0, 1, 2, 4))
+    vtr = (v_tails.reshape(S, R, bs, Hkv, D)
+           .transpose(3, 0, 1, 2, 4))
+
+    def hist_ix(h, qt, ti, tbl, dsc, n=NBt):
+        return (h, tbl[dsc[0, qt], jnp.minimum(ti, n - 1)], 0, 0)
+
+    def hist_ix_s(h, qt, ti, tbl, dsc, n=NBt):
+        return (h, tbl[dsc[0, qt], jnp.minimum(ti, n - 1)], 0)
+
+    def ring_ix(h, qt, ti, tbl, dsc, r=R):
+        return (h, dsc[0, qt], ti % r, 0, 0)
+
+    def chunk_ix(h, qt, ti, tbl, dsc, n=NBt, qtt=QT):
+        return (h, jnp.clip(dsc[3, qt] + ti - n, 0, qtt - 1), 0, 0)
+
+    def q_ix(h, qt, ti, tbl, dsc):
+        return (h, qt, 0)
+
+    kernel = functools.partial(_paged_prefill_packed_kernel_quant,
+                               scale=scale, bs=bs, nbt=NBt, G=G,
+                               ntiles=NBt + CB, rtail=R)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # segment tables + tile descriptors
+        grid=(Hkv, QT, NBt + CB),
+        in_specs=[
+            pl.BlockSpec((1, bs * G, D), q_ix),
+            pl.BlockSpec((1, 1, bs, D), hist_ix),
+            pl.BlockSpec((1, 1, bs, D), hist_ix),
+            pl.BlockSpec((1, 1, bs), hist_ix_s),
+            pl.BlockSpec((1, 1, bs), hist_ix_s),
+            pl.BlockSpec((1, 1, 1, bs, D), ring_ix),
+            pl.BlockSpec((1, 1, 1, bs, D), ring_ix),
+            pl.BlockSpec((1, 1, bs, D), chunk_ix),
+            pl.BlockSpec((1, 1, bs, D), chunk_ix),
+        ],
+        out_specs=pl.BlockSpec((1, bs * G, D), q_ix),
+        scratch_shapes=[
+            pltpu.VMEM((bs * G,), jnp.float32),
+            pltpu.VMEM((bs * G,), jnp.float32),
+            pltpu.VMEM((bs * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, T * G, D), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), desc.astype(jnp.int32), qr, kr, vr, ksr,
+      vsr, ktr, vtr, kcr, vcr)
+    return (out.reshape(Hkv, T, G, D).transpose(1, 0, 2, 3)
+            .reshape(1, T, H, D))

@@ -4,6 +4,7 @@ from repro.models.model import (
     train_loss,
     prefill,
     prefill_paged,
+    prefill_paged_packed,
     verify_paged,
     draft_view,
     draft_refine,
@@ -18,6 +19,7 @@ __all__ = [
     "train_loss",
     "prefill",
     "prefill_paged",
+    "prefill_paged_packed",
     "verify_paged",
     "draft_view",
     "draft_refine",

@@ -666,6 +666,119 @@ def attend_paged_prefill(q, k_chunk, v_chunk, cache, row, table_row, c0,
     return attend_direct(q, k, v, q_pos, kv_pos, causal=True)
 
 
+def paged_prefill_write_packed(cache, k_new, v_new, rows, tables, c0s,
+                               w_floors, valids, q_offs, seg_ids):
+    """Ragged packed multi-admission prefill scatter: token t of the
+    packed buffer (1, T, Hkv, Dh) belongs to segment ``seg_ids[t]`` and
+    writes absolute position ``c0s[seg] + (t - q_offs[seg])`` of pool row
+    ``rows[seg]`` through that segment's table row — the packed analogue
+    of ``paged_prefill_write``, with every per-chunk scalar promoted to a
+    per-segment vector.  Tokens past their segment's ``valids`` (chunk
+    padding) or below its ``w_floors`` (host-promoted boundary remainder)
+    route to the sentinel block; distinct segments write distinct blocks
+    (the allocator never shares a non-sentinel block between admissions),
+    so the one fused scatter has no cross-segment collisions.
+
+    int8 pools dual-write each segment's last R blocks into ITS row's
+    ring tail (per-segment newest block from c0 + n_valid); invalid ring
+    writes route out of bounds and drop, exactly like the per-chunk
+    path."""
+    bs = cache["k"].shape[1]
+    T = k_new.shape[1]
+    t = jnp.arange(T, dtype=jnp.int32)
+    seg = seg_ids.astype(jnp.int32)
+    i = t - q_offs[seg]
+    p = c0s[seg] + i
+    valid = (i >= 0) & (i < valids[seg]) & (p >= w_floors[seg])
+    blk = jnp.where(valid, tables[seg, p // bs], 0)
+    off = p % bs
+    if is_quant_cache(cache):
+        kq, ks = _quantize_kv(k_new[0])
+        vq, vs = _quantize_kv(v_new[0])
+        R = cache["k_tail"].shape[1] // bs
+        wb = (c0s + valids - 1) // bs        # per-seg newest sealed block
+        ring_ok = valid & (p // bs > wb[seg] - R)
+        ring = jnp.where(ring_ok, (p // bs) % R * bs + off, R * bs)
+        return {
+            "k": cache["k"].at[blk, off].set(kq),
+            "v": cache["v"].at[blk, off].set(vq),
+            "k_scale": cache["k_scale"].at[blk, off].set(ks),
+            "v_scale": cache["v_scale"].at[blk, off].set(vs),
+            "k_tail": cache["k_tail"].at[rows[seg], ring].set(k_new[0],
+                                                              mode="drop"),
+            "v_tail": cache["v_tail"].at[rows[seg], ring].set(v_new[0],
+                                                              mode="drop"),
+            "block_tables": cache["block_tables"],
+        }
+    return {
+        "k": cache["k"].at[blk, off].set(k_new[0]),
+        "v": cache["v"].at[blk, off].set(v_new[0]),
+        "block_tables": cache["block_tables"],
+    }
+
+
+def attend_paged_prefill_packed(q, k_chunk, v_chunk, cache, rows, tables,
+                                c0s, w_floors, q_offs, seg_ids):
+    """Reference ragged packed multi-admission prefill attention: the
+    packed buffer's T queries (1, T, H, Dh) each attend their OWN
+    segment's history (pool positions < that segment's w_eff) through its
+    table row plus the same-segment slice of the packed chunk operands
+    (positions >= w_eff) — other segments' keys are masked out, so the
+    result is bit-for-bit ``attend_paged_prefill`` run per segment.
+    Treats each packed token as its own batch row for ``attend_direct``:
+    per-token history is the segment gather, per-token chunk validity is
+    the segment-equality mask.  int8 pools dequantize the history gather
+    and read each segment's last R history blocks from ITS row's fp ring
+    tail (per-segment w_eff recency gate), like the per-chunk
+    reference."""
+    _, T, H, Dh = q.shape
+    S, NBt = tables.shape
+    bs = cache["k"].shape[1]
+    Hkv = k_chunk.shape[2]
+    w_effs = jnp.maximum(w_floors, c0s)                  # (S,)
+    t = jnp.arange(T, dtype=jnp.int32)
+    seg = seg_ids.astype(jnp.int32)                      # (T,)
+    q_pos = c0s[seg] + (t - q_offs[seg])                 # (T,)
+    if is_quant_cache(cache):
+        k_hist = dequantize_vectors_jnp(cache["k"][tables],
+                                        cache["k_scale"][tables], q.dtype)
+        v_hist = dequantize_vectors_jnp(cache["v"][tables],
+                                        cache["v_scale"][tables], q.dtype)
+        R = cache["k_tail"].shape[1] // bs
+        hb = (w_effs - 1) // bs              # per-seg newest history block
+        ti = jnp.arange(NBt, dtype=jnp.int32)
+        recent = (ti[None] <= hb[:, None]) & (ti[None] > hb[:, None] - R)
+        tail_k = cache["k_tail"][rows].reshape(S, R, bs, Hkv, Dh)[:, ti % R]
+        tail_v = cache["v_tail"][rows].reshape(S, R, bs, Hkv, Dh)[:, ti % R]
+        sel = recent[:, :, None, None, None]
+        k_hist = jnp.where(sel, tail_k.astype(q.dtype), k_hist)
+        v_hist = jnp.where(sel, tail_v.astype(q.dtype), v_hist)
+    else:
+        k_hist = cache["k"][tables]          # (S, NBt, bs, Hkv, Dh)
+        v_hist = cache["v"][tables]
+    k_hist = k_hist.reshape(S, NBt * bs, Hkv, Dh).astype(q.dtype)
+    v_hist = v_hist.reshape(S, NBt * bs, Hkv, Dh).astype(q.dtype)
+    hist_pos = jnp.arange(NBt * bs, dtype=jnp.int32)
+    hp = jnp.where(hist_pos[None] < w_effs[:, None], hist_pos[None], -1)
+    # each token's keys: its segment's history + the whole packed chunk,
+    # with cross-segment (and below-w_eff) chunk slots masked to -1
+    cp = jnp.where((seg[None, :] == seg[:, None])
+                   & (q_pos[None, :] >= w_effs[seg][:, None]),
+                   q_pos[None, :], -1)                   # (T, T)
+    k_all = jnp.concatenate(
+        [k_hist[seg],
+         jnp.broadcast_to(k_chunk[0][None].astype(q.dtype),
+                          (T, T, Hkv, Dh))], axis=1)
+    v_all = jnp.concatenate(
+        [v_hist[seg],
+         jnp.broadcast_to(v_chunk[0][None].astype(q.dtype),
+                          (T, T, Hkv, Dh))], axis=1)
+    kv_pos = jnp.concatenate([hp[seg], cp], axis=1)      # (T, NBt*bs + T)
+    out = attend_direct(q[0][:, None], k_all, v_all, q_pos[:, None],
+                        kv_pos, causal=True)
+    return out.reshape(1, T, H, Dh)
+
+
 def _paged_gather_dequant(cache, dtype):
     """int8 pool -> per-row dense K/V (B, NBt*bs, Hkv, Dh): gather through
     the tables with dequant fused, then overlay the row's fp ring tail on
@@ -825,6 +938,37 @@ def _attn_prefill_paged(cfg: ModelConfig, p, x, cache, row, table_row, c0,
     cache = paged_prefill_write(cache, k, v, row, table_row, c0, w_floor,
                                 n_valid)
     out = out.reshape(B, C, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache
+
+
+def attn_prefill_packed(cfg: ModelConfig, p, x, cache, rows, tables, c0s,
+                        w_floors, valids, q_offs, seg_ids, *, rt=None):
+    """Ragged packed multi-admission prefill sublayer: x (1, T, d) is
+    EVERY pending admission's current chunk concatenated (segments
+    bs-aligned; token t of segment ``seg_ids[t]`` sits at absolute
+    position ``c0s[seg] + (t - q_offs[seg])`` of pool row
+    ``rows[seg]``).  Same attend-before-seal order as the per-chunk
+    path — in-chunk attention is exact even for int8 pools — but all
+    segments share ONE attention dispatch and ONE fused pool scatter."""
+    B, T, _ = x.shape
+    t = jnp.arange(T, dtype=jnp.int32)
+    seg = seg_ids.astype(jnp.int32)
+    positions = (c0s[seg] + (t - q_offs[seg]))[None]     # (1, T)
+    q, k, v = project_qkv(cfg, p, x, positions)
+    ax = paged_tp_axis(rt, cache)
+    if ax is not None:
+        return _tp_prefill_packed(cfg, p, q, k, v, cache, rows, tables,
+                                  c0s, w_floors, valids, q_offs, seg_ids,
+                                  rt, ax)
+    if rt is not None and rt.use_pallas:
+        out = _pallas_prefill_packed(cfg, q, k, v, cache, rows, tables,
+                                     c0s, w_floors, q_offs, seg_ids, rt)
+    else:
+        out = attend_paged_prefill_packed(q, k, v, cache, rows, tables,
+                                          c0s, w_floors, q_offs, seg_ids)
+    cache = paged_prefill_write_packed(cache, k, v, rows, tables, c0s,
+                                       w_floors, valids, q_offs, seg_ids)
+    out = out.reshape(B, T, cfg.num_heads * cfg.head_dim)
     return out @ p["wo"], cache
 
 
@@ -1025,6 +1169,28 @@ def _pallas_prefill_paged(cfg, q, k_chunk, v_chunk, cache, row, table_row,
         interpret=rt.pallas_interpret)
 
 
+def _pallas_prefill_packed(cfg, q, k_chunk, v_chunk, cache, rows, tables,
+                           c0s, w_floors, q_offs, seg_ids, rt):
+    """Build the per-query-tile [seg, c0, w_eff, qt0] descriptors from
+    the per-segment vectors (segments are bs-aligned, so tile qt's
+    segment is ``seg_ids[qt * bs]``) and dispatch the packed kernel."""
+    from repro.kernels import ops
+    bs = cache["k"].shape[1]
+    tile_seg = seg_ids[::bs].astype(jnp.int32)           # (QT,)
+    w_effs = jnp.maximum(w_floors, c0s)
+    desc = jnp.stack([tile_seg, c0s[tile_seg], w_effs[tile_seg],
+                      q_offs[tile_seg] // bs])
+    if is_quant_cache(cache):
+        return ops.paged_prefill_attention_packed_quant(
+            q, k_chunk, v_chunk, cache["k"], cache["v"],
+            cache["k_scale"], cache["v_scale"],
+            cache["k_tail"][rows], cache["v_tail"][rows],
+            tables, desc, interpret=rt.pallas_interpret)
+    return ops.paged_prefill_attention_packed(
+        q, k_chunk, v_chunk, cache["k"], cache["v"], tables, desc,
+        interpret=rt.pallas_interpret)
+
+
 def _pallas_verify_paged(cfg, q, k_chunk, v_chunk, cache, c0s, rt):
     from repro.kernels import ops
     if is_quant_cache(cache):
@@ -1149,6 +1315,38 @@ def _tp_prefill_paged(cfg, p, q, k, v, cache, row, table_row, c0, w_eff,
                      out_specs=(P(None, None, None), cs))
     return f(p["wo"], q, k, v, cache, row, table_row, c0, w_eff, w_floor,
              n_valid)
+
+
+def _tp_prefill_packed(cfg, p, q, k, v, cache, rows, tables, c0s, w_floors,
+                       valids, q_offs, seg_ids, rt, ax):
+    from jax.sharding import PartitionSpec as P
+    hs = P(None, None, ax, None)
+    cs = _paged_pool_specs(cache, ax)
+
+    def body(wo, q, k, v, cache, rows, tables, c0s, w_floors, valids,
+             q_offs, seg_ids):
+        if rt.use_pallas:
+            out = _pallas_prefill_packed(cfg, q, k, v, cache, rows, tables,
+                                         c0s, w_floors, q_offs, seg_ids,
+                                         rt)
+        else:
+            out = attend_paged_prefill_packed(q, k, v, cache, rows, tables,
+                                              c0s, w_floors, q_offs,
+                                              seg_ids)
+        cache = paged_prefill_write_packed(cache, k, v, rows, tables, c0s,
+                                           w_floors, valids, q_offs,
+                                           seg_ids)
+        out = out.reshape(out.shape[0], out.shape[1], -1)
+        y = jax.lax.psum(out @ wo, ax)
+        return y, cache
+
+    f = _shard_paged(body, rt,
+                     in_specs=(P(ax, None), hs, hs, hs, cs, P(None),
+                               P(None, None), P(None), P(None), P(None),
+                               P(None), P(None)),
+                     out_specs=(P(None, None, None), cs))
+    return f(p["wo"], q, k, v, cache, rows, tables, c0s, w_floors, valids,
+             q_offs, seg_ids)
 
 
 def _tp_verify_paged(cfg, p, q, k, v, cache, c0s, n_valid, act, rt, ax):

@@ -140,6 +140,50 @@ def prefill_paged(cfg: ModelConfig, params, tokens, pool, row, table_row,
     return logits, pool
 
 
+def prefill_paged_packed(cfg: ModelConfig, params, tokens, pool, rows,
+                         tables, c0s, w_floors, valids, q_offs, seg_ids,
+                         *, rt: Runtime = LOCAL):
+    """EVERY pending admission's current chunk in ONE ragged packed
+    dispatch (the multi-admission generalization of ``prefill_paged``).
+
+    ``tokens`` (1, T) concatenates each admission's fixed-size chunk
+    (segments bs-aligned, T padded to a bucket size).  Token t belongs to
+    segment ``seg_ids[t]`` and sits at absolute position
+    ``c0s[seg] + (t - q_offs[seg])`` of pool row ``rows[seg]``; positions
+    at or past ``valids[seg]`` within a segment are padding (sentinel
+    writes, garbage logits), and a whole padding SEGMENT (the buffer
+    tail) carries valids == 0 with an all-sentinel table row.  Because
+    every descriptor is a traced vector and the buffer/segment shapes are
+    fixed buckets, the compile count is independent of both suffix length
+    and the number of concurrent admissions.
+
+    Returns (per-SEGMENT last-valid-token logits (S, V), updated pool)."""
+    B, T = tokens.shape
+    x = params["embed"]["wte"][tokens]
+    rows = jnp.asarray(rows, jnp.int32)
+    tables = jnp.asarray(tables, jnp.int32)
+    c0s = jnp.asarray(c0s, jnp.int32)
+    w_floors = jnp.asarray(w_floors, jnp.int32)
+    valids = jnp.asarray(valids, jnp.int32)
+    q_offs = jnp.asarray(q_offs, jnp.int32)
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    t = jnp.arange(T, dtype=jnp.int32)
+    positions = (c0s[seg_ids] + (t - q_offs[seg_ids]))[None]    # (1, T)
+    pe = position_embedding(cfg, params["embed"], positions, x.dtype)
+    if pe is not None:
+        x = x + pe
+    if rt.mesh is not None and rt.batch_axes:
+        x = rt.hint(x, rt.batch_axes, None, None)
+    x, pool, _ = apply_stack(cfg, params, x, mode="prefill_packed",
+                             cache=pool,
+                             pos=(rows, tables, c0s, w_floors, valids,
+                                  q_offs, seg_ids),
+                             window=0, rt=rt)
+    last = jnp.take(x[0], jnp.clip(q_offs + valids - 1, 0, T - 1), axis=0)
+    logits = unembed(cfg, params, last[None], rt)[0]             # (S, V)
+    return logits, pool
+
+
 def verify_paged(cfg: ModelConfig, params, tokens, pool, c0s, n_valid,
                  act, *, rt: Runtime = LOCAL):
     """Batched multi-token speculative verification (ONE dispatch for

@@ -130,6 +130,11 @@ def _mix_attn(cfg, p, x, cache, *, mode, pos, window, rt):
     if mode == "verify":
         c0s, n_valid, act = pos
         return attn.attn_verify(cfg, p, x, cache, c0s, n_valid, act, rt=rt)
+    if mode == "prefill_packed":
+        rows, tables, c0s, w_floors, valids, q_offs, seg_ids = pos
+        return attn.attn_prefill_packed(cfg, p, x, cache, rows, tables,
+                                        c0s, w_floors, valids, q_offs,
+                                        seg_ids, rt=rt)
     return attn.attn_prefill(cfg, p, x, start_pos=pos, cache=cache,
                              window=window, rt=rt)
 

@@ -127,7 +127,8 @@ class Engine:
     def generate(self, prompt: str, *, max_new_tokens: Optional[int] = None,
                  use_recycling: bool = True, admit: bool = False,
                  stop_at_eos: bool = True, temperature: float = 0.0,
-                 top_k: int = 0) -> GenResult:
+                 top_k: int = 0,
+                 tenant: Optional[str] = None) -> GenResult:
         max_new = max_new_tokens or self.max_new
         t0 = time.perf_counter()
         ids = self.tok.encode(prompt)
@@ -194,10 +195,11 @@ class Engine:
                 # (without the generated reply) still pass the exact-prefix
                 # test; generated positions are masked out.
                 self.recycler.admit(prompt, ids, trim_to_depth(host, m),
-                                    m, cap)
+                                    m, cap, tenant=tenant)
             else:
                 # recurrent state can't rewind: admit the full trajectory
-                self.recycler.admit(prompt, all_ids, host, len(all_ids), cap)
+                self.recycler.admit(prompt, all_ids, host, len(all_ids), cap,
+                                    tenant=tenant)
 
         self.stats["requests"] += 1
         self.stats["hits"] += int(hit)
@@ -249,6 +251,7 @@ class _Slot:
     temperature: float = 0.0     # 0 = greedy (the paper's do_sample=False)
     top_k: int = 0
     step_times_s: list = field(default_factory=list)  # TPOT samples
+    tenant: Optional[str] = None  # labels admitted host entries (quotas)
 
 
 def _pool_load_row(pool, row, slot, tokens, pos, tok0, m):
@@ -393,7 +396,8 @@ class BatchedEngine(Engine):
                    max_new_tokens: Optional[int] = None,
                    use_recycling: bool = True, admit: bool = False,
                    stop_at_eos: bool = True, temperature: float = 0.0,
-                   top_k: int = 0) -> Optional[GenResult]:
+                   top_k: int = 0,
+                   tenant: Optional[str] = None) -> Optional[GenResult]:
         """Prefill ``prompt`` into pool row ``slot`` (recycled prefix when
         available).  Returns a GenResult immediately — leaving the slot
         free — iff the request finishes at its very first token."""
@@ -443,7 +447,7 @@ class BatchedEngine(Engine):
                    stop_at_eos, depth, hit, mode, sim,
                    emitted=[int(tok0[0])], t0=t0,
                    t_first=time.perf_counter(),
-                   temperature=temperature, top_k=top_k)
+                   temperature=temperature, top_k=top_k, tenant=tenant)
         if (st.stop_at_eos and st.emitted[0] == EOS) or max_new == 1:
             # finished at the first token: never occupies the pool
             return self._result(st, host_cache=lambda: to_host(cache))
@@ -499,7 +503,8 @@ class BatchedEngine(Engine):
                 host = shrink_capacity(host, cap)
             else:
                 cap = self.capacity
-            self.recycler.admit(st.prompt, st.ids, host, st.m, cap)
+            self.recycler.admit(st.prompt, st.ids, host, st.m, cap,
+                                tenant=st.tenant)
         return GenResult(
             text=self.tok.decode(st.emitted),
             token_ids=all_ids,

@@ -78,7 +78,7 @@ from repro.core.recycler import GraftPlan, grow_capacity
 from repro.data.tokenizer import EOS
 from repro.models import (decode_step, draft_refine, draft_view,
                           init_cache, init_paged_pool, paged_block_bytes,
-                          prefill_paged, verify_paged)
+                          prefill_paged, prefill_paged_packed, verify_paged)
 from repro.serving import engine as engine_mod
 from repro.serving.engine import Engine, GenResult, _Slot
 from repro.serving.sampling import sample_batched, sample_logits
@@ -86,6 +86,67 @@ from repro.serving.sampling import sample_batched, sample_logits
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def pack_admission_segments(segs, *, block_size: int, buckets,
+                            max_segments: int, table_width: int):
+    """Build the ragged packed-prefill descriptor batch from per-admission
+    chunk segments — the pure (numpy in, numpy out) heart of
+    ``prefill_mode="packed"``, property-tested standalone.
+
+    ``segs`` is a list of per-admission tuples ``(row, table_row, c0,
+    w_floor, n_valid, C, tokens)``: pool row, host table mirror (NBt,),
+    block-aligned chunk start, write floor, valid token count, chunk
+    width (a multiple of ``block_size``), and the ``n_valid`` prompt ids.
+    Segments are laid out back to back in the packed token buffer, each
+    occupying exactly ``C`` positions (tokens past ``n_valid`` are
+    padding), and the buffer is padded up to the smallest bucket in
+    ``buckets`` that fits — so the dispatch shape depends only on the
+    bucket ladder, never on the segment count or any suffix length.
+
+    Descriptor arrays are fixed at ``max_segments + 1`` entries: index
+    ``len(segs)`` is the dedicated PADDING segment (row 0, all-sentinel
+    table, c0 = w_floor = valid = 0) whose ``q_off`` is the pack end, so
+    pad tokens get small in-range positions, attend only the pad region,
+    and write only the sentinel scratch block.
+
+    Returns ``{"tokens" (1, T), "rows", "tables", "c0s", "w_floors",
+    "valids", "q_offs" (all (S,)), "seg_ids" (T,)}`` with S =
+    max_segments + 1."""
+    assert 0 < len(segs) <= max_segments, (len(segs), max_segments)
+    S = max_segments + 1
+    total = sum(C for (_, _, _, _, _, C, _) in segs)
+    T = next((b for b in sorted(buckets) if b >= total), None)
+    if T is None:
+        raise ValueError(f"packed total {total} exceeds largest bucket "
+                         f"{max(buckets)}")
+    tokens = np.zeros((1, T), np.int32)
+    rows = np.zeros((S,), np.int32)
+    tables = np.full((S, table_width), SENTINEL, np.int32)
+    c0s = np.zeros((S,), np.int32)
+    w_floors = np.zeros((S,), np.int32)
+    valids = np.zeros((S,), np.int32)
+    # unused / padding segments: q_off at the pack end so every pad
+    # token's position (t - q_off) stays small and in range
+    q_offs = np.full((S,), total, np.int32)
+    seg_ids = np.full((T,), len(segs), np.int32)
+    off = 0
+    for i, (row, table_row, c0, w_floor, n_valid, C, toks) in \
+            enumerate(segs):
+        assert C % block_size == 0 and 0 < n_valid <= C, (C, n_valid)
+        assert c0 % block_size == 0, c0
+        rows[i] = row
+        tables[i] = table_row
+        c0s[i] = c0
+        w_floors[i] = w_floor
+        valids[i] = n_valid
+        q_offs[i] = off
+        seg_ids[off:off + C] = i
+        tokens[0, off:off + n_valid] = toks
+        off += C
+    return {"tokens": tokens, "rows": rows, "tables": tables, "c0s": c0s,
+            "w_floors": w_floors, "valids": valids, "q_offs": q_offs,
+            "seg_ids": seg_ids}
 
 
 # ---------------------------------------------------------------------------
@@ -469,7 +530,7 @@ class PagedEngine(Engine):
                                     quant=self.kv_quant,
                                     fp_tail_blocks=fp_tail_blocks,
                                     mesh=self.rt.mesh)
-        if prefill_mode not in ("chunked", "staged"):
+        if prefill_mode not in ("chunked", "staged", "packed"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.prefill_mode = prefill_mode
         # semantic block-donor recycling (beyond paper; SemShareKV +
@@ -481,7 +542,9 @@ class PagedEngine(Engine):
         self.semantic = bool(getattr(self.recycler, "semantic", False))
         self.graft_max_div = graft_max_div
         self.semantic_gate_divs: List[float] = []
-        if self.semantic and prefill_mode == "staged":
+        if self.semantic and prefill_mode != "chunked":
+            # packed admissions advance every pending chunk in one fused
+            # dispatch and have no per-admission segment walk to ride
             raise ValueError("semantic grafting requires "
                              "prefill_mode='chunked'")
         if prefill_chunk is None:
@@ -505,6 +568,14 @@ class PagedEngine(Engine):
         # how many distinct suffix lengths arrive.
         self.chunk_shapes = sorted({s for s in (bs, 2 * bs, prefill_chunk)
                                     if s <= prefill_chunk})
+        # packed-admission buffer buckets: every pending admission's chunk
+        # lands in ONE ragged buffer per engine step, padded to the
+        # smallest bucket that fits.  One bucket per chunk shape (its
+        # width times the worst-case segment count) keeps the compile
+        # budget at <= len(chunk_shapes) executables per quant mode —
+        # independent of suffix length AND concurrent-admission count.
+        self.packed_buckets = sorted({c * self.max_batch
+                                      for c in self.chunk_shapes})
         self.prealloc_watermark = prealloc_watermark
         # self-speculative decoding (PR 7): the same weights draft gamma
         # tokens against a sparse sink+recent block view — refined by
@@ -568,6 +639,10 @@ class PagedEngine(Engine):
         # chunked-admission executables: ONE compiled prefill shape
         # (prefill_chunk is fixed; row / start / valid are traced scalars)
         self._chunk_fn = jax.jit(self._chunk_prefill, donate_argnums=(2,))
+        # packed-admission executable: ONE dispatch advances EVERY pending
+        # admission's chunk (ragged buffer + per-segment descriptors; one
+        # compile per packed bucket)
+        self._packed_fn = jax.jit(self._packed_prefill, donate_argnums=(2,))
         self._setents_batch_fn = jax.jit(_set_table_entries,
                                          donate_argnums=(0,))
         self._upload_blk_fn = jax.jit(_upload_fp_block, donate_argnums=(0,))
@@ -593,6 +668,7 @@ class PagedEngine(Engine):
             "h2d_copies": 0, "h2d_bytes": 0, "trie_evictions": 0,
             "layout_conversions": 0,
             "q8_block_promotions": 0, "prefill_chunks": 0,
+            "prefill_packed_steps": 0, "prefill_dispatches": 0,
             "staging_prefills": 0, "spec_preallocs": 0,
             "spec_rounds": 0, "spec_draft_tokens": 0,
             "spec_accepted_tokens": 0, "spec_emitted_tokens": 0,
@@ -706,6 +782,12 @@ class PagedEngine(Engine):
                        w_floor, n_valid):
         return prefill_paged(self.cfg, params, tokens, pool, row,
                              table_row, c0, w_floor, n_valid, rt=self.rt)
+
+    def _packed_prefill(self, params, tokens, pool, rows, tables, c0s,
+                        w_floors, valids, q_offs, seg_ids):
+        return prefill_paged_packed(self.cfg, params, tokens, pool, rows,
+                                    tables, c0s, w_floors, valids, q_offs,
+                                    seg_ids, rt=self.rt)
 
     # ------------------------------------------------------------------
     # self-speculative decoding (drafter == target; sparse-view draft)
@@ -940,9 +1022,11 @@ class PagedEngine(Engine):
         ``len(self.chunk_shapes)`` (one per fixed chunk shape) —
         independent of how many distinct suffix lengths were admitted —
         where the staged path compiles one per (suffix length, capacity
-        bucket)."""
-        fn = (self._chunk_fn if self.prefill_mode == "chunked"
-              else self._prefill_fn)
+        bucket).  The packed path is bounded by ``len(self.packed_buckets)``
+        — also independent of how many admissions ran CONCURRENTLY."""
+        fn = {"chunked": self._chunk_fn,
+              "packed": self._packed_fn}.get(self.prefill_mode,
+                                             self._prefill_fn)
         try:
             return fn._cache_size()
         except AttributeError:  # pragma: no cover - older jax
@@ -1073,7 +1157,8 @@ class PagedEngine(Engine):
                    max_new_tokens: Optional[int] = None,
                    use_recycling: bool = True, admit: bool = False,
                    stop_at_eos: bool = True, temperature: float = 0.0,
-                   top_k: int = 0) -> Optional[GenResult]:
+                   top_k: int = 0,
+                   tenant: Optional[str] = None) -> Optional[GenResult]:
         """Admit ``prompt`` into pool row ``slot``.
 
         ``prefill_mode="chunked"`` (default): the admission is queued as a
@@ -1084,6 +1169,10 @@ class PagedEngine(Engine):
         the resident-prefix gather and the post-prefill scatter of the
         staged path do not exist on this route, and one compiled prefill
         executable PER FIXED CHUNK SHAPE serves every suffix length.
+
+        ``prefill_mode="packed"`` queues the admission identically, but
+        ``decode_batch`` advances ALL pending admissions' chunks in ONE
+        ragged packed dispatch per step (``_admission_step_packed``).
 
         ``prefill_mode="staged"`` keeps the original path (one dense
         prefill over a full-capacity staging cache, gathered from /
@@ -1097,18 +1186,19 @@ class PagedEngine(Engine):
         if m + max_new > self.capacity:
             raise ValueError(f"request needs {m + max_new} positions; pool "
                              f"capacity is {self.capacity}")
-        if self.prefill_mode == "chunked":
+        if self.prefill_mode in ("chunked", "packed"):
             return self._admit_chunked(slot, prompt, ids, m, max_new,
                                        use_recycling, admit, stop_at_eos,
-                                       temperature, top_k, t0)
+                                       temperature, top_k, t0, tenant)
         return self._admit_staged(slot, prompt, ids, m, max_new,
                                   use_recycling, admit, stop_at_eos,
-                                  temperature, top_k, t0)
+                                  temperature, top_k, t0, tenant)
 
     def _admit_staged(self, slot: int, prompt: str, ids, m: int,
                       max_new: int, use_recycling: bool, admit: bool,
                       stop_at_eos: bool, temperature: float, top_k: int,
-                      t0: float) -> Optional[GenResult]:
+                      t0: float,
+                      tenant: Optional[str] = None) -> Optional[GenResult]:
         """The PR-2 admission path: L1 block-table reuse when the prefix
         is device-resident, else L2 host promotion, else a cold prefill —
         all through one staged dense prefill whose result is scattered
@@ -1166,6 +1256,7 @@ class PagedEngine(Engine):
         suffix = jnp.asarray(ids[depth:])[None]
         logits, stage = self._prefill_fn(self.params, suffix, stage, depth)
         self.stats["staging_prefills"] += 1
+        self.stats["prefill_dispatches"] += 1
 
         # ---- scatter the fresh region [start, m) into private blocks --
         # A quantized host entry's full int8 blocks are promoted verbatim
@@ -1214,7 +1305,7 @@ class PagedEngine(Engine):
                    stop_at_eos, depth, hit, mode, sim,
                    emitted=[int(tok0[0])], t0=t0,
                    t_first=time.perf_counter(),
-                   temperature=temperature, top_k=top_k)
+                   temperature=temperature, top_k=top_k, tenant=tenant)
         if (st.stop_at_eos and st.emitted[0] == EOS) or max_new == 1:
             # finished at its first token: the prompt prefix stays warm in
             # L1, but the row is never occupied
@@ -1242,7 +1333,7 @@ class PagedEngine(Engine):
     def _admit_chunked(self, slot: int, prompt: str, ids, m: int,
                       max_new: int, use_recycling: bool, admit: bool,
                       stop_at_eos: bool, temperature: float, top_k: int,
-                      t0: float) -> None:
+                      t0: float, tenant: Optional[str] = None) -> None:
         """Queue ``prompt`` as a pending chunked admission on row
         ``slot``.  Only the admission *guarantee* runs here (can the pool
         ever provide this request's blocks without starving in-flight
@@ -1263,7 +1354,8 @@ class PagedEngine(Engine):
         self._row_blocks[slot] = []
         st = _Slot(prompt, ids, m, max_new, use_recycling, admit,
                    stop_at_eos, 0, False, "baseline", 0.0, emitted=[],
-                   t0=t0, temperature=temperature, top_k=top_k)
+                   t0=t0, temperature=temperature, top_k=top_k,
+                   tenant=tenant)
         self._pending[slot] = _PendingAdmission(st=st)
         return None
 
@@ -1541,6 +1633,7 @@ class PagedEngine(Engine):
             jnp.asarray(self._tables[slot]), jnp.int32(c0),
             jnp.int32(adm.w_floor), jnp.int32(n_valid))
         self.stats["prefill_chunks"] += 1
+        self.stats["prefill_dispatches"] += 1
         # progressive L1 registration: blocks this chunk sealed become
         # shareable immediately — a neighbor admitted this same step can
         # compose its table from them at ITS first chunk.  ``reg_cap``
@@ -1563,6 +1656,73 @@ class PagedEngine(Engine):
             return
         if adm.next_c0 >= st.m:
             self._finish_admission(slot, logits)
+
+    def _admission_step_packed(self) -> None:
+        """Advance EVERY pending admission by one chunk in ONE ragged
+        packed dispatch — the ``prefill_mode="packed"`` replacement for
+        the per-admission ``_admission_chunk`` loop.  Host-side per-
+        segment work (tier lookup on first step, chunk sizing, block
+        allocation, table-mirror updates) runs exactly as the chunked
+        path does it; then all segments' tokens are packed back to back
+        into one bucket-shaped buffer with per-segment descriptors
+        (``pack_admission_segments``) and ``_packed_fn`` runs the whole
+        step's prefill in a single executable.  Per-segment bookkeeping
+        (progressive L1 registration, ``next_c0`` advance, admission
+        finish off the segment's own last-valid logits) follows.
+
+        Equivalence to the chunked path is exact: each segment's queries
+        attend only its own history + chunk (segment-masked kernel), and
+        distinct segments write disjoint pool blocks, so tokens are
+        identical — only the dispatch count changes (1 per step vs 1 per
+        pending admission)."""
+        slots = sorted(self._pending)
+        if not slots:
+            return
+        bs = self.block
+        segs = []
+        metas = []
+        for slot in slots:
+            adm = self._pending[slot]
+            st = adm.st
+            if not adm.started:
+                self._begin_admission(slot, adm)
+            c0 = adm.next_c0
+            remaining = st.m - c0
+            C = next((s for s in self.chunk_shapes if s >= remaining),
+                     self.prefill_chunk)
+            n_valid = min(C, remaining)
+            for idx in range(c0 // bs, (c0 + n_valid - 1) // bs + 1):
+                if self._tables[slot][idx] == SENTINEL:
+                    b = self._alloc_block()
+                    self._tables[slot][idx] = b
+                    self._committed[slot] -= 1
+            self._row_blocks[slot] = [int(x) for x in self._tables[slot]
+                                      if x != SENTINEL]
+            segs.append((slot, self._tables[slot].copy(), c0, adm.w_floor,
+                         n_valid, C, st.ids[c0:c0 + n_valid]))
+            metas.append((slot, adm, c0, n_valid))
+        pk = pack_admission_segments(
+            segs, block_size=bs, buckets=self.packed_buckets,
+            max_segments=self.max_batch, table_width=self.nbt)
+        logits, self.pool = self._packed_fn(
+            self.params, jnp.asarray(pk["tokens"]), self.pool,
+            jnp.asarray(pk["rows"]), jnp.asarray(pk["tables"]),
+            jnp.asarray(pk["c0s"]), jnp.asarray(pk["w_floors"]),
+            jnp.asarray(pk["valids"]), jnp.asarray(pk["q_offs"]),
+            jnp.asarray(pk["seg_ids"]))
+        self.stats["prefill_chunks"] += len(segs)
+        self.stats["prefill_packed_steps"] += 1
+        self.stats["prefill_dispatches"] += 1
+        for i, (slot, adm, c0, n_valid) in enumerate(metas):
+            st = adm.st
+            reg_len = min(c0 + n_valid, adm.reg_cap)
+            if reg_len > 0:
+                for b in self.trie.register(st.ids, reg_len,
+                                            self._row_blocks[slot]):
+                    self.allocator.ref(b)
+            adm.next_c0 = c0 + n_valid
+            if adm.next_c0 >= st.m:
+                self._finish_admission(slot, logits[i:i + 1])
 
     def _finish_admission(self, slot: int, logits) -> None:
         """Final chunk done: sample the first token, install the row's
@@ -1687,8 +1847,12 @@ class PagedEngine(Engine):
         ``prealloc_watermark`` positions of their block boundary have the
         NEXT block speculatively reserved, so table updates arrive in one
         batched dispatch instead of firing per row per boundary."""
-        for slot in sorted(self._pending):
-            self._admission_chunk(slot)
+        if self.prefill_mode == "packed":
+            # ALL pending admissions advance in ONE ragged packed dispatch
+            self._admission_step_packed()
+        else:
+            for slot in sorted(self._pending):
+                self._admission_chunk(slot)
         done: List[Tuple[int, GenResult]] = []
         for i in self.active_slots():
             st = self._slots[i]
@@ -1794,7 +1958,8 @@ class PagedEngine(Engine):
                 # instant finish: the staging cache already holds exactly
                 # [0, m) — generated positions were never written into it
                 host = to_host(stage)
-            self.recycler.admit(st.prompt, st.ids, host, st.m, cap)
+            self.recycler.admit(st.prompt, st.ids, host, st.m, cap,
+                                tenant=st.tenant)
         all_ids = np.concatenate([st.ids, np.asarray(st.emitted, np.int32)])
         return GenResult(
             text=self.tok.decode(st.emitted),

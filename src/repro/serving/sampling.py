@@ -26,8 +26,48 @@ def sample_logits(logits, rng, *, temperature: float = 1.0, top_k: int = 0):
     return jax.random.categorical(rng, logits).astype(jnp.int32)
 
 
+def _static_off(x, off) -> bool:
+    """True when a penalty parameter is STATICALLY known to be inert
+    (python/numpy scalar equal to its no-op value) — lets the zero-penalty
+    fast paths below stay untouched without tracing a data-dependent
+    branch."""
+    if isinstance(x, jax.core.Tracer):
+        return False
+    try:
+        import numpy as _np
+        return bool(_np.all(_np.asarray(x) == off))
+    except Exception:          # pragma: no cover - exotic array types
+        return False
+
+
+def apply_penalties(logits, gen_tokens, *, repetition_penalty=1.0,
+                    presence_penalty=0.0):
+    """Per-row repetition / presence penalties over each row's OWN
+    generated-token set: logits (B, V), ``gen_tokens`` (B, G) int32 with
+    -1 padding for rows that generated fewer than G tokens.
+
+    One fused scatter builds the (B, V) seen-mask — tokens < 0 land in a
+    dummy column V that is sliced away, so padding never penalises token
+    0.  Repetition penalty follows the CTRL convention (divide positive
+    logits, multiply negative); presence penalty subtracts a flat amount
+    from every seen token.  Both accept a scalar or per-row (B,) vector;
+    rows at (1.0, 0.0) are returned bit-identical."""
+    B, V = logits.shape
+    rp = jnp.broadcast_to(jnp.asarray(repetition_penalty, jnp.float32), (B,))
+    pp = jnp.broadcast_to(jnp.asarray(presence_penalty, jnp.float32), (B,))
+    tok = jnp.asarray(gen_tokens, jnp.int32)
+    tok = jnp.where(tok >= 0, tok, V)           # padding -> dummy column
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    seen = jnp.zeros((B, V + 1), jnp.bool_).at[rows, tok].set(True)[:, :V]
+    pen = jnp.where(logits > 0, logits / rp[:, None], logits * rp[:, None])
+    pen = pen - pp[:, None]
+    active = (rp != 1.0) | (pp != 0.0)          # zero-penalty rows exact
+    return jnp.where(seen & active[:, None], pen, logits)
+
+
 def sample_batched(logits, rng, *, temperature=0.0, top_k=0,
-                   top_k_cap: int = 64):
+                   top_k_cap: int = 64, repetition_penalty=1.0,
+                   presence_penalty=0.0, gen_tokens=None):
     """Per-row sampling for the slot/paged pools: logits (B, V) -> (B,).
 
     ``temperature`` may be a scalar or a per-row (B,) vector — rows at
@@ -40,7 +80,21 @@ def sample_batched(logits, rng, *, temperature=0.0, top_k=0,
     filter).  Per-row k is dynamic, so one sort of the top ``top_k_cap``
     (static) logits serves every row; callers that know the batch's max k
     should pass it as the cap (the pool engines do) — a row asking for
-    k > top_k_cap is clamped to the cap."""
+    k > top_k_cap is clamped to the cap.
+
+    ``repetition_penalty`` / ``presence_penalty`` (scalar or per-row (B,))
+    reshape the logits over each row's generated-token set ``gen_tokens``
+    (B, G; -1-padded) BEFORE the greedy/temperature split, so penalties
+    affect greedy rows too; when both are statically inert (1.0 / 0.0) the
+    transform is skipped entirely and every fast path below — including
+    bit-identical greedy — is preserved."""
+    penalties_on = gen_tokens is not None and not (
+        _static_off(repetition_penalty, 1.0)
+        and _static_off(presence_penalty, 0.0))
+    if penalties_on:
+        logits = apply_penalties(logits, gen_tokens,
+                                 repetition_penalty=repetition_penalty,
+                                 presence_penalty=presence_penalty)
     if isinstance(temperature, (int, float)) and temperature <= 0.0:
         return greedy(logits)                # static shortcut: trace-safe
     if not isinstance(temperature, jax.core.Tracer):

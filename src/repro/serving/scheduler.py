@@ -53,13 +53,31 @@ class Request:
     # freely in one pool dispatch (engine `sample_batched`).
     temperature: float = 0.0
     top_k: int = 0
+    # owner for per-tenant L2 byte quotas (threaded engine -> recycler ->
+    # HostKVStore; the scheduler's quota check reads the same accounting)
+    tenant: Optional[str] = None
     submitted_at: float = field(default_factory=time.perf_counter)
+    # SLO clock: enqueue_t stamps at submit (== submitted_at, kept under
+    # both names for back-compat), admit_t when a slot is taken,
+    # first_token_t when the first token lands.  core.metrics.slo_summary
+    # consumes these.
+    enqueue_t: float = field(default_factory=time.perf_counter)
+    admit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
     result: Optional[GenResult] = None
     error: Optional[str] = None          # set when admission rejects it
+    _ids: Optional[object] = field(default=None, repr=False)  # encode memo
 
     @property
     def done(self) -> bool:
         return self.result is not None or self.error is not None
+
+    @property
+    def queue_delay_s(self) -> Optional[float]:
+        """Seconds spent queued before admission (None until admitted)."""
+        if self.admit_t is None:
+            return None
+        return self.admit_t - self.enqueue_t
 
 
 class FIFOScheduler:
@@ -88,10 +106,13 @@ class FIFOScheduler:
         served = []
         while self._queue and len(served) < self.max_batch:
             req = self._queue.popleft()
+            req.admit_t = time.perf_counter()
             req.result = self.engine.generate(
                 req.prompt, max_new_tokens=req.max_new_tokens,
                 use_recycling=req.use_recycling, admit=req.admit,
-                temperature=req.temperature, top_k=req.top_k)
+                temperature=req.temperature, top_k=req.top_k,
+                tenant=req.tenant)
+            req.first_token_t = req.admit_t + req.result.ttft_s
             served.append(req)
             self.completed.append(req)
         return served
@@ -106,14 +127,32 @@ class ContinuousBatchingScheduler:
     """Admission policy + slot allocator over a ``BatchedEngine`` pool."""
 
     def __init__(self, engine: BatchedEngine, *,
-                 max_admissions_per_step: Optional[int] = None):
+                 max_admissions_per_step: Optional[int] = None,
+                 admission_policy: str = "fifo",
+                 tenant_quotas: Optional[Dict[str, int]] = None):
         self.engine = engine
         # at most this many single-row prefills per step before decoding;
         # None = fill every free slot (prefill-heavy but maximal occupancy)
         if max_admissions_per_step is not None and max_admissions_per_step < 1:
             raise ValueError("max_admissions_per_step must be >= 1 (0 would "
                              "make run() spin forever admitting nothing)")
+        if admission_policy not in ("fifo", "cache_aware"):
+            raise ValueError(f"unknown admission_policy {admission_policy!r}")
         self.max_admissions = max_admissions_per_step
+        # "fifo" refills strictly in arrival order; "cache_aware" prefers
+        # the queued request with the DEEPEST resident prefix in the
+        # engine's block trie (``trie.peek`` — recency untouched), so warm
+        # requests admit with near-zero prefill work while the batch is
+        # hot.  FIFO breaks ties (strict > comparison), so a queue of
+        # all-cold requests degenerates to exact FIFO — no starvation of
+        # equally-cold requests, though a steady warm stream can delay a
+        # cold one (that's the policy's documented trade).
+        self.admission_policy = admission_policy
+        # tenant -> max L2 (HostKVStore) bytes.  Enforced at ADMIT time:
+        # an over-quota tenant's request still decodes, but its
+        # ``admit=True`` is downgraded so it cannot grow the store
+        # further.  Serving is never rejected on quota.
+        self.tenant_quotas = tenant_quotas
         self._queue: Deque[Request] = deque()
         self._next_id = 0
         self._free: List[int] = engine.free_slots()
@@ -121,7 +160,8 @@ class ContinuousBatchingScheduler:
         self.completed: List[Request] = []
         self.stats = {"decode_steps": 0, "admissions": 0,
                       "instant_finishes": 0, "slot_reuses": 0,
-                      "rejected": 0, "occupancy_sum": 0}
+                      "rejected": 0, "occupancy_sum": 0,
+                      "quota_denied_admits": 0, "cache_aware_picks": 0}
 
     # ------------------------------------------------------------------
     def submit(self, prompt: str, **kw) -> Request:
@@ -134,20 +174,62 @@ class ContinuousBatchingScheduler:
         return len(self._queue)
 
     # ------------------------------------------------------------------
+    def _pop_next(self) -> Request:
+        """Select and remove the next request to admit.  FIFO pops the
+        queue head; cache_aware scans the queue for the deepest resident
+        prefix in the engine's block trie (peek — no recency stamp) and
+        falls back to FIFO when the engine has no trie/tokenizer or
+        nothing queued is warm (strict > keeps arrival order on ties)."""
+        if self.admission_policy == "cache_aware" and len(self._queue) > 1:
+            trie = getattr(self.engine, "trie", None)
+            tok = getattr(self.engine, "tok", None)
+            if trie is not None and tok is not None:
+                best_i, best_d = 0, -1
+                for i, req in enumerate(self._queue):
+                    if req._ids is None:
+                        req._ids = tok.encode(req.prompt)
+                    depth, _ = trie.peek(req._ids)
+                    if depth > best_d:
+                        best_i, best_d = i, depth
+                if best_i > 0:
+                    self.stats["cache_aware_picks"] += 1
+                    req = self._queue[best_i]
+                    del self._queue[best_i]
+                    return req
+        return self._queue.popleft()
+
+    def _admit_allowed(self, req: Request) -> bool:
+        """Admit-time quota gate: False when the request's tenant is at or
+        over its L2 byte quota (serving still proceeds, admission to the
+        host store is what gets denied)."""
+        if not req.admit or not self.tenant_quotas or req.tenant is None:
+            return req.admit
+        quota = self.tenant_quotas.get(req.tenant)
+        if quota is None:
+            return True
+        store = getattr(getattr(self.engine, "recycler", None), "store", None)
+        if store is None or store.tenant_usage(req.tenant) < quota:
+            return True
+        self.stats["quota_denied_admits"] += 1
+        return False
+
     def _admit(self) -> List[Request]:
-        """Fill free slots from the queue head; returns requests that
+        """Fill free slots from the queue; returns requests that
         completed during admission (rejections and instant finishes)."""
         done: List[Request] = []
         budget = (len(self._free) if self.max_admissions is None
                   else min(self.max_admissions, len(self._free)))
         while self._queue and budget > 0:
             slot = self._free.pop()
-            req = self._queue.popleft()
+            req = self._pop_next()
+            req.admit_t = time.perf_counter()
             try:
                 res = self.engine.admit_slot(
                     slot, req.prompt, max_new_tokens=req.max_new_tokens,
-                    use_recycling=req.use_recycling, admit=req.admit,
-                    temperature=req.temperature, top_k=req.top_k)
+                    use_recycling=req.use_recycling,
+                    admit=self._admit_allowed(req),
+                    temperature=req.temperature, top_k=req.top_k,
+                    tenant=req.tenant)
             except ValueError as e:
                 # reject THIS request (e.g. longer than the pool capacity)
                 # without dropping the rest of the queue or the slot
@@ -165,6 +247,8 @@ class ContinuousBatchingScheduler:
             #                prefill ran, or chunk steps were queued)
             if res is not None:                       # finished at token 0
                 req.result = res
+                if res.ttft_s and res.ttft_s > 0.0:
+                    req.first_token_t = req.admit_t + res.ttft_s
                 self.completed.append(req)
                 self.stats["instant_finishes"] += 1
                 self._free.append(slot)
@@ -183,6 +267,13 @@ class ContinuousBatchingScheduler:
         for slot, result in self.engine.decode_batch():
             req = self.in_flight.pop(slot)
             req.result = result
+            # first-token wall time, reconstructed from the engine's TTFT
+            # measurement relative to this request's admit stamp (the
+            # engine measures TTFT from its own admission start, which is
+            # within one step() of admit_t — documented approximation)
+            if (req.admit_t is not None and result.ttft_s
+                    and result.ttft_s > 0.0):
+                req.first_token_t = req.admit_t + result.ttft_s
             self.completed.append(req)
             finished.append(req)
             if self._queue:
