@@ -244,6 +244,21 @@ def main():
                          "replica, and the warm cross-replica pass "
                          "promoted blocks instead of recomputing (CI "
                          "gate; implies --mesh 2x2)")
+    ap.add_argument("--overload", action="store_true",
+                    help="also run the overload workload: the standard "
+                         "request mix against an UNDERSIZED overcommitted "
+                         "block pool (forced preemptions with exact "
+                         "resume) plus a bounded-queue pass (typed "
+                         "sheds), recording preemption/requeue/shed "
+                         "counts, recomputed tokens and the pressure "
+                         "slo_summary rows")
+    ap.add_argument("--check-preempt", action="store_true",
+                    help="fail (exit 1) unless every non-shed overload "
+                         "request completes token-identical to the "
+                         "uncapped run, at least one preemption actually "
+                         "fired, pool invariants hold after the run, and "
+                         "shed requests carry typed outcomes (CI gate; "
+                         "implies --overload)")
     ap.add_argument("--json-out", default="BENCH_continuous_batching.json")
     args = ap.parse_args()
     if args.smoke:
@@ -770,6 +785,105 @@ def main():
                     and rn["tokens_identical"],
             })
 
+    if args.overload or args.check_preempt:
+        # Overload workload: same request mix, but the paged pool is
+        # deliberately undersized so decode writes and admission chunks
+        # run out of blocks mid-flight.  The pressure-safe claim under
+        # test: the engine preempts victims (demote to host L2, requeue,
+        # exact resume) instead of failing the step, so every request
+        # still completes with tokens identical to the uncapped run —
+        # the only cost is recomputed tokens and extra wall time.  A
+        # second pass bounds the queue to prove sheds are typed data,
+        # not exceptions.
+        from repro.core.metrics import slo_summary
+        from repro.serving.scheduler import RequestOutcome
+        b = args.batches[-1]
+        over_prompts = workload(min(args.requests, 6))
+        # blocks for roughly ONE full row (capacity/8 at block_size 8):
+        # b concurrent rows cannot all be resident, and completed-row
+        # frees plus trie eviction cannot hide the pressure
+        overload_blocks = max(10, args.capacity // 8)
+
+        def _overload_run(num_blocks):
+            eng_kw = {}
+            if num_blocks is not None:
+                eng_kw = {"num_blocks": num_blocks, "overcommit": True}
+            peng = PagedEngine(cfg, params, max_batch=b,
+                               capacity=args.capacity,
+                               max_new_tokens=args.max_new, block_size=8,
+                               enable_partial=True, prefill_mode="chunked",
+                               **eng_kw)
+            peng.precache(CACHED)
+            sched = ContinuousBatchingScheduler(peng)
+            reqs = [sched.submit(p, max_new_tokens=args.max_new)
+                    for p in over_prompts]
+            t0 = time.perf_counter()
+            sched.run()
+            dt = time.perf_counter() - t0
+            return peng, sched, reqs, dt
+
+        ref_eng, _, ref_reqs, _ = _overload_run(None)
+        ref_text = {p: r.result.text for p, r in zip(over_prompts,
+                                                     ref_reqs)}
+        peng, sched, reqs, dt = _overload_run(overload_blocks)
+        invariants_ok = True
+        try:
+            peng.check_invariants()
+        except AssertionError:
+            invariants_ok = False
+        mismatched = [p for p, r in zip(over_prompts, reqs)
+                      if r.outcome != RequestOutcome.OK
+                      or r.result.text != ref_text[p]]
+        served = [r.result for r in reqs if r.result is not None]
+        slo = slo_summary(served, reqs)
+        rows.append({
+            "config": f"overload_b{b}",
+            "wall_s": dt,
+            "gen_tokens": sum(r.gen_tokens for r in served),
+            "tokens_per_s": sum(r.gen_tokens for r in served) / dt,
+            "speedup": (sum(r.gen_tokens for r in served) / dt)
+                / serial_tps,
+            "num_blocks": overload_blocks,
+            "preemptions": peng.stats["preemptions"],
+            "preempt_errors": peng.stats["preempt_errors"],
+            "step_rollbacks": peng.stats["step_rollbacks"],
+            "tokens_recomputed":
+                peng.stats["preempted_tokens_recomputed"],
+            "requeues": sched.stats["preemptions"],
+            "admissions_deferred": sched.stats["admissions_deferred"],
+            "preemption_rate": slo["preemption_rate"],
+            "tokens_identical": not mismatched,
+            "invariants_ok": invariants_ok,
+        })
+
+        # bounded-queue pass: overflow sheds at submit with a typed
+        # outcome; accepted requests are untouched by their neighbours'
+        # rejection
+        qeng = PagedEngine(cfg, params, max_batch=b,
+                           capacity=args.capacity,
+                           max_new_tokens=args.max_new, block_size=8,
+                           enable_partial=True, prefill_mode="chunked")
+        qsched = ContinuousBatchingScheduler(qeng, queue_limit=2)
+        qreqs = [qsched.submit(p, max_new_tokens=args.max_new)
+                 for p in over_prompts]
+        qsched.run()
+        qserved = [r.result for r in qreqs if r.result is not None]
+        qslo = slo_summary(qserved, qreqs)
+        untyped = [r for r in qreqs if r.outcome is None]
+        rows.append({
+            "config": f"overload_shed_b{b}",
+            "queue_limit": 2,
+            "shed_queue_full": qsched.stats["shed_queue_full"],
+            "shed_deadline": qsched.stats["shed_deadline"],
+            "shed_rate": qslo["shed_rate"],
+            "outcome_counts": qslo["outcome_counts"],
+            "all_outcomes_typed": not untyped,
+            "accepted_identical": all(
+                r.result.text == ref_text[p]
+                for p, r in zip(over_prompts, qreqs)
+                if r.outcome == RequestOutcome.OK),
+        })
+
     timed = [r for r in rows if "wall_s" in r]
     print(f"{'config':<24} {'wall_s':>8} {'gen_tok':>8} "
           f"{'tok/s':>10} {'speedup':>8} {'tpot_ms':>8} {'ttft_ms':>8} "
@@ -834,6 +948,18 @@ def main():
             print(f"semantic_preservation: "
                   f"{r['prefix_hits_checked']} prefix-path hits, "
                   f"{r['mismatches']} mismatches under semantic mode")
+        if r["config"].startswith("overload_b"):
+            print(f"{r['config']}: num_blocks={r['num_blocks']}, "
+                  f"{r['preemptions']} preemptions, "
+                  f"{r['requeues']} requeues, "
+                  f"{r['tokens_recomputed']} tokens recomputed, "
+                  f"tokens identical: {r['tokens_identical']}, "
+                  f"invariants ok: {r['invariants_ok']}")
+        if r["config"].startswith("overload_shed"):
+            print(f"{r['config']}: queue_limit={r['queue_limit']}, "
+                  f"{r['shed_queue_full']} shed (typed: "
+                  f"{r['all_outcomes_typed']}), accepted identical: "
+                  f"{r['accepted_identical']}")
         if r["config"].startswith("mesh_dp_scaling"):
             print(f"{r['config']}: {r['tokens_per_s_r1']:.1f} -> "
                   f"{r['tokens_per_s_rN']:.1f} tok/s "
@@ -1044,6 +1170,50 @@ def main():
             raise SystemExit("--check-mesh FAILED:\n  " + "\n  ".join(bad))
         print("--check-mesh OK: sharded tokens identical, warm "
               "cross-replica promotions > 0, DP scaling > 1.0x")
+
+    if args.check_preempt:
+        # CI gate for pressure-safe serving: the undersized pool must
+        # have actually preempted (otherwise the workload proved
+        # nothing), every non-shed request must match the uncapped run
+        # token-for-token, the pool invariants must hold afterwards,
+        # and every terminal request must carry a typed outcome.
+        bad = []
+        over = [r for r in rows if r["config"].startswith("overload_b")]
+        if not over:
+            bad.append("no overload rows in the artifact")
+        for r in over:
+            if r["preemptions"] < 1:
+                bad.append(f"{r['config']}: pool never preempted "
+                           f"(num_blocks={r['num_blocks']} too big for "
+                           f"the workload?)")
+            if not r["tokens_identical"]:
+                bad.append(f"{r['config']}: preempted-then-resumed "
+                           f"tokens diverge from the uncapped run")
+            if not r["invariants_ok"]:
+                bad.append(f"{r['config']}: pool invariants violated "
+                           f"after the overload run")
+            if r["preempt_errors"]:
+                bad.append(f"{r['config']}: {r['preempt_errors']} "
+                           f"requests errored instead of resuming")
+        shed_rows = [r for r in rows
+                     if r["config"].startswith("overload_shed")]
+        if not shed_rows:
+            bad.append("missing overload_shed row")
+        for r in shed_rows:
+            if r["shed_queue_full"] < 1:
+                bad.append(f"{r['config']}: bounded queue never shed")
+            if not r["all_outcomes_typed"]:
+                bad.append(f"{r['config']}: some terminal request has "
+                           f"no typed outcome")
+            if not r["accepted_identical"]:
+                bad.append(f"{r['config']}: accepted requests' tokens "
+                           f"changed when neighbours were shed")
+        if bad:
+            raise SystemExit("--check-preempt FAILED:\n  " +
+                             "\n  ".join(bad))
+        print("--check-preempt OK: preemptions fired, non-shed tokens "
+              "identical to the uncapped run, invariants held, sheds "
+              "typed")
 
     return rows
 

@@ -72,6 +72,20 @@ def main():
                          "on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=<D*T> "
                          "before launching)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request SLO deadline in seconds: requests "
+                         "whose deadline expires while still queued are "
+                         "shed BEFORE claiming pool blocks (typed "
+                         "outcome shed_deadline), and under pool "
+                         "pressure the engine sacrifices the "
+                         "latest-deadline row first (continuous/paged "
+                         "schedulers only)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the scheduler admission queue: submits "
+                         "beyond this depth are shed immediately with "
+                         "the typed outcome shed_queue_full instead of "
+                         "growing the queue without bound "
+                         "(continuous/paged schedulers only)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=12)
@@ -156,7 +170,8 @@ def main():
                   f"per device")
         server.check_invariants()
     elif args.continuous:
-        csched = ContinuousBatchingScheduler(engine)
+        csched = ContinuousBatchingScheduler(engine,
+                                             queue_limit=args.queue_limit)
         # full untimed pass (admit=False): compiles the pool decode step AND
         # every per-suffix-length prefill the timed pass will dispatch
         for p in test_prompts:
@@ -167,11 +182,19 @@ def main():
             csched.stats[k] = 0
         # keep submission order: run() returns requests in COMPLETION order
         # (early-EOS rows finish first), which would misalign the zip below
-        recycled_reqs = [csched.submit(p, admit=True) for p in test_prompts]
+        recycled_reqs = [csched.submit(p, admit=True,
+                                       deadline_s=args.deadline_s)
+                         for p in test_prompts]
         csched.run()
         print(f"continuous batching: {csched.stats['decode_steps']} decode "
               f"steps for {len(recycled_reqs)} requests, mean occupancy "
               f"{csched.mean_occupancy():.2f}/{args.batch}")
+        if args.queue_limit is not None or args.deadline_s is not None:
+            print(f"backpressure: queue_limit={args.queue_limit}, "
+                  f"deadline_s={args.deadline_s}, "
+                  f"{csched.stats['shed_queue_full']} shed (queue full), "
+                  f"{csched.stats['shed_deadline']} shed (deadline), "
+                  f"{csched.stats['preemptions']} preemption requeue(s)")
         if args.paged:
             print(f"paged pool: {engine.stats['resident_hits']} resident "
                   f"(L1) hits, {engine.stats['host_promotions']} host (L2) "
@@ -204,9 +227,10 @@ def main():
         recycled_reqs = list(sched.run())
 
     rejected = [r for r in recycled_reqs if r.result is None]
-    if rejected:                             # e.g. prompt > pool capacity
-        for r in rejected:
-            print(f"rejected: {r.prompt[:40]!r}: {r.error}")
+    if rejected:               # e.g. prompt > pool capacity, or shed under
+        for r in rejected:     # a queue bound / expired deadline (typed)
+            why = r.error or getattr(r, "outcome", None) or "rejected"
+            print(f"rejected: {r.prompt[:40]!r}: {why}")
         keep = {id(r) for r in rejected}
         baseline_reqs, recycled_reqs = zip(*[
             (b, r) for b, r in zip(baseline_reqs, recycled_reqs)

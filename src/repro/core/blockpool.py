@@ -48,6 +48,13 @@ class BlockPoolExhausted(RuntimeError):
     """alloc() found no free block (caller should evict or reject)."""
 
 
+class PoolSaturated(RuntimeError):
+    """Admission cannot be covered RIGHT NOW but in-flight rows will free
+    blocks as they finish — a transient, not a permanent reject.  The
+    scheduler keeps the request queued and retries on a later step;
+    ``ValueError`` stays the permanent "can never fit" reject."""
+
+
 class BlockAllocator:
     """Free-list + refcount accounting over ``num_blocks`` pool blocks."""
 
@@ -61,10 +68,14 @@ class BlockAllocator:
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._refs: List[int] = [0] * num_blocks
         self.stats = {"allocs": 0, "frees": 0, "shares": 0, "peak_live": 0}
+        # optional core.faults.FaultPlan; "alloc" site simulates exhaustion
+        self.fault_plan = None
 
     # ------------------------------------------------------------------
     def alloc(self) -> int:
         """A fresh block with refcount 1; raises BlockPoolExhausted."""
+        if self.fault_plan is not None and self.fault_plan.should_fire("alloc"):
+            raise BlockPoolExhausted("injected: alloc fault")
         if not self._free:
             raise BlockPoolExhausted(
                 f"no free blocks (pool={self.num_blocks}, "
@@ -83,6 +94,8 @@ class BlockAllocator:
         strand a partial grab.  The batched analogue of calling ``alloc``
         n times; callers that can evict fall back to their per-block
         eviction loop when this raises."""
+        if self.fault_plan is not None and self.fault_plan.should_fire("alloc"):
+            raise BlockPoolExhausted("injected: alloc_many fault")
         if len(self._free) < n:
             raise BlockPoolExhausted(
                 f"need {n} blocks, {len(self._free)} free "

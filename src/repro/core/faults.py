@@ -1,0 +1,131 @@
+"""Deterministic fault injection for pressure/chaos testing.
+
+A :class:`FaultPlan` decides — purely from ``(seed, site, call_index)``
+— whether the Nth arrival at a named injection *site* fires a fault.
+Determinism matters twice over: the chaos suite must be replayable
+(hypothesis shrinks on seeds, CI reruns bit-identically), and the
+"injected faults never alter unaffected rows" property only makes
+sense when the same faults fire at the same points on every run.
+
+Sites are plain strings threaded behind optional ``fault_plan``
+attributes; production code never imports this module on the hot path
+beyond an ``is None`` check.  The sites wired through the stack:
+
+==================  ====================================================
+``alloc``           ``BlockAllocator.alloc``/``alloc_many`` raise
+                    ``BlockPoolExhausted`` as if the pool were empty.
+``kvstore_get``     ``HostKVStore.get`` raises :class:`InjectedFault`
+                    (host-store read IO error).
+``kvstore_put``     ``HostKVStore.put`` raises :class:`InjectedFault`
+                    (host-store write IO error).
+``kvstore_corrupt`` ``HostKVStore.get`` silently bit-flips one byte of
+                    the returned entry's cache (detected downstream by
+                    the digest check in ``Recycler``).
+``replica_step``    ``PagedEngine.decode_batch`` raises
+                    :class:`InjectedFault` before doing any work —
+                    models a replica dying mid-serve.
+==================  ====================================================
+
+Two trigger forms compose per site:
+
+* ``rate`` — fire pseudo-randomly at roughly that fraction of calls,
+  derived from ``blake2b(f"{seed}:{site}:{n}")`` so the firing pattern
+  is a pure function of the plan seed.
+* ``at`` — fire exactly on the given 0-based call indices (for
+  regression tests that need fault #3 and nothing else).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional, Tuple
+
+
+#: every site wired through the stack (see module docstring); a plan
+#: naming anything else is a typo, not a new failure mode — reject it.
+KNOWN_SITES = ("alloc", "kvstore_get", "kvstore_put", "kvstore_corrupt",
+               "replica_step")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an injection site standing in for an IO/runtime error.
+
+    Deliberately NOT a subclass of OSError: containment code is written
+    to catch ``(InjectedFault, OSError)`` so a handler that only knows
+    real IO errors still fails loudly under injection until hardened.
+    """
+
+
+@dataclass
+class FaultSpec:
+    """Per-site trigger: a firing ``rate`` and/or exact ``at`` indices."""
+    rate: float = 0.0
+    at: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        self.at = tuple(sorted(set(int(i) for i in self.at)))
+        if self.at and self.at[0] < 0:
+            raise ValueError(f"at indices must be >= 0, got {self.at}")
+
+
+@dataclass
+class FaultPlan:
+    """Seeded, site-keyed fault schedule.
+
+    ``sites`` maps site name -> :class:`FaultSpec` (or a bare float
+    rate / iterable of indices, normalised on construction).  Call
+    counters live on the plan so one plan threaded through several
+    components sees a single global arrival order per site.
+    """
+    seed: int = 0
+    sites: Dict[str, FaultSpec] = field(default_factory=dict)
+    calls: Dict[str, int] = field(default_factory=dict)
+    fired: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        norm = {}
+        for site, spec in self.sites.items():
+            if site not in KNOWN_SITES:
+                raise ValueError(f"unknown fault site {site!r}; "
+                                 f"known: {KNOWN_SITES}")
+            if isinstance(spec, FaultSpec):
+                norm[site] = spec
+            elif isinstance(spec, (int, float)):
+                norm[site] = FaultSpec(rate=float(spec))
+            else:
+                norm[site] = FaultSpec(at=tuple(spec))
+        self.sites = norm
+
+    def should_fire(self, site: str) -> bool:
+        """Advance the site's call counter; True when this call faults."""
+        spec = self.sites.get(site)
+        n = self.calls.get(site, 0)
+        self.calls[site] = n + 1
+        if spec is None:
+            return False
+        fire = n in spec.at
+        if not fire and spec.rate > 0.0:
+            h = hashlib.blake2b(f"{self.seed}:{site}:{n}".encode(),
+                                digest_size=8).digest()
+            fire = int.from_bytes(h, "big") / float(1 << 64) < spec.rate
+        if fire:
+            self.fired[site] = self.fired.get(site, 0) + 1
+        return fire
+
+    def maybe_fire(self, site: str, message: Optional[str] = None) -> None:
+        """Raise :class:`InjectedFault` when the site fires this call."""
+        if self.should_fire(site):
+            raise InjectedFault(message or f"injected fault at {site} "
+                                f"(call {self.calls[site] - 1})")
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        return {site: {"calls": self.calls.get(site, 0),
+                       "fired": self.fired.get(site, 0)}
+                for site in set(self.calls) | set(self.sites)}
+
+
+def plan_from_spec(seed: int, **site_specs) -> FaultPlan:
+    """Convenience: ``plan_from_spec(7, alloc=0.1, kvstore_get=(2, 5))``."""
+    return FaultPlan(seed=seed, sites=dict(site_specs))

@@ -29,6 +29,7 @@ resets every entry to stone cold.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import threading
@@ -70,6 +71,18 @@ def tree_bytes(tree) -> int:
     return sum(np.asarray(a).nbytes for a in jax.tree.leaves(tree))
 
 
+def cache_digest(cache) -> str:
+    """Content digest of a host cache pytree: blake2b over the sorted
+    flattened leaves (path bytes + raw array bytes).  Pure function of
+    leaf contents, so it survives a save_dir/load_dir round-trip and
+    catches any in-memory or on-disk corruption of the KV payload."""
+    h = hashlib.blake2b(digest_size=16)
+    for path, arr in sorted(flatten_cache(cache).items()):
+        h.update(path.encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
 # ---------------------------------------------------------------------------
 # int8 host-cache compression now lives in ``repro.core.quant`` (one scheme
 # shared with the device tier — dense ``kv_quant`` caches and the int8 paged
@@ -91,10 +104,13 @@ class CacheEntry:
     hits: int = 0                # times this entry served a lookup (tiering)
     last_hit: int = -1           # store clock at the last touching get()
     tenant: Optional[str] = None  # owner for per-tenant byte quotas
+    digest: str = ""             # blake2b of the cache leaves (corruption check)
 
     def __post_init__(self):
         if not self.nbytes:
             self.nbytes = tree_bytes(self.cache)
+        if not self.digest:
+            self.digest = cache_digest(self.cache)
 
 
 class HostKVStore:
@@ -118,6 +134,11 @@ class HostKVStore:
         self.evictions = 0
         self._clock = 0                        # touching-get counter
         self.stats = {"peeks": 0, "hits": 0}   # L2-tier traffic
+        self.load_corrupt_skips = 0            # bad disk entries skipped
+        # optional core.faults.FaultPlan; sites: kvstore_get, kvstore_put
+        # (raise InjectedFault — IO errors), kvstore_corrupt (bit-flip a
+        # byte of the served entry's cache, caught by the digest check)
+        self.fault_plan = None
         # per-tenant byte usage (entries with tenant=None are untracked):
         # what the scheduler's admit-time quota check reads.  Maintained
         # by put/remove/evict so it always equals the sum of that
@@ -166,6 +187,9 @@ class HostKVStore:
             capacity: Optional[int] = None,
             tenant: Optional[str] = None) -> CacheEntry:
         token_ids = np.asarray(token_ids, np.int32)
+        if self.fault_plan is not None:
+            self.fault_plan.maybe_fire("kvstore_put", "injected: host-store "
+                                       "write IO error")
         with self.lock:
             entry = CacheEntry(self._next_id, text, token_ids, cache,
                                int(length), int(capacity or length),
@@ -188,8 +212,14 @@ class HostKVStore:
         entry's tier accounting (hits / last_hit) is stamped.  Peeking
         candidates during retrieval uses touch=False and only counts as a
         peek, so hits / (hits + peeks-that-missed) stays meaningful."""
+        if self.fault_plan is not None:
+            self.fault_plan.maybe_fire("kvstore_get", "injected: host-store "
+                                       "read IO error")
         with self.lock:
             e = self._entries[entry_id]
+            if (self.fault_plan is not None
+                    and self.fault_plan.should_fire("kvstore_corrupt")):
+                self._corrupt_entry(e)
             if touch:
                 self._entries.move_to_end(entry_id)
                 self._clock += 1
@@ -199,6 +229,28 @@ class HostKVStore:
             else:
                 self.stats["peeks"] += 1
             return e
+
+    @staticmethod
+    def _corrupt_entry(e: CacheEntry) -> None:
+        """Bit-flip one byte of the entry's first non-empty cache leaf
+        (simulated silent corruption).  The leaf is REPLACED with the
+        flipped copy — host caches often hold read-only views of device
+        exports, so in-place mutation is not guaranteed to work.
+        ``e.digest`` is left at its original value, so the downstream
+        digest check catches the flip."""
+        def walk(node) -> bool:
+            for k in sorted(node):
+                v = node[k]
+                if isinstance(v, dict):
+                    if walk(v):
+                        return True
+                elif getattr(v, "nbytes", 0) > 0:
+                    bad = np.ascontiguousarray(np.asarray(v)).copy()
+                    bad.view(np.uint8).reshape(-1)[0] ^= 0xFF
+                    node[k] = bad
+                    return True
+            return False
+        walk(e.cache)
 
     def remove(self, entry_id: int) -> None:
         with self.lock:
@@ -242,6 +294,7 @@ class HostKVStore:
                 "hits": e.hits,
                 "last_hit": e.last_hit,
                 "tenant": e.tenant,
+                "digest": e.digest,
             }
         with open(os.path.join(path, "index.json"), "w") as f:
             json.dump({"next_id": self._next_id, "clock": self._clock,
@@ -255,19 +308,33 @@ class HostKVStore:
         eviction ran until the next put) — and LRU/tier state (hits,
         last_hit, clock) round-trips through the sidecar instead of
         resetting to zero.  Quantized entries round-trip bit-exactly: npz
-        stores the ``__q8__``/scale/dtype leaves verbatim."""
+        stores the ``__q8__``/scale/dtype leaves verbatim.
+
+        Corruption-hardened: a missing / truncated / unparseable npz, or
+        one whose content digest no longer matches the sidecar's recorded
+        ``digest``, skips that entry (counted in ``load_corrupt_skips``)
+        instead of raising — one bad file must not take down a reload of
+        the whole L2."""
         store = cls(max_bytes)
         with open(os.path.join(path, "index.json")) as f:
             meta = json.load(f)
         for eid_s, m in meta["entries"].items():
             eid = int(eid_s)
-            with np.load(os.path.join(path, f"{eid}.npz")) as z:
-                cache = unflatten_cache({k: z[k] for k in z.files})
+            try:
+                with np.load(os.path.join(path, f"{eid}.npz")) as z:
+                    cache = unflatten_cache({k: z[k] for k in z.files})
+            except Exception:
+                store.load_corrupt_skips += 1
+                continue
             e = CacheEntry(eid, m["text"], np.asarray(m["token_ids"], np.int32),
                            cache, m["length"], m["capacity"],
                            hits=m.get("hits", 0),
                            last_hit=m.get("last_hit", -1),
                            tenant=m.get("tenant"))
+            want = m.get("digest")
+            if want and e.digest != want:
+                store.load_corrupt_skips += 1
+                continue
             store._entries[eid] = e
             store.total_bytes += e.nbytes
             if e.tenant is not None:

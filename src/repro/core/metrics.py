@@ -156,7 +156,7 @@ def slo_summary(results, requests=None, *, ttft_slo_s: Optional[float] = None,
                 ok += int(meets)
         attained = ok / samples if samples else None
 
-    return {
+    out = {
         "ttft_p50_s": pct(ttfts, 50),
         "ttft_p95_s": pct(ttfts, 95),
         "tpot_p50_s": pct(steps, 50),
@@ -165,6 +165,55 @@ def slo_summary(results, requests=None, *, ttft_slo_s: Optional[float] = None,
         "queue_delay_p95_s": pct(delays, 95),
         "slo_attainment": attained,
         "slo_samples": samples,
+    }
+    out.update(_pressure_summary(results, requests))
+    return out
+
+
+def _pressure_summary(results, requests) -> Dict:
+    """Overload-era additions to the SLO view: typed shed rates,
+    preemption rates, and deadline attainment, computed from scheduler
+    ``Request`` outcomes (``RequestOutcome``) and GenResult preemption
+    counters.  All rates are fractions of SUBMITTED requests, so a
+    server that sheds 30% cannot launder its p95 by only reporting the
+    requests it chose to serve.  None (not NaN) when no requests were
+    given — same JSON-safe convention as the rest of the summary."""
+    reqs = list(requests or [])
+    n = len(reqs)
+    outcomes: Dict[str, int] = {}
+    for r in reqs:
+        o = getattr(r, "outcome", None)
+        if o is not None:
+            outcomes[o] = outcomes.get(o, 0) + 1
+    shed = (outcomes.get("shed_queue_full", 0)
+            + outcomes.get("shed_deadline", 0))
+    preempted = [r for r in results
+                 if getattr(r, "preemptions", 0) > 0]
+    recomputed = sum(getattr(r, "tokens_recomputed", 0) for r in results)
+    # deadline attainment: of requests that CARRIED a deadline, how many
+    # produced their result before it (shed-on-deadline counts as missed;
+    # requests without deadlines are excluded, not counted as attained)
+    dl_total = dl_ok = 0
+    for r in reqs:
+        dl = getattr(r, "deadline_t", None)
+        if dl is None:
+            continue
+        dl_total += 1
+        ft = getattr(r, "first_token_t", None)
+        if (getattr(r, "outcome", None) == "ok"
+                and (ft is None or ft <= dl)):
+            dl_ok += 1
+    return {
+        "requests_submitted": n if requests is not None else None,
+        "outcome_counts": outcomes if requests is not None else None,
+        "shed_rate": (shed / n) if n else None,
+        "errored_rate": (outcomes.get("errored", 0) / n) if n else None,
+        "preempted_results": len(preempted),
+        "preemption_rate": (len(preempted) / len(results)
+                            if results else None),
+        "tokens_recomputed": int(recomputed),
+        "deadline_attainment": (dl_ok / dl_total) if dl_total else None,
+        "deadline_samples": dl_total,
     }
 
 

@@ -20,10 +20,11 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core.embedder import HashEmbedder
+from repro.core.faults import InjectedFault
 from repro.core.index import EmbeddingIndex
 from repro.core.lsh import BlockLSH, match_mask
 from repro.core import quant as kvq
-from repro.core.kvstore import CacheEntry, HostKVStore
+from repro.core.kvstore import CacheEntry, HostKVStore, cache_digest
 from repro.core.quant import CAP_AXIS as _CAP_AXIS
 from repro.core.radix import RadixPrefixCache
 
@@ -194,6 +195,12 @@ class Recycler:
         # to be INVISIBLE to retrieval: neither the embedding index nor
         # the radix/LSH were rebuilt, so no persisted entry could ever
         # hit.  Rebuild every mirror from the store's entries here.
+        # fault-containment accounting: host-store IO errors degrade to a
+        # miss / skipped admit, corrupt entries (digest mismatch at serve
+        # time) are dropped and degrade to a miss — in every case the
+        # request continues on the baseline path with identical tokens
+        self.stats = {"io_fault_misses": 0, "admit_io_faults": 0,
+                      "corrupt_entry_drops": 0}
         for e in self.store.entries():
             self._index_entry(e)
         # budget evictions can now fire inside store.put(); the callback
@@ -219,20 +226,42 @@ class Recycler:
         if self.lsh is not None:
             self.lsh.remove(entry_id)
 
+    def _verify_entry(self, e: CacheEntry) -> bool:
+        """Serve-time corruption gate: recompute the entry's content
+        digest and compare against the one stamped at put.  A mismatch
+        drops the entry from the store and every mirror — serving a
+        silently-corrupted KV payload would break the token-identity
+        guarantee, whereas a miss never can."""
+        if e.digest and cache_digest(e.cache) != e.digest:
+            self.store.remove(e.entry_id)
+            self._forget_entry(e.entry_id)
+            self.stats["corrupt_entry_drops"] += 1
+            return False
+        return True
+
     # ------------------------------------------------------------------
     def admit(self, text: str, token_ids, cache_host, length: int,
               capacity: Optional[int] = None,
               compress: Optional[bool] = None,
-              tenant: Optional[str] = None) -> CacheEntry:
+              tenant: Optional[str] = None) -> Optional[CacheEntry]:
         """Store a finished run's cache for future recycling (paper §2.4).
         ``compress`` overrides the recycler-wide default for this entry
         (byte-budget eviction fires either way); ``tenant`` labels the
-        entry for the store's per-tenant byte accounting."""
+        entry for the store's per-tenant byte accounting.
+
+        Returns None when a host-store IO error (real or injected)
+        prevents the write — admission is best-effort: the run already
+        produced its tokens, losing the cache entry only costs future
+        reuse, never correctness."""
         if self.compress if compress is None else compress:
             cache_host = kvq.quantize_tree(cache_host, length=length,
                                            residual=self.compress_residual)
-        entry = self.store.put(text, token_ids, cache_host, length, capacity,
-                               tenant=tenant)
+        try:
+            entry = self.store.put(text, token_ids, cache_host, length,
+                                   capacity, tenant=tenant)
+        except (InjectedFault, OSError):
+            self.stats["admit_io_faults"] += 1
+            return None
         # put() enforces the byte budget itself now (evicted ids reach
         # _forget_entry through store.on_evict); only index the new entry
         # if it actually survived — an entry bigger than the whole budget
@@ -243,6 +272,17 @@ class Recycler:
 
     # ------------------------------------------------------------------
     def lookup(self, text: str, token_ids) -> RecycleResult:
+        """IO-fault-contained lookup: a host-store read error (real or
+        injected) anywhere in the retrieval path degrades to a MISS —
+        the request prefills from scratch with identical tokens instead
+        of crashing the engine step."""
+        try:
+            return self._lookup_impl(text, token_ids)
+        except (InjectedFault, OSError):
+            self.stats["io_fault_misses"] += 1
+            return RecycleResult(False, "miss", None, 0, 0.0, None)
+
+    def _lookup_impl(self, text: str, token_ids) -> RecycleResult:
         token_ids = np.asarray(token_ids, np.int32)
         m = len(token_ids)
         max_depth = m - 1          # generation needs >= 1 input token
@@ -285,6 +325,8 @@ class Recycler:
 
         if best_exact and (not best_partial or best_exact[0] >= best_partial[0]):
             depth, e, sim = best_exact
+            if not self._verify_entry(e):         # corrupt -> dropped
+                return RecycleResult(False, "miss", None, 0, sim_best, None)
             self.store.get(e.entry_id)            # LRU touch
             if self.radix is not None:
                 self.radix.touch(e.entry_id)      # keep trie recency in sync
@@ -299,6 +341,9 @@ class Recycler:
             # would let a never-servable entry keep winning the radix's
             # recency preference forever (self-reinforcing miss loop)
             if is_trimmable(e.cache):
+                if not self._verify_entry(e):     # corrupt -> dropped
+                    return RecycleResult(False, "miss", None, 0,
+                                         sim_best, None)
                 self.store.get(e.entry_id)
                 self.radix.touch(e.entry_id)
                 # report the HIT ENTRY's own retrieval similarity — not
@@ -326,6 +371,14 @@ class Recycler:
         """
         if self.lsh is None:
             return None
+        try:
+            return self._lookup_semantic_impl(text, token_ids)
+        except (InjectedFault, OSError):
+            self.stats["io_fault_misses"] += 1
+            return None
+
+    def _lookup_semantic_impl(self, text: str,
+                              token_ids) -> Optional[GraftPlan]:
         ids = np.asarray(token_ids, np.int32)
         m = len(ids)
         bs = self.block
@@ -366,6 +419,8 @@ class Recycler:
                         best = plan
                 b = b_end
         if best is not None:
+            if not self._verify_entry(best.entry):   # corrupt -> dropped
+                return None
             best.similarity = self.index.similarity(best.entry.entry_id,
                                                     qvec)
         return best

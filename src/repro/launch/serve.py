@@ -30,7 +30,8 @@ from repro.core.metrics import RunMetrics, summarize_runs
 from repro.data.pipeline import paper_prompt_sets
 from repro.models import init_params
 from repro.serving import Engine, PagedEngine
-from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     RequestOutcome)
 
 
 class _SharedRecycler:
@@ -54,7 +55,8 @@ class _SharedRecycler:
     def admit(self, *args, **kw):
         with self._lock:
             entry = self._inner.admit(*args, **kw)
-            self._admitted_by[entry.entry_id] = self._replica
+            if entry is not None:     # None = store refused (IO fault)
+                self._admitted_by[entry.entry_id] = self._replica
             return entry
 
     def lookup(self, *args, **kw):
@@ -105,7 +107,9 @@ class ShardedServer:
             meshes = serving_meshes(replicas, tp)
         self.lock = threading.RLock()
         self._admitted_by: dict = {}
-        self.shared_stats = {"cross_replica_promotions": 0}
+        self.shared_stats = {"cross_replica_promotions": 0,
+                             "replica_failures": 0,
+                             "rerouted_requests": 0}
         self.engines: List[PagedEngine] = []
         shared = None
         for r, mesh in enumerate(meshes):
@@ -161,18 +165,68 @@ class ShardedServer:
             load[r] += 1
         if concurrent is None:
             concurrent = (os.cpu_count() or 1) > 1
+        failed: dict = {}          # replica -> error message
         if concurrent and len(self.engines) > 1:
-            threads = [threading.Thread(target=s.run, daemon=True)
-                       for s in scheds]
+            threads = [threading.Thread(
+                target=self._run_contained, args=(r, s, failed),
+                daemon=True) for r, s in enumerate(scheds)]
             for t in threads:
                 t.start()
             for t in threads:
                 t.join()
         else:
-            for s in scheds:
-                s.run()
+            for r, s in enumerate(scheds):
+                self._run_contained(r, s, failed)
+        if failed:
+            self._reroute_failed(scheds, failed)
         return [req.result if req.result is not None else req.error
                 for _, req in placed]
+
+    def _run_contained(self, r: int, sched, failed: dict) -> None:
+        """Drive one replica's scheduler; a replica failure is CONTAINED:
+        only ITS in-flight requests terminate (typed ERRORED — their pool
+        rows died with the replica), its untouched queue survives for
+        rerouting, and the other replicas never notice."""
+        try:
+            sched.run()
+        except Exception as e:              # noqa: BLE001 — containment
+            failed[r] = f"replica {r} failed: {e}"
+            with self.lock:
+                self.shared_stats["replica_failures"] += 1
+            for slot, req in list(sched.in_flight.items()):
+                req.outcome = RequestOutcome.ERRORED
+                req.error = failed[r]
+                sched.completed.append(req)
+            sched.in_flight.clear()
+
+    def _reroute_failed(self, scheds, failed: dict) -> None:
+        """Resubmit failed replicas' QUEUED (never-admitted) requests to
+        the first healthy replica — serially, after the fleet drained, so
+        the reroute cannot race a second failure (and a failure DURING
+        the reroute re-enters the same containment).  Anything the shared
+        L2 learned before the failure still serves these requests warm."""
+        pending = list(failed)
+        while pending:
+            r = pending.pop(0)
+            leftovers = list(scheds[r]._queue)
+            scheds[r]._queue.clear()
+            if not leftovers:
+                continue
+            healthy = [x for x in range(len(scheds)) if x not in failed]
+            if not healthy:
+                for req in leftovers:
+                    req.outcome = RequestOutcome.ERRORED
+                    req.error = "no healthy replica to reroute to"
+                    scheds[r].completed.append(req)
+                continue
+            dst = healthy[0]
+            for req in leftovers:
+                scheds[dst]._queue.append(req)
+                with self.lock:
+                    self.shared_stats["rerouted_requests"] += 1
+            before = set(failed)
+            self._run_contained(dst, scheds[dst], failed)
+            pending.extend(x for x in failed if x not in before)
 
     def check_invariants(self) -> None:
         for eng in self.engines:

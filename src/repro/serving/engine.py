@@ -58,6 +58,11 @@ class GenResult:
     # k tokens records k entries of round_time / k — honest per-token
     # latency, so accepted drafts show up as LOWER TPOT, not as gaps.
     step_times_s: list = field(default_factory=list)
+    # pressure-safe serving (paged engine): how often this request was
+    # preempted + resumed, and how many positions its resumes had to
+    # re-prefill — 0/0 on engines without preemption
+    preemptions: int = 0
+    tokens_recomputed: int = 0
 
 
 class Engine:
@@ -252,6 +257,15 @@ class _Slot:
     top_k: int = 0
     step_times_s: list = field(default_factory=list)  # TPOT samples
     tenant: Optional[str] = None  # labels admitted host entries (quotas)
+    # preemption bookkeeping (paged engine): tokens already emitted before
+    # this slot was demoted + resumed, re-derived through warm admission.
+    # ``resume_emitted`` is prepended to the row's fresh output, and the
+    # per-request counters below survive across preempt/resume cycles so
+    # observability sees the whole request, not just its last residency.
+    resume_emitted: list = field(default_factory=list)
+    preemptions: int = 0
+    tokens_recomputed: int = 0
+    deadline_t: Optional[float] = None  # absolute deadline (victim tiebreak)
 
 
 def _pool_load_row(pool, row, slot, tokens, pos, tok0, m):

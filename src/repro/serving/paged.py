@@ -70,7 +70,8 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core import BlockAllocator, BlockPoolExhausted, BlockTrie
-from repro.core.blockpool import SENTINEL
+from repro.core.blockpool import SENTINEL, PoolSaturated
+from repro.core.faults import InjectedFault
 from repro.core.kvstore import to_host, tree_bytes
 from repro.core import quant as kvq
 from repro.core.quant import dequantize_vectors_jnp, quantize_vectors_jnp
@@ -494,7 +495,10 @@ class PagedEngine(Engine):
                  graft_max_div: float = 0.35,
                  speculative: bool = False, gamma: int = 4,
                  sink_blocks: int = 1, recent_blocks: int = 3,
-                 spec_iters: int = 2, **kw):
+                 spec_iters: int = 2,
+                 preempt_policy: str = "least_progress",
+                 overcommit: bool = False,
+                 fault_plan=None, **kw):
         if kw.get("kv_quant"):
             # the int8 tier compresses its host tier by default, with a
             # residual deep enough that a promoted prefix can fill the
@@ -519,6 +523,35 @@ class PagedEngine(Engine):
             num_blocks = max_batch * self.nbt + self.nbt + 1
         self.allocator = BlockAllocator(num_blocks, bs)
         self.trie = BlockTrie(bs)
+        # ---- pressure-safe serving (PR 10) ---------------------------
+        # preemption: when a step's alloc cannot be covered even by trie
+        # eviction, demote a victim row's sealed KV to the host L2 and
+        # requeue it (exact resume through warm admission).  Victims are
+        # chosen least-progress first, latest-deadline tiebreak.
+        if preempt_policy != "least_progress":
+            raise ValueError(f"unknown preempt_policy {preempt_policy!r}")
+        self.preempt_policy = preempt_policy
+        # overcommit=True relaxes the chunked admission guarantee to the
+        # PROMPT's blocks only: decode-time growth is served by
+        # preemption instead of an up-front whole-lifetime reservation,
+        # so an undersized pool oversubscribes and preempts rather than
+        # rejecting at admission.
+        self.overcommit = bool(overcommit)
+        # deterministic fault injection (core.faults): threads the
+        # "alloc" site into the allocator and the kvstore sites into the
+        # recycler's store; "replica_step" fires in decode_batch.
+        self.fault_plan = fault_plan
+        if fault_plan is not None:
+            self.allocator.fault_plan = fault_plan
+            self.recycler.store.fault_plan = fault_plan
+        # typed lifecycle events ("preempted" / "errored") for the
+        # scheduler, drained once per step via drain_events()
+        self._events: List[Tuple[str, dict]] = []
+        self._preempted_now: set = set()
+        # pending slots whose packed-segment descriptors are already
+        # built this step: their blocks are about to be dispatched, so
+        # they are not preemption victims until the dispatch lands
+        self._pending_planned: set = set()
         # Under a mesh-carrying Runtime the pool is placed TP-sharded
         # (KV-head axis on 'model' when heads divide, replication fallback
         # otherwise — sharding.paged_pool_shardings); the attention
@@ -676,6 +709,8 @@ class PagedEngine(Engine):
             "semantic_grafts": 0, "semantic_refusals": 0,
             "semantic_resident_grafts": 0, "semantic_host_grafts": 0,
             "tokens_grafted": 0,
+            "preemptions": 0, "preempted_tokens_recomputed": 0,
+            "step_rollbacks": 0, "preempt_errors": 0,
         })
 
     # ------------------------------------------------------------------
@@ -1129,6 +1164,193 @@ class PagedEngine(Engine):
                 raise
             return self.allocator.alloc()
 
+    # ------------------------------------------------------------------
+    # preemption with exact resume (PR 10)
+    # ------------------------------------------------------------------
+    def drain_events(self) -> List[Tuple[str, dict]]:
+        """Typed lifecycle events since the last drain.  ``("preempted",
+        payload)`` carries everything ``admit_slot(resume=payload)``
+        needs to resume the request token-identically; ``("errored",
+        payload)`` reports a request the engine had to drop (payload has
+        ``slot`` / ``error``)."""
+        ev, self._events = self._events, []
+        return ev
+
+    def _alloc_pressure(self, protect=(), exclude_rows=(),
+                        exclude_pending=()) -> int:
+        """``_alloc_block`` that converts exhaustion into preemption:
+        while no block is obtainable, demote one victim (least-progress
+        first, latest-deadline tiebreak) and retry.  Raises
+        BlockPoolExhausted only once no eligible victim remains — the
+        caller then preempts/cancels ITSELF, so the exception never
+        escapes an engine step."""
+        while True:
+            try:
+                return self._alloc_block(protect=protect)
+            except BlockPoolExhausted:
+                if not self._try_preempt(exclude_rows=exclude_rows,
+                                         exclude_pending=exclude_pending):
+                    raise
+
+    def _try_preempt(self, exclude_rows=(), exclude_pending=()) -> bool:
+        """Pick and preempt ONE victim.  Candidates: decoding rows
+        (demoted to L2 + requeued) and block-holding pending admissions
+        (cancelled + requeued; their sealed chunks stay warm in the L1
+        trie).  Grafted rows are never victims — their approximate
+        blocks must not reach the host store (contamination rule), and a
+        re-admission could gate differently."""
+        cands = []
+        for i, st in enumerate(self._slots):
+            if st is None or i in exclude_rows or i in self._preempted_now:
+                continue
+            if st.mode == "semantic_block":
+                continue
+            dl = st.deadline_t if st.deadline_t is not None else float("inf")
+            cands.append((len(st.emitted), -dl, 1, i))
+        for s, adm in self._pending.items():
+            if (s in exclude_pending or s in self._pending_planned
+                    or s in self._preempted_now
+                    or not self._row_blocks[s] or adm.graft is not None):
+                continue
+            st = adm.st
+            dl = st.deadline_t if st.deadline_t is not None else float("inf")
+            cands.append((0, -dl, 0, s))
+        if not cands:
+            return False
+        cands.sort()
+        _, _, kind, s = cands[0]
+        if kind == 1:
+            self._preempt_row(s)
+        else:
+            st = self._cancel_admission(s)
+            payload = self._resume_payload(st, [])
+            payload["slot"] = s
+            self._events.append(("preempted", payload))
+            self.stats["preemptions"] += 1
+        self._preempted_now.add(s)
+        return True
+
+    def _resume_payload(self, st: _Slot, extra) -> dict:
+        """Everything ``admit_slot(resume=...)`` needs to continue this
+        request exactly where it stopped.  ``extra`` is the tokens this
+        residency emitted (appended to the resume prompt so the warm
+        re-admission re-derives the next token from the same state)."""
+        extra = list(extra)
+        ids = (np.concatenate([st.ids, np.asarray(extra, np.int32)])
+               if extra else st.ids)
+        return {
+            "prompt": st.prompt, "ids": ids,
+            "emitted": list(st.resume_emitted) + extra,
+            "max_new_left": st.max_new - len(extra),
+            "preemptions": st.preemptions + 1,
+            "tokens_recomputed": st.tokens_recomputed,
+            "t0": st.t0, "t_first": st.t_first,
+            "temperature": st.temperature, "top_k": st.top_k,
+            "tenant": st.tenant, "use_recycling": st.use_recycling,
+            "admit": st.admit, "stop_at_eos": st.stop_at_eos,
+        }
+
+    def _mark_resumed(self, st: _Slot, resume: dict) -> None:
+        """Carry a preempted request's cross-residency state onto its
+        resumed slot: previously emitted tokens (prepended to the final
+        result), preemption counters, and the ORIGINAL t0 / t_first so
+        latency and TTFT describe the request, not its last residency."""
+        st.resume_emitted = list(resume["emitted"])
+        st.preemptions = int(resume["preemptions"])
+        st.tokens_recomputed = int(resume.get("tokens_recomputed", 0))
+        st.t0 = float(resume["t0"])
+        if resume.get("t_first"):
+            st.t_first = float(resume["t_first"])
+
+    def _preempt_row(self, row: int) -> None:
+        """Demote a decoding row and requeue it.  Sealed KV [0, p) —
+        p = m + k - 1, since the last emitted token's KV is not written
+        until the next step — is harvested to the host L2 (int8 pools
+        keep their codes verbatim, with the live fp ring overlaid into
+        the entry's residual tail so the resume reseeds an EXACT ring);
+        trie-resident prompt blocks just drop the row's reference and
+        stay warm.  The resume payload re-admits prompt + all emitted
+        tokens through the ordinary warm admission machinery, which is
+        what makes a preempted-then-resumed greedy run token-identical
+        to an uninterrupted one."""
+        st = self._slots[row]
+        p = st.m + len(st.emitted) - 1
+        if st.use_recycling and p > 0:
+            cap = self._capacity(st.m + st.max_new)
+            chain = [b for b in self._tables[row]
+                     if b != SENTINEL][:_ceil_div(p, self.block)]
+            entry = self._harvest(jnp.asarray(chain, jnp.int32), p, cap)
+            if self.kv_quant:
+                self._overlay_ring_tail(entry, row, p)
+            ids_sealed = np.concatenate(
+                [st.ids, np.asarray(st.emitted[:-1], np.int32)])
+            self.recycler.admit(st.prompt, ids_sealed, entry, p, cap,
+                                tenant=st.tenant)
+        payload = self._resume_payload(st, st.emitted)
+        payload["slot"] = row
+        self._release_row(row)
+        self._events.append(("preempted", payload))
+        self.stats["preemptions"] += 1
+
+    def _overlay_ring_tail(self, entry, row: int, depth: int) -> None:
+        """Overlay the row's LIVE fp ring values into a harvest entry's
+        residual tail.  ``_harvest`` rebuilds the tail by dequantizing
+        the sealed int8 codes, but an uninterrupted run attends its last
+        R blocks from the exact fp ring — without this overlay a resumed
+        row would read dequant-precision recents where the uninterrupted
+        run reads exact ones, breaking token identity.  Positions older
+        than the ring keep the dequantized values (both runs read those
+        through the int8 codes, so they agree by construction)."""
+        bs = self.block
+        R = self.fp_tail_blocks
+        residual = self.recycler.compress_residual
+        split = max(0, depth - residual)
+        fb = (depth - 1) // bs
+        lo = max(max(0, fb - R + 1) * bs, split)
+        for seg, sub in entry.items():
+            for name in ("k", "v"):
+                ring = np.asarray(self.pool[seg][name + "_tail"][:, row])
+                tail = sub[name]["tail"]          # (L, 1, depth-split, H, D)
+                for q in range(lo, depth):
+                    off = (q // bs % R) * bs + q % bs
+                    tail[:, 0, q - split] = ring[:, off]
+
+    def _cancel_admission(self, slot: int) -> _Slot:
+        """Roll a pending admission back to a clean, invariant-true
+        state: the row's blocks are dereferenced (chunks already sealed
+        AND registered stay warm through the trie's own references), the
+        mirrors are cleared, and the slot is free again.  Returns the
+        slot record so the caller can requeue or error the request."""
+        adm = self._pending.pop(slot)
+        # unref from the TABLE mirror, not _row_blocks: a chunk's alloc
+        # loop updates the table block-by-block and only syncs
+        # _row_blocks after the loop — cancelling mid-loop must still
+        # free the blocks the partial loop grabbed
+        for x in self._tables[slot]:
+            if x != SENTINEL:
+                self.allocator.unref(int(x))
+        self._row_blocks[slot] = []
+        self._committed[slot] = 0
+        self._tables[slot] = SENTINEL
+        self.pool = self._clear_fn(self.pool, slot)
+        return adm.st
+
+    def _self_preempt(self, row: int) -> None:
+        """Last resort when a row's own decode write cannot be covered
+        even after preempting every eligible victim: demote THIS row
+        (or, for a grafted row — which must never be demoted — error it
+        out) so ``BlockPoolExhausted`` never escapes the step."""
+        st = self._slots[row]
+        if st.mode == "semantic_block":
+            self._events.append(("errored", {
+                "slot": row, "prompt": st.prompt, "tenant": st.tenant,
+                "error": "pool exhausted: grafted row cannot be demoted"}))
+            self.stats["preempt_errors"] += 1
+            self._release_row(row)
+        else:
+            self._preempt_row(row)
+        self._preempted_now.add(row)
+
     def device_kv_bytes_in_use(self) -> int:
         """Bytes of pool K/V actually referenced (live blocks, counted
         once however many tables share them).  In int8 mode a block costs
@@ -1158,7 +1380,9 @@ class PagedEngine(Engine):
                    use_recycling: bool = True, admit: bool = False,
                    stop_at_eos: bool = True, temperature: float = 0.0,
                    top_k: int = 0,
-                   tenant: Optional[str] = None) -> Optional[GenResult]:
+                   tenant: Optional[str] = None,
+                   deadline_t: Optional[float] = None,
+                   resume: Optional[dict] = None) -> Optional[GenResult]:
         """Admit ``prompt`` into pool row ``slot``.
 
         ``prefill_mode="chunked"`` (default): the admission is queued as a
@@ -1179,26 +1403,38 @@ class PagedEngine(Engine):
         scattered back to the pool) as the reference baseline."""
         if self._slots[slot] is not None or slot in self._pending:
             raise ValueError(f"slot {slot} is occupied")
-        max_new = max_new_tokens or self.max_new
         t0 = time.perf_counter()
-        ids = self.tok.encode(prompt)
-        m = len(ids)
+        if resume is not None:
+            # resume of a preempted request: the "prompt" token stream is
+            # the original prompt + every token already emitted, so the
+            # warm admission re-derives the next token from exactly the
+            # state the preemption froze
+            ids = np.asarray(resume["ids"], np.int32)
+            m = len(ids)
+            max_new = int(resume["max_new_left"])
+        else:
+            max_new = max_new_tokens or self.max_new
+            ids = self.tok.encode(prompt)
+            m = len(ids)
         if m + max_new > self.capacity:
             raise ValueError(f"request needs {m + max_new} positions; pool "
                              f"capacity is {self.capacity}")
         if self.prefill_mode in ("chunked", "packed"):
             return self._admit_chunked(slot, prompt, ids, m, max_new,
                                        use_recycling, admit, stop_at_eos,
-                                       temperature, top_k, t0, tenant)
+                                       temperature, top_k, t0, tenant,
+                                       deadline_t=deadline_t, resume=resume)
         return self._admit_staged(slot, prompt, ids, m, max_new,
                                   use_recycling, admit, stop_at_eos,
-                                  temperature, top_k, t0, tenant)
+                                  temperature, top_k, t0, tenant,
+                                  deadline_t=deadline_t, resume=resume)
 
     def _admit_staged(self, slot: int, prompt: str, ids, m: int,
                       max_new: int, use_recycling: bool, admit: bool,
                       stop_at_eos: bool, temperature: float, top_k: int,
-                      t0: float,
-                      tenant: Optional[str] = None) -> Optional[GenResult]:
+                      t0: float, tenant: Optional[str] = None,
+                      deadline_t: Optional[float] = None,
+                      resume: Optional[dict] = None) -> Optional[GenResult]:
         """The PR-2 admission path: L1 block-table reuse when the prefix
         is device-resident, else L2 host promotion, else a cold prefill —
         all through one staged dense prefill whose result is scattered
@@ -1228,15 +1464,32 @@ class PagedEngine(Engine):
         owed = sum(self._committed)
         avail = self.allocator.num_free() + self._evictable(exclude=gather)
         if avail < need_now + need_later + owed:
-            raise ValueError(
+            msg = (
                 f"paged pool exhausted: request needs {need_now + need_later}"
                 f" blocks, {avail - owed} obtainable "
                 f"(free={self.allocator.num_free()}, "
                 f"in-flight reservations={owed})")
+            if self.active_slots() or self._pending:
+                # in-flight rows will free blocks — transient, retry later
+                raise PoolSaturated(msg)
+            raise ValueError(msg)
 
         for b in shared:                      # share the resident prefix
             self.allocator.ref(b)
-        fresh = [self._alloc_block(protect=gather) for _ in range(need_now)]
+        fresh: List[int] = []
+        try:
+            for _ in range(need_now):
+                fresh.append(self._alloc_block(protect=gather))
+        except (BlockPoolExhausted, InjectedFault) as e:
+            # contained rollback: the guarantee above held, so this can
+            # only be an injected/transient fault — undo the partial grab
+            # and report saturation so the scheduler retries
+            for b in fresh:
+                self.allocator.unref(b)
+            for b in shared:
+                self.allocator.unref(b)
+            self.stats["step_rollbacks"] += 1
+            raise PoolSaturated(str(e)) from e
         if chain and depth % bs:
             # divergent boundary block: its private copy is written from
             # staging below instead of mutating the shared original
@@ -1295,7 +1548,7 @@ class PagedEngine(Engine):
         else:
             tok0 = engine_mod.greedy(logits)
 
-        self.stats["requests"] += 1
+        self.stats["requests"] += 0 if resume else 1
         self.stats["hits"] += int(hit)
         self.stats["tokens_reused"] += depth
         self.stats["tokens_prefilled"] += m - depth
@@ -1306,6 +1559,12 @@ class PagedEngine(Engine):
                    emitted=[int(tok0[0])], t0=t0,
                    t_first=time.perf_counter(),
                    temperature=temperature, top_k=top_k, tenant=tenant)
+        st.deadline_t = deadline_t
+        if resume is not None:
+            self._mark_resumed(st, resume)
+            rec = m - depth
+            st.tokens_recomputed += rec
+            self.stats["preempted_tokens_recomputed"] += rec
         if (st.stop_at_eos and st.emitted[0] == EOS) or max_new == 1:
             # finished at its first token: the prompt prefix stays warm in
             # L1, but the row is never occupied
@@ -1333,22 +1592,36 @@ class PagedEngine(Engine):
     def _admit_chunked(self, slot: int, prompt: str, ids, m: int,
                       max_new: int, use_recycling: bool, admit: bool,
                       stop_at_eos: bool, temperature: float, top_k: int,
-                      t0: float, tenant: Optional[str] = None) -> None:
+                      t0: float, tenant: Optional[str] = None,
+                      deadline_t: Optional[float] = None,
+                      resume: Optional[dict] = None) -> None:
         """Queue ``prompt`` as a pending chunked admission on row
         ``slot``.  Only the admission *guarantee* runs here (can the pool
         ever provide this request's blocks without starving in-flight
         reservations? — conservatively assuming zero reuse, since the
         tier lookup is deferred to the first chunk step); all device work
-        happens chunk-by-chunk inside ``decode_batch``."""
+        happens chunk-by-chunk inside ``decode_batch``.
+
+        ``overcommit=True`` weakens the guarantee to the PROMPT's blocks
+        only: the request's decode-time growth is not reserved up front,
+        and when the pool later cannot cover a write the preemption
+        machinery demotes a victim instead — how an undersized pool
+        oversubscribes rather than rejecting.  Saturation that in-flight
+        work will relieve raises ``PoolSaturated`` (scheduler keeps the
+        request queued); ``ValueError`` remains the permanent reject."""
         nb_total = _ceil_div(m + max_new, self.block)
-        owed = sum(self._committed)
+        need = _ceil_div(m, self.block) if self.overcommit else nb_total
+        owed = 0 if self.overcommit else sum(self._committed)
         avail = self.allocator.num_free() + self._evictable()
-        if avail < nb_total + owed:
-            raise ValueError(
-                f"paged pool exhausted: request needs up to {nb_total} "
+        if avail < need + owed:
+            msg = (
+                f"paged pool exhausted: request needs up to {need} "
                 f"blocks, {avail - owed} obtainable "
                 f"(free={self.allocator.num_free()}, "
                 f"in-flight reservations={owed})")
+            if self.active_slots() or self._pending:
+                raise PoolSaturated(msg)
+            raise ValueError(msg)
         self._committed[slot] = nb_total
         self._tables[slot] = SENTINEL
         self._row_blocks[slot] = []
@@ -1356,6 +1629,9 @@ class PagedEngine(Engine):
                    stop_at_eos, 0, False, "baseline", 0.0, emitted=[],
                    t0=t0, temperature=temperature, top_k=top_k,
                    tenant=tenant)
+        st.deadline_t = deadline_t
+        if resume is not None:
+            self._mark_resumed(st, resume)
         self._pending[slot] = _PendingAdmission(st=st)
         return None
 
@@ -1415,8 +1691,19 @@ class PagedEngine(Engine):
                 fresh = self.allocator.alloc_many(nb_up)
             except BlockPoolExhausted:
                 # free list alone can't cover the batch — fall back to
-                # the per-block path, which evicts cold L1 chains
-                fresh = [self._alloc_block() for _ in range(nb_up)]
+                # the per-block path, which evicts cold L1 chains and,
+                # under pressure, preempts a victim; a partial grab is
+                # rolled back before the failure propagates (the caller
+                # then cancels this admission cleanly)
+                fresh = []
+                try:
+                    for _ in range(nb_up):
+                        fresh.append(self._alloc_pressure(
+                            exclude_pending=(slot,)))
+                except (BlockPoolExhausted, InjectedFault):
+                    for b in fresh:
+                        self.allocator.unref(b)
+                    raise
             for j, b in enumerate(fresh):
                 self._tables[slot][j] = b
             self._row_blocks[slot] = list(fresh)
@@ -1499,14 +1786,23 @@ class PagedEngine(Engine):
         else:
             blocks = []
             moved = 0
-            for j in range(lo, hi):
-                b = self._alloc_block()
-                blk = self._host_block(host, j)
-                moved += sum(int(np.asarray(a).nbytes)
-                             for s in blk.values() for a in s.values())
-                self.pool = self._upload_blk_fn(self.pool, blk,
-                                                jnp.int32(b))
-                blocks.append(b)
+            try:
+                for j in range(lo, hi):
+                    b = self._alloc_block()
+                    blk = self._host_block(host, j)
+                    moved += sum(int(np.asarray(a).nbytes)
+                                 for s in blk.values() for a in s.values())
+                    self.pool = self._upload_blk_fn(self.pool, blk,
+                                                    jnp.int32(b))
+                    blocks.append(b)
+            except (BlockPoolExhausted, InjectedFault):
+                # a graft is opportunistic: under pressure, skip it and
+                # recompute contiguously (token-identical to
+                # semantic=False) instead of stealing blocks from
+                # in-flight rows
+                for b in blocks:
+                    self.allocator.unref(b)
+                return
             self.stats["h2d_copies"] += 1
             self.stats["h2d_bytes"] += moved
             self.stats["semantic_host_grafts"] += 1
@@ -1618,7 +1914,7 @@ class PagedEngine(Engine):
         n_valid = min(C, remaining)
         for idx in range(c0 // bs, (c0 + n_valid - 1) // bs + 1):
             if self._tables[slot][idx] == SENTINEL:
-                b = self._alloc_block()
+                b = self._alloc_pressure(exclude_pending=(slot,))
                 self._tables[slot][idx] = b
                 self._committed[slot] -= 1
         # rebuild rather than append: a graft installs interior blocks at
@@ -1681,26 +1977,50 @@ class PagedEngine(Engine):
         bs = self.block
         segs = []
         metas = []
+        self._pending_planned = set()
         for slot in slots:
+            if slot not in self._pending:
+                continue          # cancelled by a neighbor's pressure
             adm = self._pending[slot]
             st = adm.st
-            if not adm.started:
-                self._begin_admission(slot, adm)
-            c0 = adm.next_c0
-            remaining = st.m - c0
-            C = next((s for s in self.chunk_shapes if s >= remaining),
-                     self.prefill_chunk)
-            n_valid = min(C, remaining)
-            for idx in range(c0 // bs, (c0 + n_valid - 1) // bs + 1):
-                if self._tables[slot][idx] == SENTINEL:
-                    b = self._alloc_block()
-                    self._tables[slot][idx] = b
-                    self._committed[slot] -= 1
+            # planned slots' segment descriptors reference their blocks
+            # until the packed dispatch lands — from here on this slot
+            # must not be a preemption victim
+            self._pending_planned.add(slot)
+            try:
+                if not adm.started:
+                    self._begin_admission(slot, adm)
+                c0 = adm.next_c0
+                remaining = st.m - c0
+                C = next((s for s in self.chunk_shapes if s >= remaining),
+                         self.prefill_chunk)
+                n_valid = min(C, remaining)
+                for idx in range(c0 // bs, (c0 + n_valid - 1) // bs + 1):
+                    if self._tables[slot][idx] == SENTINEL:
+                        b = self._alloc_pressure()
+                        self._tables[slot][idx] = b
+                        self._committed[slot] -= 1
+            except (BlockPoolExhausted, InjectedFault):
+                # contained: roll this admission back to a clean state
+                # and requeue it; the other admissions' plans are intact
+                self._pending_planned.discard(slot)
+                if slot in self._pending:
+                    stc = self._cancel_admission(slot)
+                    payload = self._resume_payload(stc, [])
+                    payload["slot"] = slot
+                    self._events.append(("preempted", payload))
+                    self.stats["preemptions"] += 1
+                    self.stats["step_rollbacks"] += 1
+                    self._preempted_now.add(slot)
+                continue
             self._row_blocks[slot] = [int(x) for x in self._tables[slot]
                                       if x != SENTINEL]
             segs.append((slot, self._tables[slot].copy(), c0, adm.w_floor,
                          n_valid, C, st.ids[c0:c0 + n_valid]))
             metas.append((slot, adm, c0, n_valid))
+        if not segs:
+            self._pending_planned = set()
+            return
         pk = pack_admission_segments(
             segs, block_size=bs, buckets=self.packed_buckets,
             max_segments=self.max_batch, table_width=self.nbt)
@@ -1723,6 +2043,7 @@ class PagedEngine(Engine):
             adm.next_c0 = c0 + n_valid
             if adm.next_c0 >= st.m:
                 self._finish_admission(slot, logits[i:i + 1])
+        self._pending_planned = set()
 
     def _finish_admission(self, slot: int, logits) -> None:
         """Final chunk done: sample the first token, install the row's
@@ -1738,8 +2059,12 @@ class PagedEngine(Engine):
         else:
             tok0 = engine_mod.greedy(logits)
         st.emitted = [int(tok0[0])]
-        st.t_first = time.perf_counter()
-        self.stats["requests"] += 1
+        st.t_first = st.t_first or time.perf_counter()
+        self.stats["requests"] += 0 if st.resume_emitted else 1
+        if st.resume_emitted:
+            rec = st.m - st.depth
+            st.tokens_recomputed += rec
+            self.stats["preempted_tokens_recomputed"] += rec
         self.stats["hits"] += int(st.hit)
         self.stats["tokens_reused"] += st.depth
         self.stats["tokens_prefilled"] += st.m - st.depth
@@ -1847,12 +2172,28 @@ class PagedEngine(Engine):
         ``prealloc_watermark`` positions of their block boundary have the
         NEXT block speculatively reserved, so table updates arrive in one
         batched dispatch instead of firing per row per boundary."""
+        if self.fault_plan is not None:
+            self.fault_plan.maybe_fire("replica_step", "injected: step fault")
+        self._preempted_now = set()
         if self.prefill_mode == "packed":
             # ALL pending admissions advance in ONE ragged packed dispatch
             self._admission_step_packed()
         else:
             for slot in sorted(self._pending):
-                self._admission_chunk(slot)
+                if slot not in self._pending:
+                    continue      # cancelled by a neighbor's pressure
+                try:
+                    self._admission_chunk(slot)
+                except (BlockPoolExhausted, InjectedFault):
+                    # contained: roll this admission back and requeue it
+                    if slot in self._pending:
+                        stc = self._cancel_admission(slot)
+                        payload = self._resume_payload(stc, [])
+                        payload["slot"] = slot
+                        self._events.append(("preempted", payload))
+                        self.stats["preemptions"] += 1
+                        self.stats["step_rollbacks"] += 1
+                        self._preempted_now.add(slot)
         done: List[Tuple[int, GenResult]] = []
         for i in self.active_slots():
             st = self._slots[i]
@@ -1866,7 +2207,9 @@ class PagedEngine(Engine):
         active = self.active_slots()
         if not active:
             return done
-        if self.speculative:
+        spec_faultable = (self.fault_plan is not None
+                          and "alloc" in self.fault_plan.sites)
+        if self.speculative and not spec_faultable:
             if self._spec_ready(active):
                 done.extend(self._spec_round(active))
                 return done
@@ -1876,11 +2219,19 @@ class PagedEngine(Engine):
         bs = self.block
         updates: List[Tuple[int, int, int]] = []
         for i in active:
+            if i in self._preempted_now:
+                continue          # victim of an earlier row's pressure
             st = self._slots[i]
             p = st.m + len(st.emitted) - 1   # position this step writes
             idx = p // bs
             if self._tables[i, idx] == SENTINEL:
-                b = self._alloc_block()
+                try:
+                    b = self._alloc_pressure(exclude_rows=(i,))
+                except (BlockPoolExhausted, InjectedFault):
+                    # no victim left but this row itself: it yields its
+                    # slot and comes back through the resume path
+                    self._self_preempt(i)
+                    continue
                 self._tables[i, idx] = b
                 self._row_blocks[i].append(b)
                 self._committed[i] -= 1
@@ -1889,14 +2240,25 @@ class PagedEngine(Engine):
                     and p % bs >= bs - self.prealloc_watermark
                     and (idx + 1) * bs < st.m + st.max_new
                     and self._tables[i, idx + 1] == SENTINEL):
-                b = self._alloc_block()
+                try:
+                    b = self._alloc_block()
+                except (BlockPoolExhausted, InjectedFault):
+                    # the watermark reservation is an optimisation, not a
+                    # requirement — under pressure it just doesn't happen
+                    continue
                 self._tables[i, idx + 1] = b
                 self._row_blocks[i].append(b)
                 self._committed[i] -= 1
                 updates.append((i, idx + 1, b))
                 self.stats["spec_preallocs"] += 1
+        if self._preempted_now:
+            updates = [(r, i, b) for (r, i, b) in updates
+                       if r not in self._preempted_now]
+            active = [i for i in active if i not in self._preempted_now]
         if updates:
             self._apply_table_updates(updates)
+        if not active:
+            return done
 
         t_step = time.perf_counter()
         if np.any(self._temp > 0.0):
@@ -1960,19 +2322,25 @@ class PagedEngine(Engine):
                 host = to_host(stage)
             self.recycler.admit(st.prompt, st.ids, host, st.m, cap,
                                 tenant=st.tenant)
+        # a resumed slot's "prompt" includes the tokens emitted before the
+        # preemption; stitch them back so the result describes the whole
+        # request, not just its last residency
+        gen = st.resume_emitted + st.emitted
         all_ids = np.concatenate([st.ids, np.asarray(st.emitted, np.int32)])
         return GenResult(
-            text=self.tok.decode(st.emitted),
+            text=self.tok.decode(gen),
             token_ids=all_ids,
             latency_s=time.perf_counter() - st.t0,
-            prompt_tokens=st.m,
-            gen_tokens=len(st.emitted),
+            prompt_tokens=st.m - len(st.resume_emitted),
+            gen_tokens=len(gen),
             reuse_depth=st.depth,
             cache_hit=st.hit,
             mode=st.mode if st.use_recycling else "baseline",
             prompt_similarity=st.sim,
             ttft_s=max(st.t_first - st.t0, 0.0),
             step_times_s=list(st.step_times_s),
+            preemptions=st.preemptions,
+            tokens_recomputed=st.tokens_recomputed,
         )
 
     # ------------------------------------------------------------------

@@ -38,7 +38,18 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
+from repro.core.blockpool import PoolSaturated
 from repro.serving.engine import BatchedEngine, Engine, GenResult
+
+
+class RequestOutcome:
+    """Typed terminal states.  Shedding and preemption-era failures are
+    DATA, not exceptions: callers inspect ``req.outcome`` instead of
+    catching anything, and a load test can assert on the exact mix."""
+    OK = "ok"
+    SHED_QUEUE_FULL = "shed_queue_full"   # bounded queue rejected at submit
+    SHED_DEADLINE = "shed_deadline"       # TTL expired before admission
+    ERRORED = "errored"                   # permanent reject / engine error
 
 
 @dataclass
@@ -66,7 +77,21 @@ class Request:
     first_token_t: Optional[float] = None
     result: Optional[GenResult] = None
     error: Optional[str] = None          # set when admission rejects it
+    # SLO deadline: seconds from submit the request stays worth serving.
+    # ``deadline_t`` is the absolute perf_counter stamp; expired requests
+    # are shed from the queue BEFORE claiming any pool blocks, and the
+    # engine's victim policy prefers preempting the latest deadline.
+    deadline_s: Optional[float] = None
+    deadline_t: Optional[float] = field(default=None, repr=False)
+    outcome: Optional[str] = None        # RequestOutcome.* once terminal
     _ids: Optional[object] = field(default=None, repr=False)  # encode memo
+    # preemption resume payload (engine "preempted" event) + requeue count
+    _resume: Optional[dict] = field(default=None, repr=False)
+    _requeues: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.deadline_s is not None and self.deadline_t is None:
+            self.deadline_t = self.enqueue_t + self.deadline_s
 
     @property
     def done(self) -> bool:
@@ -113,6 +138,7 @@ class FIFOScheduler:
                 temperature=req.temperature, top_k=req.top_k,
                 tenant=req.tenant)
             req.first_token_t = req.admit_t + req.result.ttft_s
+            req.outcome = RequestOutcome.OK
             served.append(req)
             self.completed.append(req)
         return served
@@ -129,7 +155,10 @@ class ContinuousBatchingScheduler:
     def __init__(self, engine: BatchedEngine, *,
                  max_admissions_per_step: Optional[int] = None,
                  admission_policy: str = "fifo",
-                 tenant_quotas: Optional[Dict[str, int]] = None):
+                 tenant_quotas: Optional[Dict[str, int]] = None,
+                 queue_limit: Optional[int] = None,
+                 tenant_queue_limits: Optional[Dict[str, int]] = None,
+                 max_requeues: int = 32):
         self.engine = engine
         # at most this many single-row prefills per step before decoding;
         # None = fill every free slot (prefill-heavy but maximal occupancy)
@@ -153,22 +182,73 @@ class ContinuousBatchingScheduler:
         # ``admit=True`` is downgraded so it cannot grow the store
         # further.  Serving is never rejected on quota.
         self.tenant_quotas = tenant_quotas
+        # bounded backpressure: a full queue sheds AT SUBMIT with a typed
+        # outcome instead of growing without bound (None = unbounded, the
+        # pre-existing behavior).  ``tenant_queue_limits`` bounds each
+        # tenant's share so one flooding tenant cannot occupy the whole
+        # global budget.
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError("queue_limit must be >= 1")
+        self.queue_limit = queue_limit
+        self.tenant_queue_limits = tenant_queue_limits or {}
+        if max_requeues < 1:
+            raise ValueError("max_requeues must be >= 1")
+        self.max_requeues = max_requeues
         self._queue: Deque[Request] = deque()
         self._next_id = 0
         self._free: List[int] = engine.free_slots()
+        # feature-detect the preemption surface (PagedEngine); the dense
+        # BatchedEngine has no resume/deadline kwargs and emits no events
+        self._engine_preempts = hasattr(engine, "drain_events")
         self.in_flight: Dict[int, Request] = {}       # slot -> request
         self.completed: List[Request] = []
         self.stats = {"decode_steps": 0, "admissions": 0,
                       "instant_finishes": 0, "slot_reuses": 0,
                       "rejected": 0, "occupancy_sum": 0,
-                      "quota_denied_admits": 0, "cache_aware_picks": 0}
+                      "quota_denied_admits": 0, "cache_aware_picks": 0,
+                      "shed_queue_full": 0, "shed_deadline": 0,
+                      "preemptions": 0, "resumes": 0,
+                      "admissions_deferred": 0}
 
     # ------------------------------------------------------------------
+    def _tenant_queued(self, tenant: Optional[str]) -> int:
+        return sum(1 for r in self._queue if r.tenant == tenant)
+
     def submit(self, prompt: str, **kw) -> Request:
         req = Request(self._next_id, prompt, **kw)
         self._next_id += 1
+        limit = self.tenant_queue_limits.get(req.tenant)
+        if ((self.queue_limit is not None
+                and len(self._queue) >= self.queue_limit)
+                or (limit is not None
+                    and self._tenant_queued(req.tenant) >= limit)):
+            req.outcome = RequestOutcome.SHED_QUEUE_FULL
+            req.error = "shed: queue full"
+            self.completed.append(req)
+            self.stats["shed_queue_full"] += 1
+            return req
         self._queue.append(req)
         return req
+
+    def _shed_expired(self) -> List[Request]:
+        """Drop deadline-expired queued requests BEFORE they claim any
+        pool blocks — serving a request that already missed its SLO only
+        steals capacity from ones that can still make theirs."""
+        now = time.perf_counter()
+        shed: List[Request] = []
+        if any(r.deadline_t is not None for r in self._queue):
+            keep: Deque[Request] = deque()
+            for r in self._queue:
+                if r.deadline_t is not None and now >= r.deadline_t:
+                    r.outcome = RequestOutcome.SHED_DEADLINE
+                    r.error = "shed: deadline expired in queue"
+                    self.completed.append(r)
+                    self.stats["shed_deadline"] += 1
+                    shed.append(r)
+                else:
+                    keep.append(r)
+            self._queue = keep
+        return shed
 
     def pending(self) -> int:
         return len(self._queue)
@@ -180,6 +260,10 @@ class ContinuousBatchingScheduler:
         prefix in the engine's block trie (peek — no recency stamp) and
         falls back to FIFO when the engine has no trie/tokenizer or
         nothing queued is warm (strict > keeps arrival order on ties)."""
+        if self._queue and self._queue[0]._resume is not None:
+            # a preempted request resumes ahead of new arrivals — its
+            # blocks were taken from it, it does not also lose its turn
+            return self._queue.popleft()
         if self.admission_policy == "cache_aware" and len(self._queue) > 1:
             trie = getattr(self.engine, "trie", None)
             tok = getattr(self.engine, "tok", None)
@@ -222,19 +306,33 @@ class ContinuousBatchingScheduler:
         while self._queue and budget > 0:
             slot = self._free.pop()
             req = self._pop_next()
-            req.admit_t = time.perf_counter()
+            req.admit_t = req.admit_t or time.perf_counter()
+            kw = {}
+            if self._engine_preempts:
+                kw["deadline_t"] = req.deadline_t
+                if req._resume is not None:
+                    kw["resume"] = req._resume
             try:
                 res = self.engine.admit_slot(
                     slot, req.prompt, max_new_tokens=req.max_new_tokens,
                     use_recycling=req.use_recycling,
                     admit=self._admit_allowed(req),
                     temperature=req.temperature, top_k=req.top_k,
-                    tenant=req.tenant)
+                    tenant=req.tenant, **kw)
+            except PoolSaturated:
+                # transient: in-flight work will free blocks — put the
+                # request BACK at the head and stop admitting this step
+                # (later queue entries would hit the same wall)
+                self._free.append(slot)
+                self._queue.appendleft(req)
+                self.stats["admissions_deferred"] += 1
+                break
             except ValueError as e:
                 # reject THIS request (e.g. longer than the pool capacity)
                 # without dropping the rest of the queue or the slot
                 self._free.append(slot)
                 req.error = str(e)
+                req.outcome = RequestOutcome.ERRORED
                 self.completed.append(req)
                 self.stats["rejected"] += 1
                 done.append(req)
@@ -242,11 +340,15 @@ class ContinuousBatchingScheduler:
             except Exception:
                 self._free.append(slot)      # don't leak the slot
                 raise
+            if req._resume is not None:
+                req._resume = None
+                self.stats["resumes"] += 1
             self.stats["admissions"] += 1
             budget -= 1    # admission work happened either way (a staged
             #                prefill ran, or chunk steps were queued)
             if res is not None:                       # finished at token 0
                 req.result = res
+                req.outcome = RequestOutcome.OK
                 if res.ttft_s and res.ttft_s > 0.0:
                     req.first_token_t = req.admit_t + res.ttft_s
                 self.completed.append(req)
@@ -257,16 +359,48 @@ class ContinuousBatchingScheduler:
             self.in_flight[slot] = req
         return done
 
+    def _drain_engine_events(self, finished: List[Request]) -> None:
+        """Apply the engine's typed lifecycle events: a "preempted" slot's
+        request requeues AT THE HEAD with its resume payload (bounded by
+        ``max_requeues`` — a request the pool can never hold errors out
+        instead of cycling forever); an "errored" slot's request
+        terminates with a typed outcome.  Slot->request mapping is stable
+        within the step: the engine freed the row, but the scheduler only
+        reuses a slot after processing its event here."""
+        if not self._engine_preempts:
+            return
+        for kind, payload in self.engine.drain_events():
+            slot = payload["slot"]
+            req = self.in_flight.pop(slot, None)
+            if req is None:
+                continue     # already finalized (defensive)
+            self._free.append(slot)
+            if kind == "preempted" and req._requeues < self.max_requeues:
+                req._resume = payload
+                req._requeues += 1
+                self.stats["preemptions"] += 1
+                self._queue.appendleft(req)
+                continue
+            req.outcome = RequestOutcome.ERRORED
+            req.error = (payload.get("error", "preempted: requeue limit")
+                         if kind != "preempted"
+                         else "preempted: requeue limit reached")
+            self.completed.append(req)
+            finished.append(req)
+
     def step(self) -> List[Request]:
-        """Admit into free slots, then advance every in-flight request one
-        token.  Returns the requests that completed this step (including
-        admission-time completions: rejections and instant finishes)."""
-        finished: List[Request] = list(self._admit())
+        """Shed expired requests, admit into free slots, then advance
+        every in-flight request one token.  Returns the requests that
+        completed this step (including admission-time completions:
+        rejections, sheds and instant finishes)."""
+        finished: List[Request] = list(self._shed_expired())
+        finished.extend(self._admit())
         decoded = bool(self.in_flight)
         self.stats["occupancy_sum"] += len(self.in_flight)
         for slot, result in self.engine.decode_batch():
             req = self.in_flight.pop(slot)
             req.result = result
+            req.outcome = RequestOutcome.OK
             # first-token wall time, reconstructed from the engine's TTFT
             # measurement relative to this request's admit stamp (the
             # engine measures TTFT from its own admission start, which is
@@ -279,6 +413,7 @@ class ContinuousBatchingScheduler:
             if self._queue:
                 self.stats["slot_reuses"] += 1
             self._free.append(slot)
+        self._drain_engine_events(finished)
         self.stats["decode_steps"] += int(decoded)
         return finished
 

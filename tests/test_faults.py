@@ -1,0 +1,230 @@
+"""Deterministic fault-injection harness (PR 10): FaultPlan semantics,
+the chaos soak over the paged engine (invariants hold after every
+injected fault; faults never alter the tokens of requests they didn't
+kill), corrupted-entry defenses (serve-time digest drop, ``load_dir``
+bit-flip survival), and ShardedServer replica-failure containment.
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.faults import (FaultPlan, FaultSpec, InjectedFault,
+                               plan_from_spec)
+from repro.core.kvstore import HostKVStore, cache_digest
+from repro.models import init_params
+from repro.serving import Engine, PagedEngine
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     RequestOutcome)
+
+PROMPTS = [
+    "the quick brown fox jumps over the lazy dog today and tomorrow",
+    "what is the capital of france and why is it paris",
+    "zzz qqq completely unrelated 12345 something else entirely here",
+]
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = get_config("dialogpt-medium").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+def test_fault_plan_deterministic():
+    """Same seed + same call sequence -> identical firing pattern."""
+    def pattern(seed):
+        plan = plan_from_spec(seed, alloc=0.3, kvstore_get=0.5)
+        return [(site, plan.should_fire(site))
+                for site in ["alloc", "kvstore_get", "alloc", "alloc",
+                             "kvstore_get"] * 20]
+    assert pattern(42) == pattern(42)
+    assert pattern(42) != pattern(43)     # seed actually matters
+
+
+def test_fault_plan_at_exact_calls():
+    plan = plan_from_spec(0, alloc=(0, 3))
+    fires = [plan.should_fire("alloc") for _ in range(5)]
+    assert fires == [True, False, False, True, False]
+    assert plan.stats()["alloc"] == {"calls": 5, "fired": 2}
+
+
+def test_fault_plan_unlisted_site_never_fires():
+    plan = plan_from_spec(0, alloc=1.0)
+    assert not any(plan.should_fire("kvstore_get") for _ in range(10))
+
+
+def test_fault_plan_maybe_fire_raises():
+    plan = plan_from_spec(0, kvstore_put=(0,))
+    with pytest.raises(InjectedFault):
+        plan.maybe_fire("kvstore_put", "boom")
+    plan.maybe_fire("kvstore_put", "boom")     # second call: no fire
+
+
+def test_injected_fault_is_not_oserror():
+    """Containment code catches (InjectedFault, OSError) explicitly; the
+    fault type must not silently satisfy unrelated OSError handlers."""
+    assert not issubclass(InjectedFault, OSError)
+    assert issubclass(InjectedFault, RuntimeError)
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(at=(-1,))
+    with pytest.raises(ValueError):
+        FaultPlan(seed=0, sites={"bogus_site": FaultSpec(rate=0.5)})
+
+
+# ---------------------------------------------------------------------------
+# chaos soak: all sites armed, engine survives, invariants always hold
+# ---------------------------------------------------------------------------
+def test_chaos_soak_invariants_and_identity(stack):
+    """Every injection site fires; after EVERY step the pool invariants
+    hold, and every request that completes is token-identical to the
+    fault-free run — an injected fault may cost recompute or a
+    preemption round-trip, never a different answer."""
+    cfg, params = stack
+    clean = PagedEngine(cfg, params, max_batch=2, capacity=128,
+                        max_new_tokens=6, block_size=8, enable_partial=True,
+                        overcommit=True, num_blocks=12)
+    csched = ContinuousBatchingScheduler(clean)
+    creqs = [csched.submit(p, admit=True) for p in PROMPTS * 2]
+    csched.run()
+    want = {r.request_id: r.result.text for r in creqs}
+
+    plan = plan_from_spec(7, alloc=0.15, kvstore_get=0.3, kvstore_put=0.3,
+                          kvstore_corrupt=0.3)
+    eng = PagedEngine(cfg, params, max_batch=2, capacity=128,
+                      max_new_tokens=6, block_size=8, enable_partial=True,
+                      overcommit=True, num_blocks=12, fault_plan=plan)
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [sched.submit(p, admit=True) for p in PROMPTS * 2]
+    steps = 0
+    while (sched._queue or sched.in_flight) and steps < 1000:
+        sched.step()
+        eng.check_invariants()       # crash-consistent after EVERY step
+        steps += 1
+    assert steps < 1000, "chaos run did not drain"
+    stats = plan.stats()
+    for site in ("alloc", "kvstore_get", "kvstore_put", "kvstore_corrupt"):
+        assert stats[site]["fired"] > 0, (site, stats)
+    for r in reqs:
+        assert r.outcome == RequestOutcome.OK, (r.outcome, r.error)
+        assert r.result.text == want[r.request_id]
+
+
+def test_host_io_fault_is_a_miss_not_a_crash(stack):
+    """A host-store IO fault during lookup serves the request as a miss
+    (recompute — identical tokens); during admit it skips the store
+    write.  Neither propagates."""
+    cfg, params = stack
+    eng = Engine(cfg, params, max_new_tokens=4, block_size=8)
+    eng.precache(PROMPTS[:1])
+    want = eng.generate(PROMPTS[0] + " more", use_recycling=True)
+
+    eng2 = Engine(cfg, params, max_new_tokens=4, block_size=8)
+    eng2.precache(PROMPTS[:1])
+    eng2.recycler.store.fault_plan = plan_from_spec(1, kvstore_get=(0,))
+    got = eng2.generate(PROMPTS[0] + " more", use_recycling=True)
+    assert got.text == want.text
+    assert eng2.recycler.stats["io_fault_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# corruption defenses
+# ---------------------------------------------------------------------------
+def test_corrupt_entry_dropped_at_serve_time(stack):
+    """A silently corrupted host entry fails its digest check at serve
+    time: dropped from the store, the lookup degrades to a miss, tokens
+    unchanged."""
+    cfg, params = stack
+    eng = Engine(cfg, params, max_new_tokens=4, block_size=8)
+    eng.precache(PROMPTS[:1])
+    want = eng.generate(PROMPTS[0] + " more", use_recycling=True)
+
+    eng2 = Engine(cfg, params, max_new_tokens=4, block_size=8)
+    eng2.precache(PROMPTS[:1])
+    n0 = len(eng2.recycler.store)
+    eng2.recycler.store.fault_plan = plan_from_spec(2, kvstore_corrupt=(0,))
+    got = eng2.generate(PROMPTS[0] + " more", use_recycling=True)
+    assert got.text == want.text
+    assert eng2.recycler.stats["corrupt_entry_drops"] == 1
+    assert len(eng2.recycler.store) == n0 - 1      # evicted, not served
+
+
+def test_load_dir_survives_bitflip(stack):
+    """Regression: a bit-flipped npz (or a stale sidecar digest) skips
+    that entry — counted — instead of poisoning or failing the reload."""
+    cfg, params = stack
+    eng = Engine(cfg, params, max_new_tokens=4, block_size=8)
+    eng.precache(PROMPTS[:2])
+    n = len(eng.recycler.store)
+    assert n >= 2
+    with tempfile.TemporaryDirectory() as d:
+        eng.recycler.store.save_dir(d)
+        npzs = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+        path = os.path.join(d, npzs[0])
+        raw = bytearray(open(path, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(path, "wb").write(raw)
+        st2 = HostKVStore.load_dir(d)
+        assert st2.load_corrupt_skips == 1
+        assert len(st2) == n - 1
+        # surviving entries still digest-clean
+        for e in st2._entries.values():
+            assert cache_digest(e.cache) == e.digest
+
+
+def test_load_dir_survives_missing_npz(stack):
+    cfg, params = stack
+    eng = Engine(cfg, params, max_new_tokens=4, block_size=8)
+    eng.precache(PROMPTS[:2])
+    n = len(eng.recycler.store)
+    with tempfile.TemporaryDirectory() as d:
+        eng.recycler.store.save_dir(d)
+        npzs = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+        os.remove(os.path.join(d, npzs[0]))
+        st2 = HostKVStore.load_dir(d)
+        assert st2.load_corrupt_skips == 1
+        assert len(st2) == n - 1
+
+
+# ---------------------------------------------------------------------------
+# replica failure containment (needs forced host devices, like
+# tests/test_sharded_serving.py — skips cleanly otherwise)
+# ---------------------------------------------------------------------------
+def _sharded_ready():
+    return ("--xla_force_host_platform_device_count"
+            in os.environ.get("XLA_FLAGS", "") and jax.device_count() >= 2)
+
+
+@pytest.mark.skipif(not _sharded_ready(),
+                    reason="needs XLA_FLAGS forced host devices")
+def test_replica_failure_contained(stack):
+    """One replica's step fault kills only ITS in-flight requests (typed
+    ERRORED); its queued requests reroute to a survivor and complete;
+    the other replica never notices."""
+    from repro.launch.serve import ShardedServer
+    cfg, params = stack
+    srv = ShardedServer(cfg, params, replicas=2, tp=1, max_new_tokens=4,
+                        block_size=8, max_batch=1)
+    srv.engines[0].fault_plan = plan_from_spec(0, replica_step=(1,))
+    res = srv.run(PROMPTS + [PROMPTS[0] + " again"],
+                  replica=[0, 0, 1, 1], concurrent=False)
+    # replica 0: first request was in flight when the fault hit (errored,
+    # string); the queued one rerouted to replica 1 (GenResult)
+    errored = [r for r in res if isinstance(r, str)]
+    served = [r for r in res if not isinstance(r, str)]
+    assert len(errored) >= 1 and "replica 0 failed" in errored[0]
+    assert len(served) >= 3
+    assert srv.shared_stats["replica_failures"] == 1
+    assert srv.shared_stats["rerouted_requests"] >= 1
+    srv.check_invariants()

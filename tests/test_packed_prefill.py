@@ -404,10 +404,12 @@ def test_slo_timestamps_and_summary(stack):
     assert s["queue_delay_p95_s"] is not None
     tight = slo_summary([r.result for r in reqs], reqs, ttft_slo_s=0.0)
     assert tight["slo_attainment"] == 0.0
-    # degenerate inputs: None fields, never NaN (json-safe)
+    # degenerate inputs: percentile/rate fields None (never NaN), count
+    # fields zero/empty — everything json-safe
     empty = slo_summary([], [])
     assert empty["slo_samples"] == 0
-    assert all(v is None for k, v in empty.items() if k != "slo_samples")
+    for k, v in empty.items():
+        assert v is None or v == 0 or v == {}, (k, v)
 
 
 def test_tenant_quota_denies_admit_not_serving(stack):

@@ -473,6 +473,10 @@ def test_int8_promotes_legacy_quantized_entries_via_fallback(stack):
         return t
 
     e.cache = legacy(e.cache)
+    # the deliberate format rewrite must re-stamp the integrity digest,
+    # or the serve-time corruption check (correctly) drops the entry
+    from repro.core.kvstore import cache_digest
+    e.digest = cache_digest(e.cache)
     sched = ContinuousBatchingScheduler(eng)
     r = sched.submit(CACHED[0] + " and tomorrow")
     sched.run()
